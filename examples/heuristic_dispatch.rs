@@ -1,0 +1,47 @@
+//! The paper's §8 future-work extension, implemented: heuristic
+//! host-vs-device backend selection by problem size, plus the batching
+//! RNG service that keeps small requests off the device entirely.
+//!
+//! ```bash
+//! cargo run --release --example heuristic_dispatch
+//! ```
+
+use portarng::coordinator::{BackendHeuristic, RngService};
+use portarng::platform::PlatformId;
+
+fn main() -> anyhow::Result<()> {
+    println!("== §8 heuristic backend selection ==\n");
+    for (device, host) in [
+        (PlatformId::A100, PlatformId::Rome7742),
+        (PlatformId::Vega56, PlatformId::XeonGold5220),
+    ] {
+        let h = BackendHeuristic::calibrate(device, host);
+        println!(
+            "{:<10} vs {:<10}: crossover at {:>9} numbers",
+            device.token(),
+            host.token(),
+            h.crossover
+        );
+        for batch in [100usize, 10_000, 1_000_000, 100_000_000] {
+            println!("    batch {:>11} -> {}", batch, h.select(batch).token());
+        }
+    }
+
+    println!("\n== batching service (coalesces small requests) ==\n");
+    let svc = RngService::spawn(PlatformId::A100, 0x5EED, 1 << 16, 8);
+    let receivers: Vec<_> = (0..24).map(|i| svc.generate(500 + i * 16, (0.0, 1.0))).collect();
+    svc.flush();
+    let mut total = 0;
+    for rx in receivers {
+        total += rx.recv()??.len();
+    }
+    let stats = svc.shutdown()?;
+    println!(
+        "{} requests ({} numbers) served by {} kernel launches — {:.1} requests/launch",
+        stats.requests,
+        total,
+        stats.launches,
+        stats.requests as f64 / stats.launches as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Performance-portability report: regenerates Table 2 and prints the
+//! VAVS efficiency per platform/API plus the combined Pennycook P̄.
+//!
+//! ```bash
+//! cargo run --release --example portability_report [--full]
+//! ```
+
+use portarng::repro::{table2, ExperimentId};
+
+fn main() -> anyhow::Result<()> {
+    let quick = !std::env::args().any(|a| a == "--full");
+    if quick {
+        println!("(quick mode: 10 iterations/point; pass --full for the paper's 100)\n");
+    }
+    for t in table2(quick)? {
+        println!("{}", t.to_markdown());
+    }
+    println!("paper's Table 2 for comparison:");
+    println!("| H | P_buffer | P_usm | P_mean |");
+    println!("|---|---|---|---|");
+    println!("| {{Vega 56, A100}} | 1.070 | 0.393 | 0.575 |");
+    println!("| {{Vega 56}} | 0.974 | 1.076 | 1.022 |");
+    println!("| {{A100}} | 1.186 | 0.240 | 0.400 |");
+
+    println!("\nall experiment ids: {:?}", ExperimentId::ALL);
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! The paper's §5.1 RNG-burner as a standalone example: one binary, every
+//! platform/API, with the real-compute PJRT path included.
+//!
+//! ```bash
+//! cargo run --release --example rng_burner [batch]
+//! ```
+
+use std::sync::Arc;
+
+use portarng::burner::{run_burner_auto, run_burner_with_runtime, BurnerApi, BurnerConfig};
+use portarng::platform::PlatformId;
+use portarng::runtime::PjrtRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let batch: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(65_536);
+    println!("RNG burner, Philox4x32x10 uniforms, batch {batch}, 20 iterations\n");
+    println!(
+        "{:<14} {:<12} {:>12} {:>10} {:>10} {:>8}",
+        "platform", "api", "mean ms", "gen ms", "d2h ms", "tpb"
+    );
+
+    for platform in [PlatformId::CoreI7_10875H, PlatformId::Uhd630, PlatformId::Vega56, PlatformId::A100] {
+        for api in [BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+            let mut cfg = BurnerConfig::paper_default(platform, api, batch);
+            cfg.iterations = 20;
+            let r = run_burner_auto(&cfg)?;
+            println!(
+                "{:<14} {:<12} {:>12.4} {:>10.4} {:>10.4} {:>8}",
+                platform.token(),
+                api.token(),
+                r.mean_total_ns() / 1e6,
+                r.breakdown.generate_ns as f64 / 1e6,
+                r.breakdown.d2h_ns as f64 / 1e6,
+                r.breakdown.tpb
+            );
+        }
+    }
+
+    // The real-compute path: the AOT Pallas kernel through PJRT.
+    if let Ok(rt) = PjrtRuntime::discover() {
+        let rt = Arc::new(rt);
+        let mut cfg = BurnerConfig::paper_default(PlatformId::A100, BurnerApi::Pjrt, batch.min(1 << 20));
+        cfg.iterations = 5;
+        let r = run_burner_with_runtime(&cfg, Some(rt))?;
+        println!(
+            "{:<14} {:<12} {:>12.4}   (real Pallas kernel; wall {:.1} ms, sample {:?})",
+            "a100",
+            "pjrt",
+            r.mean_total_ns() / 1e6,
+            r.wall_ns as f64 / 1e6,
+            &r.sample[..3.min(r.sample.len())]
+        );
+    } else {
+        println!("(run `make artifacts` to enable the pjrt real-compute row)");
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the Rust side.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry in ``model.ARTIFACTS`` plus a
+``manifest.json`` describing each artifact's parameter/result signature,
+consumed by ``rust/src/runtime/artifact.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s) -> dict:
+    return {"dtype": s.dtype.name, "shape": list(s.shape)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": "hlo-text-v1", "artifacts": {}}
+    for name, (fn, arg_specs) in model.ARTIFACTS.items():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = [spec_json(s) for s in
+                     jax.tree_util.tree_leaves(lowered.out_info)]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_json(s) for s in arg_specs],
+            "outputs": out_specs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man_path = os.path.join(args.outdir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

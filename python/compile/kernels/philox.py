@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: fused Philox4x32x10 generate + u01 + range transform.
+
+TPU adaptation of the paper's cuRAND/hipRAND generation path (DESIGN.md
+§Hardware-Adaptation): the counter space is tiled over a 1-D grid; each
+program instance owns ``BLOCK`` 128-bit counters in VMEM and produces
+``4*BLOCK`` f32 outputs.  The generate, u32->[0,1) conversion and range
+transformation steps — three separate kernels in the paper (seed, generate,
+transform) — are fused into a single pass so HBM traffic is exactly
+4 B/number written and ~0 read (counters are synthesized in-register).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Counters per program instance. 1024 lanes x 4 words x 4 B = 16 KiB of
+# counter state + 16 KiB of output per block: far under the ~16 MiB VMEM
+# budget, wide enough to keep the VPU's 8x128 lanes full.
+BLOCK = 1024
+
+
+def _philox_block(j, key0, key1, off_lo, off_hi):
+    """Philox outputs for counter indices ``j`` (u32 vector) as (N,4) u32."""
+    lo = off_lo + j
+    carry = (lo < off_lo).astype(jnp.uint32)
+    hi = off_hi + carry
+    zero = jnp.zeros_like(lo)
+    r0, r1, r2, r3 = ref.philox4x32_10(lo, hi, zero, zero, key0, key1)
+    return jnp.stack([r0, r1, r2, r3], axis=-1)
+
+
+def _uniform_kernel(key_ref, off_ref, ab_ref, out_ref):
+    """grid=(n/(4*BLOCK),): out[i*4B:(i+1)*4B] = a + u01(philox(ctr)) * (b-a)."""
+    i = pl.program_id(0)
+    j = (jnp.uint32(i) * jnp.uint32(BLOCK)
+         + jnp.arange(BLOCK, dtype=jnp.uint32))
+    x = _philox_block(j, key_ref[0], key_ref[1], off_ref[0], off_ref[1])
+    u = (x >> ref.U01_SHIFT).astype(jnp.float32) * ref.U01_SCALE
+    a, b = ab_ref[0], ab_ref[1]
+    out_ref[...] = (a + u * (b - a)).reshape(-1)
+
+
+def _gaussian_kernel(key_ref, off_ref, ms_ref, out_ref):
+    """Fused Philox + Box-Muller: out ~ N(mean, stddev)."""
+    i = pl.program_id(0)
+    j = (jnp.uint32(i) * jnp.uint32(BLOCK)
+         + jnp.arange(BLOCK, dtype=jnp.uint32))
+    x = _philox_block(j, key_ref[0], key_ref[1], off_ref[0], off_ref[1])
+    u = ((x >> ref.U01_SHIFT).astype(jnp.float32) * ref.U01_SCALE).reshape(-1)
+    z = ref.box_muller(u)
+    out_ref[...] = ms_ref[0] + ms_ref[1] * z
+
+
+def _scalar_spec():
+    # Whole (tiny) scalar-argument arrays visible to every program instance.
+    return pl.BlockSpec((2,), lambda i: (0,))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def philox_uniform(n: int, key, off, ab):
+    """``n`` uniforms in [ab[0], ab[1]) — Pallas path.
+
+    Args:
+      n: static output count, multiple of ``4*BLOCK``.
+      key: u32[2] generator seed words.
+      off: u32[2] counter offset (lo, hi) — skip-ahead support.
+      ab: f32[2] output range.
+    """
+    assert n % (4 * BLOCK) == 0, f"n must be a multiple of {4 * BLOCK}"
+    grid = n // (4 * BLOCK)
+    return pl.pallas_call(
+        _uniform_kernel,
+        grid=(grid,),
+        in_specs=[_scalar_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=pl.BlockSpec((4 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(key.astype(jnp.uint32), off.astype(jnp.uint32), ab.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def philox_gaussian(n: int, key, off, mean_std):
+    """``n`` N(mean, stddev) samples — fused Pallas Philox+Box-Muller path."""
+    assert n % (4 * BLOCK) == 0, f"n must be a multiple of {4 * BLOCK}"
+    grid = n // (4 * BLOCK)
+    return pl.pallas_call(
+        _gaussian_kernel,
+        grid=(grid,),
+        in_specs=[_scalar_spec(), _scalar_spec(), _scalar_spec()],
+        out_specs=pl.BlockSpec((4 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(key.astype(jnp.uint32), off.astype(jnp.uint32),
+      mean_std.astype(jnp.float32))

@@ -1,0 +1,41 @@
+"""Layer-1 Pallas kernel: standalone range-transformation.
+
+This mirrors the paper's Listing 1.2 — the range-transform kernel the authors
+had to write in SYCL because cuRAND/hipRAND have no concept of an output
+range.  The *fused* path in ``philox.py`` is what production uses; this
+standalone kernel exists (a) for parity with the paper's two-kernel
+structure, so the Fig. 4 per-kernel breakdown has a real artifact behind
+each bar, and (b) to post-process sequences produced by other engines.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _transform_kernel(ab_ref, u_ref, out_ref):
+    a, b = ab_ref[0], ab_ref[1]
+    out_ref[...] = a + u_ref[...] * (b - a)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def range_transform(n: int, ab, u):
+    """out[i] = ab[0] + u[i] * (ab[1] - ab[0]); n a multiple of BLOCK."""
+    assert n % BLOCK == 0, f"n must be a multiple of {BLOCK}"
+    return pl.pallas_call(
+        _transform_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(ab.astype(jnp.float32), u.astype(jnp.float32))

@@ -1,0 +1,177 @@
+"""Pure-jnp correctness oracle for the Philox4x32x10 RNG stack.
+
+This module is the single source of truth for the numerics contract shared by
+all three layers (see DESIGN.md §4):
+
+* Philox4x32x10, Random123/cuRAND convention: 10 rounds, multipliers
+  ``M = (0xD2511F53, 0xCD9E8D57)``, Weyl constants
+  ``W = (0x9E3779B9, 0xBB67AE85)``, key bumped *between* rounds.
+* u32 -> f32 uniform in ``[0, 1)`` via ``(x >> 8) * 2**-24``.
+* Range transform ``a + u * (b - a)`` (the paper's extra kernel; cuRAND and
+  hipRAND have no range concept).
+* Box-Muller for gaussians, consuming uniform pairs.
+
+Everything is written with 32-bit integer arithmetic only (16-bit limb
+decomposition for the 32x32->64 multiply) so the identical expression graph
+is valid inside the Pallas kernels, which cannot rely on 64-bit lanes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Philox4x32x10 constants (Random123 / cuRAND convention).
+PHILOX_M0 = np.uint32(0xD2511F53)
+PHILOX_M1 = np.uint32(0xCD9E8D57)
+PHILOX_W0 = np.uint32(0x9E3779B9)
+PHILOX_W1 = np.uint32(0xBB67AE85)
+PHILOX_ROUNDS = 10
+
+# [0,1) conversion: keep the top 24 bits -> exactly representable in f32.
+U01_SHIFT = 8
+U01_SCALE = np.float32(1.0 / (1 << 24))
+
+
+def mulhilo32(a, b):
+    """32x32 -> (hi, lo) 32-bit product using 16-bit limbs.
+
+    ``a`` is a (numpy) uint32 scalar constant, ``b`` a uint32 array. The limb
+    form is used so the same expression lowers inside Pallas kernels where
+    64-bit integer lanes are unavailable on TPU.
+    """
+    a = jnp.uint32(a)
+    b = b.astype(jnp.uint32)
+    mask = jnp.uint32(0xFFFF)
+    a_lo, a_hi = a & mask, a >> 16
+    b_lo, b_hi = b & mask, b >> 16
+    ll = a_lo * b_lo
+    lh = a_lo * b_hi
+    hl = a_hi * b_lo
+    hh = a_hi * b_hi
+    mid = (ll >> 16) + (lh & mask) + (hl & mask)
+    lo = (ll & mask) | ((mid & mask) << 16)
+    hi = hh + (lh >> 16) + (hl >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def philox_round(c0, c1, c2, c3, k0, k1):
+    """One Philox4x32 S-box round."""
+    hi0, lo0 = mulhilo32(PHILOX_M0, c0)
+    hi1, lo1 = mulhilo32(PHILOX_M1, c2)
+    return (hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0)
+
+
+def philox4x32_10(c0, c1, c2, c3, k0, k1):
+    """Full 10-round Philox4x32 keyed permutation over u32 arrays."""
+    c0, c1, c2, c3 = (x.astype(jnp.uint32) for x in (c0, c1, c2, c3))
+    k0 = jnp.uint32(k0) + jnp.zeros_like(c0)
+    k1 = jnp.uint32(k1) + jnp.zeros_like(c0)
+    for r in range(PHILOX_ROUNDS):
+        if r > 0:
+            k0 = k0 + jnp.uint32(PHILOX_W0)
+            k1 = k1 + jnp.uint32(PHILOX_W1)
+        c0, c1, c2, c3 = philox_round(c0, c1, c2, c3, k0, k1)
+    return c0, c1, c2, c3
+
+
+def counters_from_offset(n_blocks, off_lo, off_hi):
+    """Counter tuple for ``n_blocks`` consecutive 128-bit counters.
+
+    Canonical layout (DESIGN.md §4): block ``j`` uses the counter
+    ``(lo(off + j), hi(off + j), 0, 0)`` where ``off`` is a u64 split into
+    two u32 words. Uses only 32-bit ops (manual carry).
+    """
+    j = jnp.arange(n_blocks, dtype=jnp.uint32)
+    lo = jnp.uint32(off_lo) + j
+    carry = (lo < jnp.uint32(off_lo)).astype(jnp.uint32)
+    hi = jnp.uint32(off_hi) + carry
+    zero = jnp.zeros_like(lo)
+    return lo, hi, zero, zero
+
+
+def philox_u32(n, key0, key1, off_lo=0, off_hi=0):
+    """``n`` raw u32 outputs (n must be a multiple of 4)."""
+    assert n % 4 == 0, "philox produces 4 u32 per counter block"
+    c0, c1, c2, c3 = counters_from_offset(n // 4, off_lo, off_hi)
+    r0, r1, r2, r3 = philox4x32_10(c0, c1, c2, c3, key0, key1)
+    return jnp.stack([r0, r1, r2, r3], axis=1).reshape(-1)
+
+
+def u32_to_uniform(x):
+    """u32 -> f32 in [0, 1): keep top 24 bits."""
+    return (x >> U01_SHIFT).astype(jnp.float32) * U01_SCALE
+
+
+def range_transform(u, a, b):
+    """The paper's range-transformation kernel: [0,1) -> [a,b)."""
+    a = jnp.float32(a)
+    b = jnp.float32(b)
+    return a + u * (b - a)
+
+
+def philox_uniform(n, key0, key1, a=0.0, b=1.0, off_lo=0, off_hi=0):
+    """``n`` uniform f32 in [a, b) (n multiple of 4)."""
+    return range_transform(u32_to_uniform(philox_u32(n, key0, key1, off_lo, off_hi)), a, b)
+
+
+def box_muller(u):
+    """Box-Muller transform over an even-length uniform array.
+
+    ``u[0::2]`` is shifted into (0,1] (log argument must be nonzero), matching
+    the cuRAND convention of strictly-positive uniforms for normals.
+    """
+    u = u.reshape(-1, 2)
+    u1 = 1.0 - u[:, 0]  # (0, 1]
+    u2 = u[:, 1]
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = jnp.float32(2.0 * np.pi) * u2
+    z0 = r * jnp.cos(theta)
+    z1 = r * jnp.sin(theta)
+    return jnp.stack([z0, z1], axis=1).reshape(-1)
+
+
+def philox_gaussian(n, key0, key1, mean=0.0, stddev=1.0, off_lo=0, off_hi=0):
+    """``n`` N(mean, stddev) f32 samples (n multiple of 4)."""
+    u = u32_to_uniform(philox_u32(n, key0, key1, off_lo, off_hi))
+    return jnp.float32(mean) + jnp.float32(stddev) * box_muller(u)
+
+
+# ---------------------------------------------------------------------------
+# FastCaloSim hit-deposit oracle (single-layer grid; the full multi-layer
+# logic lives in the Rust substrate — see DESIGN.md S8).
+# ---------------------------------------------------------------------------
+
+CALO_NETA = 475
+CALO_NPHI = 400
+CALO_NCELLS = CALO_NETA * CALO_NPHI
+CALO_ETA_MIN = np.float32(-2.375)
+CALO_ETA_MAX = np.float32(2.375)
+CALO_PHI_MIN = np.float32(-np.pi)
+CALO_PHI_MAX = np.float32(np.pi)
+
+
+def calosim_deposits(n_hits, key0, key1, center_eta, center_phi, e_scale,
+                     sigma_eta=0.05, sigma_phi=0.05, off_lo=0, off_hi=0):
+    """Energy deposits from ``n_hits`` shower hits into the 190k-cell grid.
+
+    Per hit, three uniforms (the paper's "three uniformly-distributed
+    pseudorandom numbers ... for each hit"):
+      * u_e -> hit energy  ``e_scale * (-ln(1-u_e))`` (exponential),
+      * u_eta, u_phi -> lateral position offsets via a triangular-ish kernel
+        ``sigma * (2u - 1)`` around the shower centre.
+    Returns (deposits[NCELLS], total_energy).
+    """
+    n_u = 4 * ((3 * n_hits + 3) // 4)
+    u = philox_uniform(n_u, key0, key1, 0.0, 1.0, off_lo, off_hi)[: 3 * n_hits]
+    u = u.reshape(n_hits, 3)
+    e = jnp.float32(e_scale) * (-jnp.log1p(-u[:, 0]))
+    eta = jnp.float32(center_eta) + jnp.float32(sigma_eta) * (2.0 * u[:, 1] - 1.0)
+    phi = jnp.float32(center_phi) + jnp.float32(sigma_phi) * (2.0 * u[:, 2] - 1.0)
+    deta = (CALO_ETA_MAX - CALO_ETA_MIN) / CALO_NETA
+    dphi = (CALO_PHI_MAX - CALO_PHI_MIN) / CALO_NPHI
+    ieta = jnp.clip(jnp.floor((eta - CALO_ETA_MIN) / deta), 0, CALO_NETA - 1)
+    iphi = jnp.clip(jnp.floor((phi - CALO_PHI_MIN) / dphi), 0, CALO_NPHI - 1)
+    idx = (ieta * CALO_NPHI + iphi).astype(jnp.int32)
+    deposits = jnp.zeros((CALO_NCELLS,), jnp.float32).at[idx].add(e)
+    return deposits, jnp.sum(e)

@@ -1,0 +1,102 @@
+"""Layer-2 JAX compute graphs, AOT-lowered once and executed from Rust.
+
+Two families (DESIGN.md §3):
+
+* **burner** — the paper's RNG-burner benchmark body: generate ``n``
+  Philox4x32x10 FP32 numbers and range-transform them. The production
+  variant is the single fused Pallas kernel; the ``two_kernel`` variant
+  keeps generation and transform as separate kernels, mirroring the paper's
+  cuRAND-call + SYCL-transform structure (used by the Fig. 4 breakdown and
+  the fusion ablation).
+* **calosim** — the FastCaloSim hit-deposit graph: 3 uniforms/hit -> hit
+  energy + lateral position -> scatter-add into the 190k-cell grid.
+
+All public entry points take only JAX arrays (no Python scalars) so the
+lowered HLO has a stable parameter signature for the Rust runtime:
+``key: u32[2], off: u32[2]`` plus per-graph f32 parameter vectors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import philox, range_transform as rt_kernel, ref
+
+
+def burner_uniform(n: int):
+    """Fused burner: (key, off, ab) -> f32[n] uniforms in [ab0, ab1)."""
+
+    def fn(key, off, ab):
+        return (philox.philox_uniform(n, key, off, ab),)
+
+    return fn
+
+
+def burner_uniform_two_kernel(n: int):
+    """Paper-structured burner: generate-[0,1) kernel then transform kernel."""
+
+    def fn(key, off, ab):
+        u01 = jnp.array([0.0, 1.0], jnp.float32)
+        u = philox.philox_uniform(n, key, off, u01)
+        return (rt_kernel.range_transform(n, ab, u),)
+
+    return fn
+
+
+def burner_gaussian(n: int):
+    """Fused gaussian burner: (key, off, ms) -> f32[n] ~ N(ms0, ms1)."""
+
+    def fn(key, off, ms):
+        return (philox.philox_gaussian(n, key, off, ms),)
+
+    return fn
+
+
+def calosim_hits(n_hits: int):
+    """FastCaloSim hit deposits: (key, off, params) -> (deposits, total).
+
+    ``params = [center_eta, center_phi, e_scale, sigma_eta, sigma_phi]``.
+    Uniform consumption is 3 per hit, padded to the Pallas block multiple;
+    the deposit math (exponential energies, lateral spread, cell binning,
+    scatter-add over the 190k-cell grid) runs as plain XLA HLO fused around
+    the kernel.
+    """
+    n_u = 3 * n_hits
+    assert n_u % (4 * philox.BLOCK) == 0, (
+        f"3*n_hits must be a multiple of {4 * philox.BLOCK}")
+
+    def fn(key, off, params):
+        u01 = jnp.array([0.0, 1.0], jnp.float32)
+        u = philox.philox_uniform(n_u, key, off, u01).reshape(n_hits, 3)
+        e = params[2] * (-jnp.log1p(-u[:, 0]))
+        eta = params[0] + params[3] * (2.0 * u[:, 1] - 1.0)
+        phi = params[1] + params[4] * (2.0 * u[:, 2] - 1.0)
+        deta = (ref.CALO_ETA_MAX - ref.CALO_ETA_MIN) / ref.CALO_NETA
+        dphi = (ref.CALO_PHI_MAX - ref.CALO_PHI_MIN) / ref.CALO_NPHI
+        ieta = jnp.clip(jnp.floor((eta - ref.CALO_ETA_MIN) / deta),
+                        0, ref.CALO_NETA - 1)
+        iphi = jnp.clip(jnp.floor((phi - ref.CALO_PHI_MIN) / dphi),
+                        0, ref.CALO_NPHI - 1)
+        idx = (ieta * ref.CALO_NPHI + iphi).astype(jnp.int32)
+        deposits = jnp.zeros((ref.CALO_NCELLS,), jnp.float32).at[idx].add(e)
+        return (deposits, jnp.sum(e))
+
+    return fn
+
+
+# Artifact registry: name -> (builder, n, example-arg shapes).
+# Rust's runtime::ArtifactRegistry mirrors this table via manifest.json.
+U32_2 = jax.ShapeDtypeStruct((2,), jnp.uint32)
+F32_2 = jax.ShapeDtypeStruct((2,), jnp.float32)
+F32_5 = jax.ShapeDtypeStruct((5,), jnp.float32)
+
+ARTIFACTS = {
+    "burner_uniform_4096": (burner_uniform(4096), (U32_2, U32_2, F32_2)),
+    "burner_uniform_65536": (burner_uniform(65536), (U32_2, U32_2, F32_2)),
+    "burner_uniform_1048576": (burner_uniform(1048576), (U32_2, U32_2, F32_2)),
+    "burner_uniform_2k_65536": (
+        burner_uniform_two_kernel(65536), (U32_2, U32_2, F32_2)),
+    "burner_gaussian_65536": (burner_gaussian(65536), (U32_2, U32_2, F32_2)),
+    "calosim_hits_16384": (calosim_hits(16384), (U32_2, U32_2, F32_5)),
+}

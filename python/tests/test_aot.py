@@ -1,0 +1,46 @@
+"""AOT pipeline: HLO-text emission, manifest consistency, determinism."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_entry():
+    fn, specs = model.ARTIFACTS["burner_uniform_4096"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root is a tuple (Rust unwraps with to_tuple).
+    assert "f32[4096]" in text
+
+
+def test_lowering_deterministic():
+    fn, specs = model.ARTIFACTS["burner_uniform_4096"]
+    a = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    b = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert a == b
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_registry():
+    with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text-v1"
+    assert set(manifest["artifacts"]) == set(model.ARTIFACTS)
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(ARTIFACT_DIR, entry["file"])
+        assert os.path.exists(path), path
+        _, specs = model.ARTIFACTS[name]
+        assert len(entry["inputs"]) == len(specs)
+        for got, want in zip(entry["inputs"], specs):
+            assert got["dtype"] == want.dtype.name
+            assert tuple(got["shape"]) == want.shape
+        assert len(entry["outputs"]) >= 1

@@ -1,0 +1,202 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer (DESIGN.md §4):
+* Philox4x32x10 known-answer tests against the Random123 vectors,
+* bit-exactness of the Pallas kernel against the oracle at the u01 level,
+* <=1-ulp agreement on range-transformed output (XLA may contract the
+  ``a + u*(b-a)`` into an FMA under jit; the eager oracle does not),
+* hypothesis sweeps over seeds, offsets, ranges and sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import philox, range_transform as rt, ref
+
+U32 = st.integers(min_value=0, max_value=0xFFFFFFFF)
+
+
+def arr_u32(*xs):
+    return jnp.array(xs, jnp.uint32)
+
+
+def arr_f32(*xs):
+    return jnp.array(xs, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Known-answer tests (Random123 kat_vectors, philox4x32x10).
+# ---------------------------------------------------------------------------
+
+KAT = [
+    ((0, 0, 0, 0), (0, 0), (0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8)),
+    (
+        (0xFFFFFFFF,) * 4,
+        (0xFFFFFFFF,) * 2,
+        (0x408F276D, 0x41C83B0E, 0xA20BC7C6, 0x6D5451FD),
+    ),
+    (
+        (0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344),
+        (0xA4093822, 0x299F31D0),
+        (0xD16CFE09, 0x94FDCCEB, 0x5001E420, 0x24126EA1),
+    ),
+]
+
+
+@pytest.mark.parametrize("ctr,key,want", KAT)
+def test_philox_kat(ctr, key, want):
+    got = ref.philox4x32_10(
+        *(jnp.array([c], jnp.uint32) for c in ctr), key[0], key[1]
+    )
+    assert tuple(int(g[0]) for g in got) == want
+
+
+def test_philox_counter_layout():
+    """philox_u32 consumes counters (off+j, carry, 0, 0) in block order."""
+    out = ref.philox_u32(8, 7, 9, off_lo=5, off_hi=0)
+    b0 = ref.philox4x32_10(*(jnp.array([v], jnp.uint32) for v in (5, 0, 0, 0)), 7, 9)
+    b1 = ref.philox4x32_10(*(jnp.array([v], jnp.uint32) for v in (6, 0, 0, 0)), 7, 9)
+    want = [int(x[0]) for x in b0] + [int(x[0]) for x in b1]
+    assert [int(x) for x in out] == want
+
+
+def test_philox_offset_carry():
+    """Counter low-word overflow carries into the high word."""
+    out_a = ref.philox_u32(8, 1, 2, off_lo=0xFFFFFFFF, off_hi=3)
+    # Second block is counter (0, 4): offset wrapped, carry applied.
+    b1 = ref.philox4x32_10(*(jnp.array([v], jnp.uint32) for v in (0, 4, 0, 0)), 1, 2)
+    assert [int(x) for x in out_a[4:]] == [int(x[0]) for x in b1]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_u01_bit_exact():
+    n = 3 * 4096
+    got = philox.philox_uniform(
+        n, arr_u32(1234, 5678), arr_u32(0, 0), arr_f32(0.0, 1.0)
+    )
+    want = ref.u32_to_uniform(ref.philox_u32(n, 1234, 5678))
+    assert bool(jnp.all(got == want))
+    assert float(got.min()) >= 0.0 and float(got.max()) < 1.0
+
+
+def test_pallas_range_one_ulp():
+    n = 4096
+    got = np.asarray(
+        philox.philox_uniform(n, arr_u32(9, 9), arr_u32(0, 0), arr_f32(-2.0, 3.0))
+    )
+    want = np.asarray(ref.philox_uniform(n, 9, 9, -2.0, 3.0))
+    # FMA contraction error is bounded by one ulp at the magnitude of the
+    # result range endpoints, not of each (possibly near-zero) element.
+    tol = np.spacing(np.float32(3.0))
+    assert np.all(np.abs(got - want) <= tol)
+
+
+def test_pallas_matches_jitted_oracle_bit_exact():
+    n = 4096
+    got = philox.philox_uniform(
+        n, arr_u32(9, 9), arr_u32(0, 0), arr_f32(-2.0, 3.0)
+    )
+    want = jax.jit(lambda: ref.philox_uniform(n, 9, 9, -2.0, 3.0))()
+    assert bool(jnp.all(got == want))
+
+
+def test_pallas_gaussian_close():
+    n = 65536
+    got = philox.philox_gaussian(
+        n, arr_u32(42, 0), arr_u32(0, 0), arr_f32(1.5, 0.5)
+    )
+    want = ref.philox_gaussian(n, 42, 0, 1.5, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    assert abs(float(got.mean()) - 1.5) < 0.02
+    assert abs(float(got.std()) - 0.5) < 0.02
+
+
+def test_standalone_transform_kernel():
+    n = 4096
+    u = ref.u32_to_uniform(ref.philox_u32(n, 3, 4))
+    got = rt.range_transform(n, arr_f32(10.0, 20.0), u)
+    want = jax.jit(lambda u: ref.range_transform(u, 10.0, 20.0))(u)
+    assert bool(jnp.all(got == want))
+
+
+def test_block_size_invariance():
+    """Output must not depend on the BLOCK tiling, only on the counter space."""
+    n = 2 * 4096
+    a = philox.philox_uniform(n, arr_u32(1, 2), arr_u32(0, 0), arr_f32(0.0, 1.0))
+    # Same sequence reconstructed from two offset halves.
+    h0 = philox.philox_uniform(
+        n // 2, arr_u32(1, 2), arr_u32(0, 0), arr_f32(0.0, 1.0)
+    )
+    h1 = philox.philox_uniform(
+        n // 2, arr_u32(1, 2), arr_u32(n // 8, 0), arr_f32(0.0, 1.0)
+    )
+    assert bool(jnp.all(a == jnp.concatenate([h0, h1])))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(key0=U32, key1=U32, off_lo=U32, off_hi=U32)
+def test_hyp_pallas_u01_any_seed_offset(key0, key1, off_lo, off_hi):
+    n = 4096
+    got = philox.philox_uniform(
+        n, arr_u32(key0, key1), arr_u32(off_lo, off_hi), arr_f32(0.0, 1.0)
+    )
+    want = ref.u32_to_uniform(ref.philox_u32(n, key0, key1, off_lo, off_hi))
+    assert bool(jnp.all(got == want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.floats(-1e6, 1e6).map(np.float32),
+    w=st.floats(0.001, 1e6).map(np.float32),
+    key0=U32,
+)
+def test_hyp_range_bounds(a, w, key0):
+    n = 4096
+    b = np.float32(a) + np.float32(w)
+    got = philox.philox_uniform(
+        n, arr_u32(key0, 1), arr_u32(0, 0), arr_f32(a, b)
+    )
+    tol = max(1e-2, 4.0 * float(np.spacing(max(abs(np.float32(a)), abs(b)))))
+    assert float(got.min()) >= min(a, float(b)) - tol
+    assert float(got.max()) <= max(a, float(b)) + tol
+
+
+@settings(max_examples=10, deadline=None)
+@given(key0=U32, key1=U32)
+def test_hyp_uniformity_moments(key0, key1):
+    n = 65536
+    u = np.asarray(ref.philox_uniform(n, key0, key1))
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(u.var() - 1.0 / 12.0) < 0.005
+
+
+@settings(max_examples=10, deadline=None)
+@given(key0=U32)
+def test_hyp_disjoint_offsets_disjoint_streams(key0):
+    """Non-overlapping counter windows give different sequences."""
+    n = 4096
+    a = ref.philox_u32(n, key0, 0, off_lo=0)
+    b = ref.philox_u32(n, key0, 0, off_lo=n // 4)
+    assert not bool(jnp.all(a == b))
+
+
+def test_mulhilo_limbs_vs_64bit():
+    rng = np.random.default_rng(0)
+    b = jnp.array(rng.integers(0, 2**32, size=1024, dtype=np.uint32))
+    for a in (ref.PHILOX_M0, ref.PHILOX_M1, np.uint32(0xFFFFFFFF), np.uint32(1)):
+        hi, lo = ref.mulhilo32(a, b)
+        full = np.uint64(a) * np.asarray(b, np.uint64)
+        np.testing.assert_array_equal(np.asarray(hi), (full >> 32).astype(np.uint32))
+        np.testing.assert_array_equal(np.asarray(lo), (full & 0xFFFFFFFF).astype(np.uint32))

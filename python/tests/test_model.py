@@ -1,0 +1,95 @@
+"""Layer-2 correctness: model graphs (burner, calosim) shapes and physics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def u32(*xs):
+    return jnp.array(xs, jnp.uint32)
+
+
+def f32(*xs):
+    return jnp.array(xs, jnp.float32)
+
+
+def test_burner_fused_vs_two_kernel():
+    n = 65536
+    fused = model.burner_uniform(n)(u32(7, 8), u32(0, 0), f32(-1.0, 1.0))[0]
+    twok = model.burner_uniform_two_kernel(n)(u32(7, 8), u32(0, 0), f32(-1.0, 1.0))[0]
+    got, want = np.asarray(fused), np.asarray(twok)
+    ulp = np.spacing(np.abs(want).astype(np.float32))
+    assert np.all(np.abs(got - want) <= ulp)
+
+
+def test_burner_matches_oracle():
+    n = 4096
+    out = model.burner_uniform(n)(u32(1, 2), u32(5, 0), f32(0.0, 1.0))[0]
+    want = ref.u32_to_uniform(ref.philox_u32(n, 1, 2, off_lo=5))
+    assert bool(jnp.all(out == want))
+
+
+def test_gaussian_burner_moments():
+    n = 65536
+    out = model.burner_gaussian(n)(u32(3, 1), u32(0, 0), f32(2.0, 3.0))[0]
+    assert abs(float(out.mean()) - 2.0) < 0.05
+    assert abs(float(out.std()) - 3.0) < 0.05
+
+
+def test_calosim_energy_conservation():
+    n_hits = 16384
+    dep, tot = model.calosim_hits(n_hits)(
+        u32(11, 13), u32(0, 0), f32(0.5, 1.0, 0.004, 0.05, 0.05)
+    )
+    assert dep.shape == (ref.CALO_NCELLS,)
+    # Everything lands in-grid (clipped), so deposits sum to total energy.
+    np.testing.assert_allclose(float(dep.sum()), float(tot), rtol=1e-3)
+    # ~65 GeV electron: e_scale = 65/16384 GeV/hit -> total ~ 65.
+    dep2, tot2 = model.calosim_hits(n_hits)(
+        u32(11, 13), u32(0, 0), f32(0.5, 1.0, 65.0 / n_hits, 0.05, 0.05)
+    )
+    assert 55.0 < float(tot2) < 75.0
+
+
+def test_calosim_locality():
+    """Deposits concentrate around the shower centre."""
+    n_hits = 16384
+    dep, _ = model.calosim_hits(n_hits)(
+        u32(1, 1), u32(0, 0), f32(0.5, 1.0, 1.0, 0.05, 0.05)
+    )
+    dep = np.asarray(dep).reshape(ref.CALO_NETA, ref.CALO_NPHI)
+    ieta = int((0.5 - ref.CALO_ETA_MIN) / ((ref.CALO_ETA_MAX - ref.CALO_ETA_MIN) / ref.CALO_NETA))
+    iphi = int((1.0 - ref.CALO_PHI_MIN) / ((ref.CALO_PHI_MAX - ref.CALO_PHI_MIN) / ref.CALO_NPHI))
+    win = dep[ieta - 10 : ieta + 11, iphi - 10 : iphi + 11]
+    assert win.sum() > 0.95 * dep.sum()
+
+
+def test_calosim_matches_ref_oracle():
+    n_hits = 16384
+    dep, tot = model.calosim_hits(n_hits)(
+        u32(11, 13), u32(0, 0), f32(0.5, 1.0, 0.004, 0.05, 0.05)
+    )
+    rdep, rtot = jax.jit(
+        lambda: ref.calosim_deposits(n_hits, 11, 13, 0.5, 1.0, 0.004)
+    )()
+    np.testing.assert_allclose(np.asarray(dep), np.asarray(rdep), atol=1e-4)
+    np.testing.assert_allclose(float(tot), float(rtot), rtol=1e-5)
+
+
+def test_artifact_registry_signatures():
+    for name, (fn, specs) in model.ARTIFACTS.items():
+        assert len(specs) == 3, name
+        assert specs[0].dtype == jnp.uint32 and specs[0].shape == (2,)
+        assert specs[1].dtype == jnp.uint32 and specs[1].shape == (2,)
+
+
+@pytest.mark.parametrize("name", sorted(model.ARTIFACTS))
+def test_artifacts_lower(name):
+    fn, specs = model.ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = lowered.compiler_ir("stablehlo")
+    assert "func.func public @main" in str(text)

@@ -1,0 +1,28 @@
+//! Bench: Fig. 2 — burner on the x86 CPUs + iGPU, Buffer vs USM.
+//! Measures real wall time of the full application path per iteration and
+//! prints the virtual (paper-comparable) series.
+
+use portarng::benchkit::{black_box, BenchConfig, BenchGroup};
+use portarng::burner::{run_burner_auto, BurnerApi, BurnerConfig};
+use portarng::platform::PlatformId;
+
+fn main() {
+    let mut g = BenchGroup::new("fig2").config(BenchConfig { warmup: 1, samples: 10 });
+    for platform in [PlatformId::Rome7742, PlatformId::CoreI7_10875H, PlatformId::Uhd630] {
+        for api in [BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+            for batch in [1_000usize, 1_000_000] {
+                let mut cfg = BurnerConfig::paper_default(platform, api, batch);
+                cfg.iterations = 3;
+                let name = format!("{}/{}/{batch}", platform.token(), api.token());
+                let mut virt = 0f64;
+                g.bench_items(&name, batch as u64, || {
+                    let r = run_burner_auto(black_box(&cfg)).unwrap();
+                    virt = r.mean_total_ns();
+                });
+                println!("    -> virtual {:.4} ms/iter", virt / 1e6);
+            }
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_fig2.csv", g.to_csv()).unwrap();
+}

@@ -1,0 +1,26 @@
+//! Bench: Fig. 3 — burner on the discrete GPUs, native vs SYCL buffer/USM.
+
+use portarng::benchkit::{black_box, BenchConfig, BenchGroup};
+use portarng::burner::{run_burner_auto, BurnerApi, BurnerConfig};
+use portarng::platform::PlatformId;
+
+fn main() {
+    let mut g = BenchGroup::new("fig3").config(BenchConfig { warmup: 1, samples: 10 });
+    for platform in [PlatformId::Vega56, PlatformId::A100] {
+        for api in [BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+            for batch in [1_000usize, 1_000_000, 100_000_000] {
+                let mut cfg = BurnerConfig::paper_default(platform, api, batch);
+                cfg.iterations = 3;
+                let name = format!("{}/{}/{batch}", platform.token(), api.token());
+                let mut virt = 0f64;
+                g.bench_items(&name, batch as u64, || {
+                    let r = run_burner_auto(black_box(&cfg)).unwrap();
+                    virt = r.mean_total_ns();
+                });
+                println!("    -> virtual {:.4} ms/iter", virt / 1e6);
+            }
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_fig3.csv", g.to_csv()).unwrap();
+}

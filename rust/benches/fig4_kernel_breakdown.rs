@@ -1,0 +1,33 @@
+//! Bench: Fig. 4 — A100 per-kernel breakdown + occupancy, native vs SYCL.
+
+use portarng::benchkit::{black_box, BenchConfig, BenchGroup};
+use portarng::burner::{run_burner_auto, BurnerApi, BurnerConfig};
+use portarng::platform::PlatformId;
+
+fn main() {
+    let mut g = BenchGroup::new("fig4").config(BenchConfig { warmup: 1, samples: 8 });
+    for api in [BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+        for batch in [10_000usize, 100_000_000] {
+            let mut cfg = BurnerConfig::paper_default(PlatformId::A100, api, batch);
+            cfg.iterations = 3;
+            let name = format!("{}/{batch}", api.token());
+            let mut bd = None;
+            g.bench_items(&name, batch as u64, || {
+                let r = run_burner_auto(black_box(&cfg)).unwrap();
+                bd = Some(r.breakdown);
+            });
+            let b = bd.unwrap();
+            println!(
+                "    -> setup {:.4} | generate {:.4} (occ {:.3}, tpb {}) | transform {:.4} | d2h {:.4} ms",
+                b.setup_ns as f64 / 1e6,
+                b.generate_ns as f64 / 1e6,
+                b.generate_occupancy,
+                b.tpb,
+                b.transform_ns as f64 / 1e6,
+                b.d2h_ns as f64 / 1e6
+            );
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_fig4.csv", g.to_csv()).unwrap();
+}

@@ -1,0 +1,32 @@
+//! Bench: Fig. 5 — FastCaloSim across platforms, native vs SYCL, both
+//! workloads. Real wall time of the simulation loop + virtual run-times.
+
+use portarng::benchkit::{black_box, BenchConfig, BenchGroup};
+use portarng::fastcalosim::{run_fastcalosim, FcsApi, Workload};
+use portarng::platform::PlatformId;
+
+fn main() {
+    let mut g = BenchGroup::new("fig5").config(BenchConfig { warmup: 1, samples: 5 });
+    for (workload, label, events) in [
+        (Workload::SingleElectron { events: 25 }, "single-e", 25u64),
+        (Workload::TTbar { events: 5 }, "ttbar", 5),
+    ] {
+        for platform in [PlatformId::Rome7742, PlatformId::A100, PlatformId::Vega56] {
+            for api in [FcsApi::Native, FcsApi::Sycl] {
+                if api == FcsApi::Native && platform == PlatformId::Vega56 {
+                    continue;
+                }
+                let name = format!("{label}/{}/{}", platform.token(), api.token());
+                let mut virt = 0f64;
+                g.bench_items(&name, events, || {
+                    let r =
+                        run_fastcalosim(black_box(platform), api, workload, 1).unwrap();
+                    virt = r.total_ns as f64;
+                });
+                println!("    -> virtual {:.3} s total", virt / 1e9);
+            }
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_fig5.csv", g.to_csv()).unwrap();
+}

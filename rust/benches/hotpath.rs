@@ -1,0 +1,120 @@
+//! Bench: the real hot paths (§Perf deliverable) — engine throughput,
+//! distribution sampling, SYCL runtime overhead, PJRT execution, service
+//! batching. These are wall-clock measurements of OUR implementation, the
+//! numbers the §Perf optimization loop tracks.
+
+use std::sync::Arc;
+
+use portarng::benchkit::{black_box, BenchConfig, BenchGroup};
+use portarng::coordinator::RngService;
+use portarng::platform::{CommandCost, PlatformId};
+use portarng::rng::{Distribution, Engine, EngineKind, PhiloxEngine};
+use portarng::runtime::PjrtRuntime;
+use portarng::sycl::{AccessMode, Buffer, CommandClass, Queue, SyclRuntimeProfile};
+
+fn main() {
+    let n = 1 << 20;
+
+    // L3 hot path 1: raw engine throughput (u32 and fused uniform).
+    let mut g = BenchGroup::new("hotpath").config(BenchConfig { warmup: 2, samples: 12 });
+    {
+        let mut e = PhiloxEngine::new(1);
+        let mut buf = vec![0u32; n];
+        g.bench_items("philox/fill_u32/1M", n as u64, || {
+            e.fill_u32(black_box(&mut buf));
+        });
+        let mut fbuf = vec![0f32; n];
+        g.bench_items("philox/fill_uniform_fused/1M", n as u64, || {
+            e.fill_uniform_f32(black_box(&mut fbuf));
+        });
+    }
+    for kind in [EngineKind::Mrg32k3a, EngineKind::Xorwow, EngineKind::Mt19937] {
+        let mut e = kind.create(1);
+        let mut buf = vec![0u32; n];
+        g.bench_items(&format!("{}/fill_u32/1M", kind.name()), n as u64, || {
+            e.fill_u32(black_box(&mut buf));
+        });
+    }
+
+    // Distribution layer.
+    {
+        let mut e = PhiloxEngine::new(2);
+        let mut out = vec![0f32; n];
+        for d in [
+            Distribution::uniform(-1.0, 1.0),
+            Distribution::gaussian(0.0, 1.0),
+            Distribution::Exponential { lambda: 1.0 },
+        ] {
+            g.bench_items(&format!("distr/{}/1M", d.name()), n as u64, || {
+                d.sample_f32(&mut e, black_box(&mut out));
+            });
+        }
+    }
+
+    // SYCL runtime overhead: empty command groups (per-submit cost).
+    {
+        let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let buf = Buffer::<f32>::new(64);
+        g.bench_items("sycl/submit/1k-cmds", 1000, || {
+            for i in 0..1000 {
+                let b = buf.clone();
+                queue.submit(move |cgh| {
+                    let acc = cgh.require(&b, AccessMode::ReadWrite);
+                    cgh.host_task(
+                        format!("k{i}"),
+                        CommandClass::Other,
+                        CommandCost::HostCompute { ns: 0 },
+                        move |_| {
+                            let _ = acc;
+                        },
+                    );
+                });
+            }
+        });
+    }
+
+    // PJRT execution latency (the device round trip).
+    if let Ok(rt) = PjrtRuntime::discover() {
+        let rt = Arc::new(rt);
+        rt.warmup(Some(&["burner_uniform_65536", "burner_uniform_1048576"])).unwrap();
+        g.bench_items("pjrt/burner/65536", 65536, || {
+            let out = rt
+                .run_burner("burner_uniform_65536", [1, 2], [0, 0], 0.0, 1.0)
+                .unwrap();
+            black_box(out);
+        });
+        g.bench_items("pjrt/burner/1048576", 1 << 20, || {
+            let out = rt
+                .run_burner("burner_uniform_1048576", [1, 2], [0, 0], 0.0, 1.0)
+                .unwrap();
+            black_box(out);
+        });
+        g.bench_items("pjrt/calosim/16384-hits", 16384, || {
+            let out = rt
+                .run_calosim(
+                    "calosim_hits_16384",
+                    [1, 2],
+                    [0, 0],
+                    [0.2, 1.0, 0.004, 0.05, 0.05],
+                )
+                .unwrap();
+            black_box(out);
+        });
+    }
+
+    // Coordinator service: request round-trip + batching throughput.
+    {
+        g.bench_items("service/64-requests-of-4k", 64 * 4096, || {
+            let svc = RngService::spawn(PlatformId::A100, 1, 1 << 20, 16);
+            let rxs: Vec<_> = (0..64).map(|_| svc.generate(4096, (0.0, 1.0))).collect();
+            svc.flush();
+            for rx in rxs {
+                black_box(rx.recv().unwrap().unwrap());
+            }
+            svc.shutdown().unwrap();
+        });
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_hotpath.csv", g.to_csv()).unwrap();
+}

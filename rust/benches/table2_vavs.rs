@@ -1,0 +1,18 @@
+//! Bench: Table 2 — the VAVS sweep end-to-end (driver wall time) and the
+//! resulting P̄ values, compared against the paper's.
+
+use portarng::benchkit::{BenchConfig, BenchGroup};
+use portarng::repro::table2;
+
+fn main() {
+    let mut g = BenchGroup::new("table2").config(BenchConfig { warmup: 0, samples: 3 });
+    let mut out = None;
+    g.bench("vavs-driver-quick", || {
+        out = Some(table2(true).unwrap());
+    });
+    let t = &out.unwrap()[0];
+    println!("\n{}", t.to_markdown());
+    println!("paper: {{Vega56,A100}} buffer 1.070 / usm 0.393; {{Vega56}} 0.974/1.076; {{A100}} 1.186/0.240");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_table2.csv", t.to_csv()).unwrap();
+}

@@ -1,0 +1,165 @@
+//! cuRAND-shaped backend (NVIDIA A100).
+//!
+//! Exposes the exact host-API surface the paper wraps (§4.2 workflow):
+//! `curandCreateGenerator` -> `curandSetPseudoRandomGeneratorSeed` ->
+//! `curandGenerateUniform`/`curandGenerateNormal` ->
+//! `curandDestroyGenerator`, with `curandStatus_t`-style return codes. The
+//! oneMKL interop kernel (Listing 1.1) calls these from inside a SYCL host
+//! task; the native burner calls them directly.
+
+use crate::error::{Error, Result};
+use crate::platform::PlatformId;
+use crate::rng::engines::EngineKind;
+use crate::rng::Distribution;
+
+use super::vendor::{vendor_supports, VendorGeneratorImpl};
+use super::{RngBackend, VendorGenerator};
+
+/// `curandStatus_t` analogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CurandStatus {
+    /// CURAND_STATUS_SUCCESS
+    Success,
+    /// CURAND_STATUS_NOT_INITIALIZED (destroyed / invalid handle)
+    NotInitialized,
+    /// CURAND_STATUS_TYPE_ERROR (unsupported generation request)
+    TypeError,
+}
+
+/// `curandGenerator_t` analogue.
+pub struct CurandGenerator(VendorGeneratorImpl);
+
+/// `curandCreateGenerator`.
+pub fn curand_create_generator(kind: EngineKind) -> CurandGenerator {
+    CurandGenerator(VendorGeneratorImpl::new("cuRAND", kind, 0, false))
+}
+
+/// `curandSetPseudoRandomGeneratorSeed`.
+pub fn curand_set_pseudo_random_generator_seed(
+    gen: &mut CurandGenerator,
+    seed: u64,
+) -> CurandStatus {
+    match gen.0.set_seed(seed) {
+        Ok(()) => CurandStatus::Success,
+        Err(_) => CurandStatus::NotInitialized,
+    }
+}
+
+/// `curandSetGeneratorOffset`.
+pub fn curand_set_generator_offset(gen: &mut CurandGenerator, offset: u64) -> CurandStatus {
+    match gen.0.set_offset(offset) {
+        Ok(()) => CurandStatus::Success,
+        Err(_) => CurandStatus::NotInitialized,
+    }
+}
+
+/// `curandGenerateUniform`: fixed type, fixed [0,1) range — "there is no
+/// concept of a 'range'; it is left to the user to post-process" (§4.1).
+pub fn curand_generate_uniform(gen: &mut CurandGenerator, out: &mut [f32]) -> CurandStatus {
+    match gen.0.generate_canonical(&Distribution::uniform(0.0, 1.0), out) {
+        Ok(()) => CurandStatus::Success,
+        Err(Error::Unsupported { .. }) => CurandStatus::TypeError,
+        Err(_) => CurandStatus::NotInitialized,
+    }
+}
+
+/// `curandGenerateNormal` (mean/std applied in-library, as cuRAND does for
+/// normals — unlike uniforms).
+pub fn curand_generate_normal(
+    gen: &mut CurandGenerator,
+    out: &mut [f32],
+    mean: f32,
+    stddev: f32,
+) -> CurandStatus {
+    match gen.0.generate_canonical(&Distribution::gaussian(0.0, 1.0), out) {
+        Ok(()) => {
+            crate::rng::range_transform::scale_gaussian_inplace(out, mean, stddev);
+            CurandStatus::Success
+        }
+        Err(Error::Unsupported { .. }) => CurandStatus::TypeError,
+        Err(_) => CurandStatus::NotInitialized,
+    }
+}
+
+/// `curandDestroyGenerator`.
+pub fn curand_destroy_generator(gen: &mut CurandGenerator) -> CurandStatus {
+    match gen.0.destroy() {
+        Ok(()) => CurandStatus::Success,
+        Err(_) => CurandStatus::NotInitialized,
+    }
+}
+
+/// The cuRAND library as an [`RngBackend`].
+pub struct CurandBackend;
+
+impl CurandBackend {
+    /// cuRAND on the A100.
+    pub fn new() -> Self {
+        CurandBackend
+    }
+}
+
+impl Default for CurandBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RngBackend for CurandBackend {
+    fn name(&self) -> &'static str {
+        "cuRAND"
+    }
+
+    fn platform(&self) -> PlatformId {
+        PlatformId::A100
+    }
+
+    fn is_device(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, engine: EngineKind, distr: &Distribution) -> bool {
+        vendor_supports(engine, distr)
+    }
+
+    fn create_generator(
+        &self,
+        engine: EngineKind,
+        seed: u64,
+    ) -> Result<Box<dyn VendorGenerator>> {
+        let mut g = VendorGeneratorImpl::new("cuRAND", engine, seed, false);
+        g.set_seed(seed)?;
+        Ok(Box::new(g))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::engines::PhiloxEngine;
+    use crate::rng::Engine;
+
+    #[test]
+    fn curand_flow_matches_paper_workflow() {
+        // §4.2: create -> set options -> generate -> destroy.
+        let mut gen = curand_create_generator(EngineKind::Philox4x32x10);
+        assert_eq!(curand_set_pseudo_random_generator_seed(&mut gen, 99), CurandStatus::Success);
+        let mut out = vec![0f32; 128];
+        assert_eq!(curand_generate_uniform(&mut gen, &mut out), CurandStatus::Success);
+        let mut want = vec![0f32; 128];
+        PhiloxEngine::new(99).fill_uniform_f32(&mut want);
+        assert_eq!(out, want);
+        assert_eq!(curand_destroy_generator(&mut gen), CurandStatus::Success);
+        assert_eq!(curand_generate_uniform(&mut gen, &mut out), CurandStatus::NotInitialized);
+    }
+
+    #[test]
+    fn normal_applies_mean_std() {
+        let mut gen = curand_create_generator(EngineKind::Philox4x32x10);
+        curand_set_pseudo_random_generator_seed(&mut gen, 5);
+        let mut out = vec![0f32; 100_000];
+        assert_eq!(curand_generate_normal(&mut gen, &mut out, 10.0, 2.0), CurandStatus::Success);
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        assert!((mean - 10.0).abs() < 0.05, "mean={mean}");
+    }
+}

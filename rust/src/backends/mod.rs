@@ -1,0 +1,168 @@
+//! "Vendor" RNG backends (DESIGN.md S5).
+//!
+//! Each backend reproduces a native library's three observable properties
+//! (see the substitution table in DESIGN.md §1):
+//!
+//! 1. **API shape** — cuRAND/hipRAND expose create/seed/generate/destroy
+//!    with fixed output types, no output range, no seed initializer lists,
+//!    and ICDF methods only for quasirandom engines. The oneMKL-native
+//!    backends expose the full 36-entry surface.
+//! 2. **Numerics** — bit-exact engines ([`crate::rng::engines`]).
+//! 3. **Runtime cost structure** — via the platform perf models and the
+//!    [`NativeTimeline`] used by the native (non-SYCL) application paths.
+//!
+//! [`PjrtBackend`] is the real-compute path: it executes the AOT-compiled
+//! Pallas Philox kernel through PJRT.
+
+mod curand_sim;
+mod hiprand_sim;
+mod mkl_cpu;
+mod native_app;
+mod onemkl_intel;
+mod pjrt;
+mod vendor;
+
+pub use curand_sim::{
+    curand_create_generator, curand_destroy_generator, curand_generate_normal,
+    curand_generate_uniform, curand_set_generator_offset,
+    curand_set_pseudo_random_generator_seed, CurandBackend, CurandGenerator, CurandStatus,
+};
+pub use hiprand_sim::{HiprandBackend, HiprandStatus};
+pub use mkl_cpu::MklCpuBackend;
+pub use native_app::NativeTimeline;
+pub use onemkl_intel::OneMklIntelGpuBackend;
+pub use pjrt::PjrtBackend;
+pub use vendor::VendorGeneratorImpl;
+
+use crate::error::Result;
+use crate::platform::PlatformId;
+use crate::rng::engines::EngineKind;
+use crate::rng::Distribution;
+
+/// A live generator handle, mirroring `curandGenerator_t` lifecycle.
+///
+/// NOTE: not `Send` — the PJRT client underneath the real-compute backend
+/// is `Rc`-based, so generator handles stay on the thread that created
+/// them (the coordinator gives each worker thread its own backend set).
+pub trait VendorGenerator {
+    /// Owning backend's name.
+    fn backend_name(&self) -> &'static str;
+
+    /// Engine family behind the handle.
+    fn engine_kind(&self) -> EngineKind;
+
+    /// `curandSetPseudoRandomGeneratorSeed` — resets the stream.
+    fn set_seed(&mut self, seed: u64) -> Result<()>;
+
+    /// `curandSetGeneratorOffset` — skip-ahead in raw draws.
+    fn set_offset(&mut self, offset: u64) -> Result<()>;
+
+    /// Whether ICDF generation methods are available on this handle.
+    fn supports_icdf(&self) -> bool;
+
+    /// Generate the *canonical* sequence for the distribution family:
+    /// `[0,1)` for uniform, `N(0,1)` for gaussian/lognormal (pre-exp),
+    /// raw bits for `Bits`. Range/mean/std application is the oneMKL
+    /// layer's transform kernel, NOT the vendor's job (paper §4.1).
+    fn generate_canonical(&mut self, distr: &Distribution, out: &mut [f32]) -> Result<()>;
+
+    /// `curandDestroyGenerator`. Further use errors.
+    fn destroy(&mut self) -> Result<()>;
+
+    /// Whether the handle has been destroyed.
+    fn is_destroyed(&self) -> bool;
+}
+
+/// A vendor RNG library bound to a platform. Not `Send`/`Sync` — see
+/// [`VendorGenerator`]; per-thread instances are cheap to construct.
+pub trait RngBackend {
+    /// Library name ("cuRAND", "hipRAND", "oneMKL-x86", ...).
+    fn name(&self) -> &'static str;
+
+    /// The platform this backend's kernels run on.
+    fn platform(&self) -> PlatformId;
+
+    /// Whether generation happens on a device (vs host).
+    fn is_device(&self) -> bool;
+
+    /// Feature matrix: does (engine, distribution) work here?
+    fn supports(&self, engine: EngineKind, distr: &Distribution) -> bool;
+
+    /// `curandCreateGenerator` + seed.
+    fn create_generator(&self, engine: EngineKind, seed: u64)
+        -> Result<Box<dyn VendorGenerator>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::engines::PhiloxEngine;
+    use crate::rng::Engine;
+
+    /// All vendor backends must agree bit-exactly with the raw engine on
+    /// the canonical uniform stream (the interop promise: the *native*
+    /// library does the work, the wrapper adds nothing numerically).
+    #[test]
+    fn canonical_uniform_parity_across_backends() {
+        let backends: Vec<Box<dyn RngBackend>> = vec![
+            Box::new(CurandBackend::new()),
+            Box::new(HiprandBackend::new()),
+            Box::new(MklCpuBackend::new(PlatformId::Rome7742)),
+            Box::new(OneMklIntelGpuBackend::new()),
+        ];
+        let mut reference = vec![0f32; 1000];
+        PhiloxEngine::new(42).fill_uniform_f32(&mut reference);
+
+        for b in &backends {
+            let mut gen = b.create_generator(EngineKind::Philox4x32x10, 42).unwrap();
+            let mut out = vec![0f32; 1000];
+            gen.generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out)
+                .unwrap();
+            assert_eq!(out, reference, "backend {}", b.name());
+        }
+    }
+
+    #[test]
+    fn icdf_support_matrix_matches_paper() {
+        // cuRAND/hipRAND: ICDF only for quasirandom; oneMKL natives: all.
+        let cur = CurandBackend::new();
+        let icdf = Distribution::Gaussian {
+            mean: 0.0,
+            stddev: 1.0,
+            method: crate::rng::GaussianMethod::Icdf,
+        };
+        assert!(!cur.supports(EngineKind::Philox4x32x10, &icdf));
+        assert!(cur.supports(EngineKind::Sobol32, &icdf));
+        let mkl = MklCpuBackend::new(PlatformId::CoreI7_10875H);
+        assert!(mkl.supports(EngineKind::Philox4x32x10, &icdf));
+    }
+
+    #[test]
+    fn destroyed_generator_errors() {
+        let b = CurandBackend::new();
+        let mut gen = b.create_generator(EngineKind::Philox4x32x10, 1).unwrap();
+        gen.destroy().unwrap();
+        assert!(gen.is_destroyed());
+        let mut out = vec![0f32; 4];
+        assert!(gen
+            .generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out)
+            .is_err());
+        assert!(gen.destroy().is_err());
+        assert!(gen.set_seed(2).is_err());
+    }
+
+    #[test]
+    fn set_offset_equals_engine_skip() {
+        let b = HiprandBackend::new();
+        let mut gen = b.create_generator(EngineKind::Philox4x32x10, 7).unwrap();
+        gen.set_offset(12_345).unwrap();
+        let mut out = vec![0f32; 64];
+        gen.generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out).unwrap();
+
+        let mut e = PhiloxEngine::new(7);
+        e.skip_ahead(12_345);
+        let mut want = vec![0f32; 64];
+        e.fill_uniform_f32(&mut want);
+        assert_eq!(out, want);
+    }
+}

@@ -1,0 +1,210 @@
+//! Virtual timeline for the *native* (non-SYCL) benchmark applications.
+//!
+//! The paper's baselines are plain CUDA / HIP / C++ programs: no runtime
+//! DAG, no accessors — just sequential API calls, each paying the
+//! platform's launch latency and the native runtime's completion-callback
+//! cost. This struct is their clock; it records the same
+//! [`CommandClass`]-tagged spans as the SYCL queue so Fig. 4 can compare
+//! per-kernel durations across both.
+
+use crate::platform::{jitter_from, CommandCost, PerfModel, PlatformId, TransferDir};
+use crate::sycl::{CommandClass, CommandRecord};
+
+/// Sequential virtual clock of a native application.
+pub struct NativeTimeline {
+    model: PerfModel,
+    now_ns: u64,
+    records: Vec<CommandRecord>,
+    salt: u64,
+    next_id: u64,
+}
+
+impl NativeTimeline {
+    /// New timeline on `platform`.
+    pub fn new(platform: PlatformId) -> Self {
+        NativeTimeline {
+            model: PerfModel::new(platform.spec()),
+            now_ns: 0,
+            records: Vec::new(),
+            salt: 0,
+            next_id: 0,
+        }
+    }
+
+    /// Deterministic-noise salt (one per measurement iteration).
+    pub fn set_noise_salt(&mut self, salt: u64) {
+        self.salt = salt;
+    }
+
+    /// The platform's performance model.
+    pub fn model(&self) -> &PerfModel {
+        &self.model
+    }
+
+    fn push(
+        &mut self,
+        name: &str,
+        class: CommandClass,
+        exec_ns: u64,
+        tpb: Option<u32>,
+        items: u64,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let exec_ns =
+            (exec_ns as f64 * jitter_from("native-cmd", self.salt, id, exec_ns)) as u64;
+        let start = self.now_ns;
+        let end = start + exec_ns;
+        self.now_ns = end;
+        self.records.push(CommandRecord {
+            id,
+            name: name.to_string(),
+            class,
+            dep_ids: if id == 0 { vec![] } else { vec![id - 1] },
+            virt_start_ns: start,
+            virt_end_ns: end,
+            wall_ns: 0,
+            tpb,
+            occupancy: tpb.map(|t| {
+                crate::platform::occupancy(items, t, self.model.spec()).achieved
+            }),
+        });
+        exec_ns
+    }
+
+    /// `curandCreateGenerator` + seed call.
+    pub fn create_generator(&mut self) {
+        let ns = self.model.execution_ns(&CommandCost::GeneratorSetup);
+        self.push("create_generator", CommandClass::Setup, ns, None, 0);
+    }
+
+    /// `{cuda,hip}Malloc`.
+    pub fn malloc(&mut self) {
+        let ns = self.model.execution_ns(&CommandCost::Malloc);
+        self.push("malloc", CommandClass::Malloc, ns, None, 0);
+    }
+
+    /// A device kernel at the native app's hardcoded thread-block size,
+    /// followed by the native runtime's completion callback.
+    pub fn kernel(&mut self, name: &str, class: CommandClass, cost: CommandCost) {
+        let tpb = match cost {
+            CommandCost::Kernel { tpb, .. } if tpb != 0 => tpb,
+            _ => self.model.spec().native_tpb,
+        };
+        let (cost, items) = match cost {
+            CommandCost::Kernel { bytes_read, bytes_written, items, .. } => {
+                (CommandCost::Kernel { bytes_read, bytes_written, items, tpb }, items)
+            }
+            c => (c, 0),
+        };
+        let ns = self.model.execution_ns(&cost);
+        self.push(name, class, ns, Some(tpb), items);
+        // Stream-callback / synchronize cost the native app pays per kernel
+        // (cudaDeviceSynchronize in Listing 1.1's native counterpart).
+        let cb = self.model.native_callback_ns();
+        self.push("callback", CommandClass::Other, cb, None, 0);
+    }
+
+    /// A device kernel launched asynchronously (no per-kernel callback) —
+    /// pipelined applications like the CUDA FastCaloSim port launch many
+    /// kernels per event and synchronize once at event end via
+    /// [`Self::sync`].
+    pub fn kernel_async(&mut self, name: &str, class: CommandClass, cost: CommandCost) {
+        let tpb = match cost {
+            CommandCost::Kernel { tpb, .. } if tpb != 0 => tpb,
+            _ => self.model.spec().native_tpb,
+        };
+        let (cost, items) = match cost {
+            CommandCost::Kernel { bytes_read, bytes_written, items, .. } => {
+                (CommandCost::Kernel { bytes_read, bytes_written, items, tpb }, items)
+            }
+            c => (c, 0),
+        };
+        let ns = self.model.execution_ns(&cost);
+        self.push(name, class, ns, Some(tpb), items);
+    }
+
+    /// Stream synchronize (one completion callback).
+    pub fn sync(&mut self) {
+        let cb = self.model.native_callback_ns();
+        self.push("sync", CommandClass::Other, cb, None, 0);
+    }
+
+    /// Host<->device copy.
+    pub fn transfer(&mut self, bytes: u64, dir: TransferDir) {
+        let ns = self.model.transfer_ns(bytes);
+        let class = match dir {
+            TransferDir::H2D => CommandClass::TransferH2D,
+            TransferDir::D2H => CommandClass::TransferD2H,
+        };
+        self.push(
+            if class == CommandClass::TransferH2D { "h2d" } else { "d2h" },
+            class,
+            ns,
+            None,
+            0,
+        );
+    }
+
+    /// Host-side work of known duration.
+    pub fn host(&mut self, name: &str, ns: u64) {
+        self.push(name, CommandClass::Other, ns, None, 0);
+    }
+
+    /// Total virtual elapsed time.
+    pub fn total_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Recorded spans.
+    pub fn records(&self) -> &[CommandRecord] {
+        &self.records
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strictly_sequential() {
+        let mut t = NativeTimeline::new(PlatformId::A100);
+        t.create_generator();
+        t.malloc();
+        t.kernel(
+            "generate",
+            CommandClass::Generate,
+            CommandCost::Kernel { bytes_read: 0, bytes_written: 4 << 20, items: 1 << 20, tpb: 0 },
+        );
+        t.transfer(4 << 20, TransferDir::D2H);
+        let r = t.records();
+        for w in r.windows(2) {
+            assert!(w[1].virt_start_ns >= w[0].virt_end_ns);
+        }
+        assert_eq!(t.total_ns(), r.last().unwrap().virt_end_ns);
+    }
+
+    #[test]
+    fn kernels_pay_native_callback() {
+        let mut a = NativeTimeline::new(PlatformId::A100);
+        a.kernel(
+            "k",
+            CommandClass::Generate,
+            CommandCost::Kernel { bytes_read: 0, bytes_written: 4096, items: 1024, tpb: 0 },
+        );
+        // generate + callback spans recorded.
+        assert_eq!(a.records().len(), 2);
+        assert!(a.records()[1].virt_end_ns - a.records()[1].virt_start_ns > 0);
+    }
+
+    #[test]
+    fn native_tpb_is_256_on_gpus() {
+        let mut t = NativeTimeline::new(PlatformId::A100);
+        t.kernel(
+            "k",
+            CommandClass::Generate,
+            CommandCost::Kernel { bytes_read: 0, bytes_written: 4096, items: 1024, tpb: 0 },
+        );
+        assert_eq!(t.records()[0].tpb, Some(256));
+    }
+}

@@ -1,0 +1,67 @@
+//! oneMKL native Intel-GPU backend (UHD Graphics 630).
+//!
+//! The other pre-existing oneMKL backend in the paper (§2.2: "RNG
+//! interfaces which wrap the optimized Intel routines targeting x86
+//! architectures and Intel GPUs"). UMA zero-copy applies on this platform.
+
+use crate::error::Result;
+use crate::platform::PlatformId;
+use crate::rng::engines::EngineKind;
+use crate::rng::Distribution;
+
+use super::vendor::VendorGeneratorImpl;
+use super::{RngBackend, VendorGenerator};
+
+/// oneMKL's Intel-GPU RNG routines.
+pub struct OneMklIntelGpuBackend;
+
+impl OneMklIntelGpuBackend {
+    /// oneMKL on the UHD 630 iGPU.
+    pub fn new() -> Self {
+        OneMklIntelGpuBackend
+    }
+}
+
+impl Default for OneMklIntelGpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RngBackend for OneMklIntelGpuBackend {
+    fn name(&self) -> &'static str {
+        "oneMKL-iGPU"
+    }
+
+    fn platform(&self) -> PlatformId {
+        PlatformId::Uhd630
+    }
+
+    fn is_device(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, _engine: EngineKind, _distr: &Distribution) -> bool {
+        true
+    }
+
+    fn create_generator(
+        &self,
+        engine: EngineKind,
+        seed: u64,
+    ) -> Result<Box<dyn VendorGenerator>> {
+        Ok(Box::new(VendorGeneratorImpl::new("oneMKL-iGPU", engine, seed, true)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn igpu_is_uma_device() {
+        let b = OneMklIntelGpuBackend::new();
+        assert!(b.is_device());
+        assert!(b.platform().spec().uma);
+    }
+}

@@ -1,0 +1,212 @@
+//! PJRT backend: the real-compute device path.
+//!
+//! Executes the AOT-compiled Pallas Philox kernel (fused generate +
+//! convert + range-transform) through the XLA PJRT CPU client. Arbitrary
+//! batch sizes are served by the artifact ladder (smallest compiled size
+//! >= n, truncated), with the counter offset advanced so successive calls
+//! remain stream-exact with the Rust/Python Philox implementations.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::platform::PlatformId;
+use crate::rng::engines::EngineKind;
+use crate::rng::Distribution;
+use crate::runtime::PjrtRuntime;
+
+use super::{RngBackend, VendorGenerator};
+
+/// Backend executing the Pallas-kernel artifacts.
+pub struct PjrtBackend {
+    runtime: Arc<PjrtRuntime>,
+    /// (size, artifact-name) ladder, ascending.
+    ladder: Vec<(usize, String)>,
+}
+
+impl PjrtBackend {
+    /// Wrap a PJRT runtime.
+    pub fn new(runtime: Arc<PjrtRuntime>) -> Result<Self> {
+        let ladder = runtime.manifest().burner_sizes();
+        if ladder.is_empty() {
+            return Err(Error::Artifact("no burner_uniform_* artifacts in manifest".into()));
+        }
+        Ok(PjrtBackend { runtime, ladder })
+    }
+
+    /// The artifact (name, size) used for a batch of `n`.
+    pub fn artifact_for(&self, n: usize) -> Result<(usize, &str)> {
+        self.ladder
+            .iter()
+            .find(|(size, _)| *size >= n)
+            .map(|(size, name)| (*size, name.as_str()))
+            .ok_or_else(|| {
+                Error::InvalidArgument(format!(
+                    "batch {n} exceeds the largest compiled artifact ({}); \
+                     add a size to python/compile/model.ARTIFACTS",
+                    self.ladder.last().map(|(s, _)| *s).unwrap_or(0)
+                ))
+            })
+    }
+
+    /// The shared runtime.
+    pub fn runtime(&self) -> &Arc<PjrtRuntime> {
+        &self.runtime
+    }
+}
+
+impl RngBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pallas-pjrt"
+    }
+
+    fn platform(&self) -> PlatformId {
+        // The real-compute path models the device the artifacts were tuned
+        // for; the A100 is the paper's flagship comparison.
+        PlatformId::A100
+    }
+
+    fn is_device(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, engine: EngineKind, distr: &Distribution) -> bool {
+        engine == EngineKind::Philox4x32x10
+            && matches!(distr, Distribution::Uniform { .. } | Distribution::Gaussian { .. })
+    }
+
+    fn create_generator(
+        &self,
+        engine: EngineKind,
+        seed: u64,
+    ) -> Result<Box<dyn VendorGenerator>> {
+        if engine != EngineKind::Philox4x32x10 {
+            return Err(Error::unsupported(
+                "pallas-pjrt",
+                format!("{} (only philox4x32x10 is compiled)", engine.name()),
+            ));
+        }
+        Ok(Box::new(PjrtGenerator {
+            backend: PjrtBackend {
+                runtime: self.runtime.clone(),
+                ladder: self.ladder.clone(),
+            },
+            state: Mutex::new(GenState { seed, block_offset: 0, destroyed: false }),
+        }))
+    }
+}
+
+struct GenState {
+    seed: u64,
+    /// 64-bit Philox counter-block offset for the next call.
+    block_offset: u64,
+    destroyed: bool,
+}
+
+/// Generator handle over the PJRT artifacts.
+pub struct PjrtGenerator {
+    backend: PjrtBackend,
+    state: Mutex<GenState>,
+}
+
+impl PjrtGenerator {
+    fn key_off(state: &GenState) -> ([u32; 2], [u32; 2]) {
+        (
+            [state.seed as u32, (state.seed >> 32) as u32],
+            [state.block_offset as u32, (state.block_offset >> 32) as u32],
+        )
+    }
+}
+
+impl VendorGenerator for PjrtGenerator {
+    fn backend_name(&self) -> &'static str {
+        "pallas-pjrt"
+    }
+
+    fn engine_kind(&self) -> EngineKind {
+        EngineKind::Philox4x32x10
+    }
+
+    fn set_seed(&mut self, seed: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.destroyed {
+            return Err(Error::Sycl("pallas-pjrt: destroyed handle".into()));
+        }
+        st.seed = seed;
+        st.block_offset = 0;
+        Ok(())
+    }
+
+    fn set_offset(&mut self, offset: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.destroyed {
+            return Err(Error::Sycl("pallas-pjrt: destroyed handle".into()));
+        }
+        if offset % 4 != 0 {
+            return Err(Error::InvalidArgument(
+                "pjrt offset must be a multiple of 4 (counter-block granularity)".into(),
+            ));
+        }
+        st.block_offset = offset / 4;
+        Ok(())
+    }
+
+    fn supports_icdf(&self) -> bool {
+        false
+    }
+
+    fn generate_canonical(&mut self, distr: &Distribution, out: &mut [f32]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.destroyed {
+            return Err(Error::Sycl("pallas-pjrt: destroyed handle".into()));
+        }
+        let n = out.len();
+        let (padded, artifact) = self.backend.artifact_for(n)?;
+        let (key, off) = Self::key_off(&st);
+        let full = match distr {
+            Distribution::Uniform { .. } => {
+                // Fused kernel emits the canonical [0,1): the range is
+                // applied by the oneMKL transform stage (or fused in the
+                // `burner` fast path which passes (a,b) directly).
+                self.backend.runtime.run_burner(artifact, key, off, 0.0, 1.0)?
+            }
+            Distribution::Gaussian { .. } => {
+                let gname = format!("burner_gaussian_{padded}");
+                let gname = if self.backend.runtime.manifest().artifacts.contains_key(&gname) {
+                    gname
+                } else {
+                    "burner_gaussian_65536".to_string()
+                };
+                let gspec = self.backend.runtime.spec(&gname)?;
+                if gspec.outputs[0].elements() < n {
+                    return Err(Error::InvalidArgument(format!(
+                        "gaussian batch {n} exceeds compiled artifact {gname}"
+                    )));
+                }
+                self.backend.runtime.run_burner(&gname, key, off, 0.0, 1.0)?
+            }
+            other => {
+                return Err(Error::unsupported(
+                    "pallas-pjrt",
+                    format!("{} (not compiled)", other.name()),
+                ))
+            }
+        };
+        out.copy_from_slice(&full[..n]);
+        // Advance by the padded counter consumption to stay block-aligned.
+        st.block_offset += (padded as u64) / 4;
+        Ok(())
+    }
+
+    fn destroy(&mut self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.destroyed {
+            return Err(Error::Sycl("pallas-pjrt: double destroy".into()));
+        }
+        st.destroyed = true;
+        Ok(())
+    }
+
+    fn is_destroyed(&self) -> bool {
+        self.state.lock().unwrap().destroyed
+    }
+}

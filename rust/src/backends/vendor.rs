@@ -1,0 +1,160 @@
+//! Shared machinery for the cuRAND/hipRAND-shaped vendor libraries.
+
+use crate::error::{Error, Result};
+use crate::rng::distributions::box_muller_pair;
+use crate::rng::engines::{Engine, EngineKind};
+use crate::rng::{Distribution, GaussianMethod};
+
+use super::VendorGenerator;
+
+/// Concrete generator used by both cuRAND-sim and hipRAND-sim (and, with
+/// `full_api = true`, by the oneMKL-native backends).
+pub struct VendorGeneratorImpl {
+    backend: &'static str,
+    engine: Box<dyn Engine>,
+    seed: u64,
+    /// Full oneMKL feature surface (ICDF for pseudorandom engines,
+    /// exponential/poisson natively).
+    full_api: bool,
+    destroyed: bool,
+}
+
+impl VendorGeneratorImpl {
+    /// Create a live handle.
+    pub fn new(backend: &'static str, kind: EngineKind, seed: u64, full_api: bool) -> Self {
+        VendorGeneratorImpl {
+            backend,
+            engine: kind.create(seed),
+            seed,
+            full_api,
+            destroyed: false,
+        }
+    }
+
+    fn check_live(&self) -> Result<()> {
+        if self.destroyed {
+            Err(Error::Sycl(format!(
+                "{}: use of destroyed generator handle",
+                self.backend
+            )))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl VendorGenerator for VendorGeneratorImpl {
+    fn backend_name(&self) -> &'static str {
+        self.backend
+    }
+
+    fn engine_kind(&self) -> EngineKind {
+        self.engine.kind()
+    }
+
+    fn set_seed(&mut self, seed: u64) -> Result<()> {
+        self.check_live()?;
+        self.seed = seed;
+        self.engine = self.engine.kind().create(seed);
+        Ok(())
+    }
+
+    fn set_offset(&mut self, offset: u64) -> Result<()> {
+        self.check_live()?;
+        // Offset is absolute: reset then skip.
+        self.engine = self.engine.kind().create(self.seed);
+        self.engine.skip_ahead(offset);
+        Ok(())
+    }
+
+    fn supports_icdf(&self) -> bool {
+        self.full_api || self.engine.kind().is_quasi()
+    }
+
+    fn generate_canonical(&mut self, distr: &Distribution, out: &mut [f32]) -> Result<()> {
+        self.check_live()?;
+        match distr {
+            Distribution::Uniform { .. } => {
+                self.engine.fill_uniform_f32(out);
+                Ok(())
+            }
+            Distribution::Gaussian { method, .. } | Distribution::Lognormal { method, .. } => {
+                if *method == GaussianMethod::Icdf && !self.supports_icdf() {
+                    return Err(Error::unsupported(
+                        self.backend,
+                        "ICDF gaussian methods (pseudorandom engines)",
+                    ));
+                }
+                // Canonical N(0,1): mean/std/exp applied by the oneMKL
+                // transform kernel.
+                let n = out.len();
+                let n_u = n + (n & 1);
+                let mut u = vec![0f32; n_u];
+                self.engine.fill_uniform_f32(&mut u);
+                match method {
+                    GaussianMethod::BoxMuller => {
+                        for i in (0..n).step_by(2) {
+                            let (z0, z1) = box_muller_pair(u[i], u[i + 1]);
+                            out[i] = z0;
+                            if i + 1 < n {
+                                out[i + 1] = z1;
+                            }
+                        }
+                    }
+                    GaussianMethod::Icdf => {
+                        for i in 0..n {
+                            out[i] = crate::rng::distributions::gaussian_icdf(u[i] as f64) as f32;
+                        }
+                    }
+                }
+                Ok(())
+            }
+            Distribution::Bits => {
+                let mut raw = vec![0u32; out.len()];
+                self.engine.fill_u32(&mut raw);
+                for (dst, &src) in out.iter_mut().zip(raw.iter()) {
+                    *dst = f32::from_bits(src);
+                }
+                Ok(())
+            }
+            Distribution::Exponential { lambda } if self.full_api => {
+                let d = Distribution::Exponential { lambda: *lambda };
+                d.sample_f32(self.engine.as_mut(), out);
+                Ok(())
+            }
+            Distribution::Poisson { lambda } if self.full_api => {
+                let d = Distribution::Poisson { lambda: *lambda };
+                d.sample_f32(self.engine.as_mut(), out);
+                Ok(())
+            }
+            other => Err(Error::unsupported(
+                self.backend,
+                format!("{} generation (vendor API has no such entry point)", other.name()),
+            )),
+        }
+    }
+
+    fn destroy(&mut self) -> Result<()> {
+        self.check_live()?;
+        self.destroyed = true;
+        Ok(())
+    }
+
+    fn is_destroyed(&self) -> bool {
+        self.destroyed
+    }
+}
+
+/// Feature matrix shared by the cuRAND/hipRAND-shaped libraries.
+pub fn vendor_supports(engine: EngineKind, distr: &Distribution) -> bool {
+    match distr {
+        Distribution::Uniform { .. } => true,
+        Distribution::Gaussian { method, .. } | Distribution::Lognormal { method, .. } => {
+            *method != GaussianMethod::Icdf || engine.is_quasi()
+        }
+        Distribution::Bits => true,
+        // No native exponential/poisson entry points in cuRAND/hipRAND's
+        // host API; oneMKL synthesizes them from uniforms + a transform.
+        Distribution::Exponential { .. } | Distribution::Poisson { .. } => false,
+    }
+}

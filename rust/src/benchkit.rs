@@ -1,0 +1,169 @@
+//! Mini benchmark harness (substrate — criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call into this
+//! module: warmup, fixed sample counts, outlier-robust statistics, and
+//! throughput reporting. Results can be dumped as markdown or CSV for
+//! EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::metrics::Summary;
+
+/// One benchmark's configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured samples.
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 3, samples: 15 }
+    }
+}
+
+/// A completed measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id ("group/name").
+    pub name: String,
+    /// Per-sample wall nanoseconds.
+    pub samples_ns: Vec<f64>,
+    /// Elements processed per iteration (for throughput), if any.
+    pub items: Option<u64>,
+}
+
+impl BenchResult {
+    /// Summary statistics over samples.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    /// Throughput in M items/s at the median, when `items` is set.
+    pub fn throughput_m_per_s(&self) -> Option<f64> {
+        self.items.map(|n| n as f64 / crate::metrics::median(&self.samples_ns) * 1e3)
+    }
+
+    /// One human-readable line.
+    pub fn line(&self) -> String {
+        let s = self.summary();
+        let tp = self
+            .throughput_m_per_s()
+            .map(|t| format!("  {:>10.1} Mitem/s", t))
+            .unwrap_or_default();
+        format!(
+            "{:<48} {:>12.3} ms ±{:>8.3} (median {:>12.3}){}",
+            self.name,
+            s.mean / 1e6,
+            s.stddev / 1e6,
+            s.median / 1e6,
+            tp
+        )
+    }
+}
+
+/// A named group of benchmarks, criterion-style.
+pub struct BenchGroup {
+    name: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    /// New group.
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchGroup { name: name.into(), config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    /// Override sample counts.
+    pub fn config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure a closure.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Measure a closure that processes `items` elements per call.
+    pub fn bench_items(&mut self, name: &str, items: u64, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.config.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: format!("{}/{}", self.name, name),
+            samples_ns: samples,
+            items,
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// CSV dump (name, mean_ns, stddev_ns, median_ns, items).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,mean_ns,stddev_ns,median_ns,items\n");
+        for r in &self.results {
+            let s = r.summary();
+            out.push_str(&format!(
+                "{},{:.0},{:.0},{:.0},{}\n",
+                r.name,
+                s.mean,
+                s.stddev,
+                s.median,
+                r.items.map(|i| i.to_string()).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a value (criterion::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut g = BenchGroup::new("test").config(BenchConfig { warmup: 1, samples: 5 });
+        let mut acc = 0u64;
+        g.bench_items("spin", 1000, || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        let r = &g.results()[0];
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.summary().mean > 0.0);
+        assert!(r.throughput_m_per_s().unwrap() > 0.0);
+        assert!(g.to_csv().lines().count() == 2);
+    }
+}

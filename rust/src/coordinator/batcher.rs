@@ -1,0 +1,140 @@
+//! Request batching: coalesce small generate requests into one kernel.
+//!
+//! Because Philox is counter-based, a batch of requests can be served by a
+//! single generation over the concatenated counter range and sliced back —
+//! each requester observes exactly the stream it would have gotten from a
+//! dedicated engine at its own offset (the invariant the property tests
+//! pin down).
+
+/// One queued request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PendingRequest {
+    /// Request id (caller-assigned).
+    pub id: u64,
+    /// Numbers wanted.
+    pub n: usize,
+}
+
+/// Outcome of closing a batch.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// Kernel launch size (sum of member sizes, padded to `pad_to`).
+    pub launch_n: usize,
+    /// (request id, offset-in-batch, n) for slicing results.
+    pub members: Vec<(u64, usize, usize)>,
+}
+
+/// Size/occupancy-driven batcher.
+#[derive(Debug)]
+pub struct RequestBatcher {
+    /// Close the batch when total items reach this.
+    pub max_batch: usize,
+    /// Close the batch when this many requests are queued.
+    pub max_requests: usize,
+    /// Pad launches to a multiple (kernel block granularity).
+    pub pad_to: usize,
+    queue: Vec<PendingRequest>,
+    queued_items: usize,
+}
+
+impl RequestBatcher {
+    /// New batcher.
+    pub fn new(max_batch: usize, max_requests: usize, pad_to: usize) -> Self {
+        RequestBatcher {
+            max_batch,
+            max_requests,
+            pad_to: pad_to.max(1),
+            queue: Vec::new(),
+            queued_items: 0,
+        }
+    }
+
+    /// Enqueue; returns a closed batch if thresholds tripped.
+    pub fn push(&mut self, req: PendingRequest) -> Option<BatchOutcome> {
+        self.queue.push(req);
+        self.queued_items += req.n;
+        if self.queued_items >= self.max_batch || self.queue.len() >= self.max_requests {
+            Some(self.flush_inner())
+        } else {
+            None
+        }
+    }
+
+    /// Close the current batch regardless of thresholds.
+    pub fn flush(&mut self) -> Option<BatchOutcome> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.flush_inner())
+        }
+    }
+
+    /// Queued-but-unflushed request count.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn flush_inner(&mut self) -> BatchOutcome {
+        let mut members = Vec::with_capacity(self.queue.len());
+        let mut offset = 0usize;
+        for req in self.queue.drain(..) {
+            members.push((req.id, offset, req.n));
+            offset += req.n;
+        }
+        self.queued_items = 0;
+        let launch_n = offset.div_ceil(self.pad_to) * self.pad_to;
+        BatchOutcome { launch_n, members }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn batches_close_on_item_threshold() {
+        let mut b = RequestBatcher::new(1000, 100, 4);
+        assert!(b.push(PendingRequest { id: 1, n: 400 }).is_none());
+        assert!(b.push(PendingRequest { id: 2, n: 400 }).is_none());
+        let out = b.push(PendingRequest { id: 3, n: 400 }).unwrap();
+        assert_eq!(out.members.len(), 3);
+        assert_eq!(out.launch_n, 1200);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn offsets_are_contiguous_and_disjoint() {
+        testkit::forall("batcher-offsets", 50, |g| {
+            let mut b = RequestBatcher::new(usize::MAX, usize::MAX, g.usize_in(1, 64));
+            let k = g.usize_in(1, 20);
+            for id in 0..k as u64 {
+                b.push(PendingRequest { id, n: g.usize_in(1, 5000) });
+            }
+            let out = b.flush().unwrap();
+            let mut expect_offset = 0usize;
+            for (i, &(id, off, n)) in out.members.iter().enumerate() {
+                if id != i as u64 {
+                    return Err(format!("order broken at {i}"));
+                }
+                if off != expect_offset {
+                    return Err(format!("gap/overlap at {i}: {off} != {expect_offset}"));
+                }
+                expect_offset += n;
+            }
+            if out.launch_n < expect_offset {
+                return Err("launch smaller than payload".into());
+            }
+            if out.launch_n % b.pad_to != 0 {
+                return Err("padding violated".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flush_on_empty_is_none() {
+        let mut b = RequestBatcher::new(10, 10, 4);
+        assert!(b.flush().is_none());
+    }
+}

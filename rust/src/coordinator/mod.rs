@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: backend registry, dispatch heuristic, request
+//! batching, and a threaded RNG service (DESIGN.md S10).
+//!
+//! The paper's contribution is a library, so the coordinator stays thin:
+//! it owns process lifecycle, routes generate requests to the right
+//! backend for the configured platform/API, and implements the paper's §8
+//! future-work extension — heuristic host-vs-device backend selection by
+//! problem size ("using the host for small workloads and GPU for larger
+//! ones").
+
+mod batcher;
+mod heuristic;
+mod registry;
+mod service;
+
+pub use batcher::{BatchOutcome, RequestBatcher};
+pub use heuristic::BackendHeuristic;
+pub use registry::BackendRegistry;
+pub use service::{RngService, ServiceRequest, ServiceStats};

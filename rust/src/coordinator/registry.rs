@@ -1,0 +1,116 @@
+//! Backend registry: (platform, api) -> vendor backend factory.
+
+use crate::backends::{
+    CurandBackend, HiprandBackend, MklCpuBackend, OneMklIntelGpuBackend, PjrtBackend, RngBackend,
+};
+use crate::error::{Error, Result};
+use crate::platform::{PlatformId, PlatformKind};
+use crate::runtime::PjrtRuntime;
+use std::sync::Arc;
+
+/// Creates vendor backends on demand. Backends are not `Send` (the PJRT
+/// client is `Rc`-based), so each worker thread builds its own from a
+/// shared registry description.
+pub struct BackendRegistry {
+    pjrt: Option<Arc<PjrtRuntime>>,
+}
+
+impl BackendRegistry {
+    /// Registry without the real-compute backend.
+    pub fn new() -> Self {
+        BackendRegistry { pjrt: None }
+    }
+
+    /// Registry with the PJRT artifact runtime attached.
+    pub fn with_pjrt(runtime: Arc<PjrtRuntime>) -> Self {
+        BackendRegistry { pjrt: Some(runtime) }
+    }
+
+    /// Whether real-compute dispatch is available.
+    pub fn has_pjrt(&self) -> bool {
+        self.pjrt.is_some()
+    }
+
+    /// The native vendor backend for a platform (what the paper's oneMKL
+    /// interop layer glues in on that machine).
+    pub fn native_for(&self, platform: PlatformId) -> Box<dyn RngBackend> {
+        match platform {
+            PlatformId::A100 => Box::new(CurandBackend::new()),
+            PlatformId::Vega56 => Box::new(HiprandBackend::new()),
+            PlatformId::Uhd630 => Box::new(OneMklIntelGpuBackend::new()),
+            p => Box::new(MklCpuBackend::new(p)),
+        }
+    }
+
+    /// The real-compute backend (AOT Pallas kernel via PJRT).
+    pub fn pjrt_backend(&self) -> Result<Box<dyn RngBackend>> {
+        let rt = self
+            .pjrt
+            .clone()
+            .ok_or_else(|| Error::Coordinator("no PJRT runtime registered".into()))?;
+        Ok(Box::new(PjrtBackend::new(rt)?))
+    }
+
+    /// The host-fallback backend paired with a device platform (for the
+    /// heuristic selector): the device's host CPU.
+    pub fn host_for(&self, platform: PlatformId) -> Box<dyn RngBackend> {
+        let host = match platform {
+            PlatformId::A100 => PlatformId::Rome7742, // DGX host
+            PlatformId::Vega56 => PlatformId::XeonGold5220,
+            PlatformId::Uhd630 => PlatformId::CoreI7_10875H,
+            p => p,
+        };
+        Box::new(MklCpuBackend::new(host))
+    }
+
+    /// All platforms whose class matches `kind`.
+    pub fn platforms(kind: Option<PlatformKind>) -> Vec<PlatformId> {
+        PlatformId::ALL
+            .into_iter()
+            .filter(|p| kind.is_none_or(|k| p.spec().kind == k))
+            .collect()
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_mapping_matches_table1() {
+        let reg = BackendRegistry::new();
+        assert_eq!(reg.native_for(PlatformId::A100).name(), "cuRAND");
+        assert_eq!(reg.native_for(PlatformId::Vega56).name(), "hipRAND");
+        assert_eq!(reg.native_for(PlatformId::Uhd630).name(), "oneMKL-iGPU");
+        assert_eq!(reg.native_for(PlatformId::Rome7742).name(), "oneMKL-x86");
+    }
+
+    #[test]
+    fn host_pairing() {
+        let reg = BackendRegistry::new();
+        assert_eq!(reg.host_for(PlatformId::A100).platform(), PlatformId::Rome7742);
+        assert_eq!(reg.host_for(PlatformId::Vega56).platform(), PlatformId::XeonGold5220);
+        // CPU platforms are their own host.
+        assert_eq!(reg.host_for(PlatformId::Rome7742).platform(), PlatformId::Rome7742);
+    }
+
+    #[test]
+    fn pjrt_requires_registration() {
+        let reg = BackendRegistry::new();
+        assert!(!reg.has_pjrt());
+        assert!(reg.pjrt_backend().is_err());
+    }
+
+    #[test]
+    fn platform_filter() {
+        let gpus = BackendRegistry::platforms(Some(PlatformKind::DiscreteGpu));
+        assert_eq!(gpus.len(), 2);
+        assert_eq!(BackendRegistry::platforms(None).len(), 6);
+    }
+}

@@ -1,0 +1,203 @@
+//! Threaded RNG service: the coordinator's request loop.
+//!
+//! A worker thread owns the (non-`Send`) backend set and serves generate
+//! requests from an mpsc channel, batching small requests per
+//! [`super::RequestBatcher`]. Each request is answered with exactly the
+//! sub-stream it would have received from a dedicated engine at its
+//! assigned offset — counter-based slicing keeps responses independent of
+//! batching decisions.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::platform::PlatformId;
+use crate::rng::engines::PhiloxEngine;
+use crate::rng::Engine;
+
+use super::batcher::{PendingRequest, RequestBatcher};
+
+/// A generate request.
+pub struct ServiceRequest {
+    /// Numbers wanted.
+    pub n: usize,
+    /// Range [a, b).
+    pub range: (f32, f32),
+    /// Reply channel.
+    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Generate(ServiceRequest),
+    Flush,
+    Shutdown(mpsc::Sender<ServiceStats>),
+}
+
+/// Aggregate service counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests served.
+    pub requests: u64,
+    /// Kernel launches issued (batches).
+    pub launches: u64,
+    /// Numbers generated (padded launch totals).
+    pub numbers: u64,
+}
+
+/// Handle to a running RNG service.
+pub struct RngService {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl RngService {
+    /// Spawn a service for `platform` with the given batching policy.
+    /// The worker builds its own engine/backends (they are not `Send`).
+    pub fn spawn(platform: PlatformId, seed: u64, max_batch: usize, max_requests: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            let _ = platform; // reserved for timing-model integration
+            let mut engine = PhiloxEngine::new(seed);
+            let mut batcher = RequestBatcher::new(max_batch, max_requests, 4);
+            let mut waiting: Vec<ServiceRequest> = Vec::new();
+            let mut stats = ServiceStats::default();
+
+            let serve = |engine: &mut PhiloxEngine,
+                         batcher: &mut RequestBatcher,
+                         waiting: &mut Vec<ServiceRequest>,
+                         stats: &mut ServiceStats| {
+                if let Some(batch) = batcher.flush() {
+                    launch(engine, batch.launch_n, &batch.members, waiting, stats);
+                }
+            };
+
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Generate(req) => {
+                        let id = waiting.len() as u64;
+                        let n = req.n;
+                        waiting.push(req);
+                        stats.requests += 1;
+                        if let Some(batch) = batcher.push(PendingRequest { id, n }) {
+                            launch(&mut engine, batch.launch_n, &batch.members, &mut waiting, &mut stats);
+                        }
+                    }
+                    Msg::Flush => serve(&mut engine, &mut batcher, &mut waiting, &mut stats),
+                    Msg::Shutdown(ack) => {
+                        serve(&mut engine, &mut batcher, &mut waiting, &mut stats);
+                        let _ = ack.send(stats);
+                        break;
+                    }
+                }
+            }
+        });
+        RngService { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns the receiver for the reply.
+    pub fn generate(&self, n: usize, range: (f32, f32)) -> mpsc::Receiver<Result<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Generate(ServiceRequest { n, range, reply }));
+        rx
+    }
+
+    /// Force pending requests out.
+    pub fn flush(&self) {
+        let _ = self.tx.send(Msg::Flush);
+    }
+
+    /// Stop the worker, returning counters.
+    pub fn shutdown(mut self) -> Result<ServiceStats> {
+        let (ack, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Shutdown(ack))
+            .map_err(|_| Error::Coordinator("worker gone".into()))?;
+        let stats = rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped ack".into()))?;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(stats)
+    }
+}
+
+impl Drop for RngService {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let (ack, _rx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(ack));
+            let _ = w.join();
+        }
+    }
+}
+
+fn launch(
+    engine: &mut PhiloxEngine,
+    launch_n: usize,
+    members: &[(u64, usize, usize)],
+    waiting: &mut Vec<ServiceRequest>,
+    stats: &mut ServiceStats,
+) {
+    let mut out = vec![0f32; launch_n];
+    engine.fill_uniform_f32(&mut out);
+    stats.launches += 1;
+    stats.numbers += launch_n as u64;
+    for &(id, offset, n) in members {
+        let req = &waiting[id as usize];
+        let (a, b) = req.range;
+        let mut slice = out[offset..offset + n].to_vec();
+        if a != 0.0 || b != 1.0 {
+            crate::rng::range_transform::range_transform_inplace(&mut slice, a, b);
+        }
+        let _ = req.reply.send(Ok(slice));
+    }
+    waiting.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batched_responses_match_dedicated_stream() {
+        let svc = RngService::spawn(PlatformId::A100, 42, 1 << 20, 3);
+        let r1 = svc.generate(100, (0.0, 1.0));
+        let r2 = svc.generate(200, (0.0, 1.0));
+        let r3 = svc.generate(44, (0.0, 1.0)); // trips max_requests=3
+        let a = r1.recv().unwrap().unwrap();
+        let b = r2.recv().unwrap().unwrap();
+        let c = r3.recv().unwrap().unwrap();
+
+        // The concatenation equals one dedicated stream.
+        let mut want = vec![0f32; 344];
+        PhiloxEngine::new(42).fill_uniform_f32(&mut want);
+        let got: Vec<f32> = a.iter().chain(&b).chain(&c).copied().collect();
+        assert_eq!(got, want);
+
+        let stats = svc.shutdown().unwrap();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.launches, 1);
+        assert_eq!(stats.numbers, 344); // padded to /4 already exact
+    }
+
+    #[test]
+    fn flush_serves_partial_batches() {
+        let svc = RngService::spawn(PlatformId::A100, 7, 1 << 20, 1000);
+        let r1 = svc.generate(10, (2.0, 4.0));
+        svc.flush();
+        let v = r1.recv().unwrap().unwrap();
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().all(|&x| (2.0..4.0).contains(&x)));
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_flushes_remaining() {
+        let svc = RngService::spawn(PlatformId::Vega56, 7, 1 << 20, 1000);
+        let r1 = svc.generate(5, (0.0, 1.0));
+        let stats = svc.shutdown().unwrap();
+        assert!(r1.recv().unwrap().is_ok());
+        assert_eq!(stats.requests, 1);
+    }
+}

@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the portarng library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A generate entry point was called with a (engine, distribution,
+    /// method) combination the selected backend does not implement —
+    /// mirroring the paper's "20 of the 36 generate functions are supported
+    /// by our cuRAND backend as the remaining 16 use ICDF methods".
+    #[error("backend `{backend}` does not support {what}")]
+    Unsupported { backend: &'static str, what: String },
+
+    /// Invalid argument (sizes, ranges, seeds).
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// A SYCL-runtime usage error (double accessor conflict, queue misuse,
+    /// use-after-destroy of a generator...).
+    #[error("sycl runtime error: {0}")]
+    Sycl(String),
+
+    /// Artifact registry / manifest problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Underlying XLA/PJRT failure.
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// JSON parsing failure (manifest.json).
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Coordinator/service errors (channel closed, worker panicked).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for unsupported-feature errors.
+    pub fn unsupported(backend: &'static str, what: impl Into<String>) -> Self {
+        Error::Unsupported { backend, what: what.into() }
+    }
+}

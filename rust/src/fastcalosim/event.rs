@@ -1,0 +1,149 @@
+//! Event generation: the two simulation scenarios of paper §5.2.
+
+use crate::rng::engines::{Engine, PhiloxEngine};
+use crate::rng::u32_to_uniform_f32;
+
+/// A truth particle entering the calorimeter.
+#[derive(Debug, Clone, Copy)]
+pub struct Particle {
+    /// PDG id (11 e-, 22 γ, 211 π+, 2112 n, ...).
+    pub pdg: i32,
+    /// Kinetic energy, GeV.
+    pub energy_gev: f32,
+    /// Pseudorapidity at the calorimeter face.
+    pub eta: f32,
+    /// Azimuth.
+    pub phi: f32,
+}
+
+/// One physics event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Particles to simulate.
+    pub particles: Vec<Particle>,
+}
+
+impl Event {
+    /// Total incoming energy.
+    pub fn total_energy(&self) -> f32 {
+        self.particles.iter().map(|p| p.energy_gev).sum()
+    }
+}
+
+fn u01(e: &mut PhiloxEngine) -> f32 {
+    u32_to_uniform_f32(e.next_u32())
+}
+
+/// The first scenario: `n` single-electron events, 65 GeV each, confined
+/// to a small angular region ("traverse a small angular region of the
+/// calorimeters" — one parameterization suffices).
+pub fn single_electron_events(n: usize, seed: u64) -> Vec<Event> {
+    let mut rng = PhiloxEngine::new(seed ^ 0xE1EC);
+    (0..n)
+        .map(|_| Event {
+            particles: vec![Particle {
+                pdg: 11,
+                energy_gev: 65.0,
+                eta: 0.20 + 0.05 * u01(&mut rng),
+                phi: 1.00 + 0.05 * u01(&mut rng),
+            }],
+        })
+        .collect()
+}
+
+/// The second scenario: `n` t t̄ events — many particles of mixed species
+/// and energies across the full detector, requiring 20-30 distinct
+/// parameterizations.
+pub fn ttbar_events(n: usize, seed: u64) -> Vec<Event> {
+    let mut rng = PhiloxEngine::new(seed ^ 0x77BA);
+    (0..n)
+        .map(|_| {
+            // 250-350 calorimeter-entering particles per t t̄ event.
+            let n_part = 250 + (u01(&mut rng) * 100.0) as usize;
+            let particles = (0..n_part)
+                .map(|_| {
+                    let species = u01(&mut rng);
+                    let pdg = if species < 0.25 {
+                        22
+                    } else if species < 0.45 {
+                        211
+                    } else if species < 0.55 {
+                        11
+                    } else {
+                        2112
+                    };
+                    // Energy spectrum ~ exp falling, 0.5-120 GeV.
+                    let energy = 0.5 + 119.5 * u01(&mut rng).powi(3);
+                    Particle {
+                        pdg,
+                        energy_gev: energy,
+                        eta: -4.5 + 9.0 * u01(&mut rng),
+                        phi: 2.0 * std::f32::consts::PI * u01(&mut rng),
+                    }
+                })
+                .collect();
+            Event { particles }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastcalosim::param::TableId;
+    use std::collections::HashSet;
+
+    #[test]
+    fn single_electron_events_shape() {
+        let evs = single_electron_events(100, 1);
+        assert_eq!(evs.len(), 100);
+        for ev in &evs {
+            assert_eq!(ev.particles.len(), 1);
+            let p = ev.particles[0];
+            assert_eq!(p.pdg, 11);
+            assert_eq!(p.energy_gev, 65.0);
+            assert!((0.2..0.25).contains(&p.eta));
+        }
+        // All electrons share a single parameterization (paper: "only
+        // requires a single energy and shower shape parameterization").
+        let tables: HashSet<TableId> = evs
+            .iter()
+            .map(|e| TableId::for_particle(11, 65.0, e.particles[0].eta))
+            .collect();
+        assert_eq!(tables.len(), 1);
+    }
+
+    #[test]
+    fn ttbar_needs_20_to_30_tables() {
+        let evs = ttbar_events(50, 3);
+        let tables: HashSet<TableId> = evs
+            .iter()
+            .flat_map(|e| e.particles.iter())
+            .map(|p| TableId::for_particle(p.pdg, p.energy_gev, p.eta))
+            .collect();
+        // Species x energy x eta binning lands in the paper's 20-30 range
+        // (we allow a little slack on the high side).
+        assert!(
+            (20..=40).contains(&tables.len()),
+            "distinct tables = {}",
+            tables.len()
+        );
+    }
+
+    #[test]
+    fn ttbar_is_much_busier_than_single_e() {
+        let se = single_electron_events(10, 1);
+        let tt = ttbar_events(10, 1);
+        let se_parts: usize = se.iter().map(|e| e.particles.len()).sum();
+        let tt_parts: usize = tt.iter().map(|e| e.particles.len()).sum();
+        assert!(tt_parts > 100 * se_parts);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ttbar_events(3, 9);
+        let b = ttbar_events(3, 9);
+        assert_eq!(a[0].particles.len(), b[0].particles.len());
+        assert_eq!(a[2].total_energy(), b[2].total_energy());
+    }
+}

@@ -1,0 +1,159 @@
+//! Synthetic calorimeter geometry: ~190k sensitive elements, 17 layers
+//! ("The detector geometry includes nearly 190,000 sensitive elements,
+//! O(10) MB" — paper §5.2). About 20 MB is uploaded to the GPU at startup.
+
+/// One sampling layer's readout granularity.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Layer name (ATLAS-style).
+    pub name: &'static str,
+    /// Cells in eta.
+    pub neta: usize,
+    /// Cells in phi.
+    pub nphi: usize,
+    /// Covered |eta| range.
+    pub eta_min: f32,
+    /// Covered |eta| range.
+    pub eta_max: f32,
+}
+
+impl LayerSpec {
+    /// Cells in this layer.
+    pub fn cells(&self) -> usize {
+        self.neta * self.nphi
+    }
+}
+
+/// The synthetic layer stack (granularities chosen so the total is ~190k,
+/// finest in the EM strips as in ATLAS).
+pub const LAYERS: [LayerSpec; 17] = [
+    LayerSpec { name: "PreSamplerB", neta: 64, nphi: 64, eta_min: -1.5, eta_max: 1.5 },
+    LayerSpec { name: "EMB1", neta: 256, nphi: 64, eta_min: -1.5, eta_max: 1.5 },
+    LayerSpec { name: "EMB2", neta: 64, nphi: 256, eta_min: -1.5, eta_max: 1.5 },
+    LayerSpec { name: "EMB3", neta: 32, nphi: 256, eta_min: -1.5, eta_max: 1.5 },
+    LayerSpec { name: "PreSamplerE", neta: 128, nphi: 128, eta_min: -2.5, eta_max: 2.5 },
+    LayerSpec { name: "EME1", neta: 64, nphi: 128, eta_min: -2.5, eta_max: 2.5 },
+    LayerSpec { name: "EME2", neta: 128, nphi: 64, eta_min: -2.5, eta_max: 2.5 },
+    LayerSpec { name: "EME3", neta: 96, nphi: 128, eta_min: -2.5, eta_max: 2.5 },
+    LayerSpec { name: "HEC0", neta: 128, nphi: 96, eta_min: -3.1, eta_max: 3.1 },
+    LayerSpec { name: "HEC1", neta: 160, nphi: 128, eta_min: -3.1, eta_max: 3.1 },
+    LayerSpec { name: "HEC2", neta: 128, nphi: 160, eta_min: -3.1, eta_max: 3.1 },
+    LayerSpec { name: "HEC3", neta: 112, nphi: 128, eta_min: -3.1, eta_max: 3.1 },
+    LayerSpec { name: "TileBar0", neta: 128, nphi: 112, eta_min: -1.0, eta_max: 1.0 },
+    LayerSpec { name: "TileBar1", neta: 64, nphi: 96, eta_min: -1.0, eta_max: 1.0 },
+    LayerSpec { name: "TileBar2", neta: 96, nphi: 64, eta_min: -1.0, eta_max: 1.0 },
+    LayerSpec { name: "FCal1", neta: 48, nphi: 64, eta_min: -4.9, eta_max: 4.9 },
+    LayerSpec { name: "FCal2", neta: 41, nphi: 64, eta_min: -4.9, eta_max: 4.9 },
+];
+
+/// The full detector: layers + flattened cell indexing.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    /// Per-layer first-cell offsets into the flattened cell array.
+    offsets: Vec<usize>,
+    total: usize,
+}
+
+impl Geometry {
+    /// Build the synthetic geometry.
+    pub fn build() -> Geometry {
+        let mut offsets = Vec::with_capacity(LAYERS.len());
+        let mut total = 0;
+        for l in &LAYERS {
+            offsets.push(total);
+            total += l.cells();
+        }
+        Geometry { offsets, total }
+    }
+
+    /// Total sensitive elements (~190k).
+    pub fn n_cells(&self) -> usize {
+        self.total
+    }
+
+    /// Number of layers.
+    pub fn n_layers(&self) -> usize {
+        LAYERS.len()
+    }
+
+    /// Approximate on-device size: ~110 B per cell descriptor (id, layer,
+    /// eta/phi centres + widths, position) -> ~20 MB, the paper's figure.
+    pub fn device_bytes(&self) -> u64 {
+        (self.total as u64) * 110
+    }
+
+    /// Flattened cell index for (layer, eta, phi); clamps to layer bounds.
+    pub fn cell_index(&self, layer: usize, eta: f32, phi: f32) -> usize {
+        let l = &LAYERS[layer];
+        let deta = (l.eta_max - l.eta_min) / l.neta as f32;
+        let dphi = (2.0 * std::f32::consts::PI) / l.nphi as f32;
+        let ieta = (((eta - l.eta_min) / deta) as isize).clamp(0, l.neta as isize - 1) as usize;
+        let phi_w = phi.rem_euclid(2.0 * std::f32::consts::PI);
+        let iphi = ((phi_w / dphi) as usize).min(l.nphi - 1);
+        self.offsets[layer] + ieta * l.nphi + iphi
+    }
+
+    /// Layers whose eta range covers `eta`.
+    pub fn layers_at(&self, eta: f32) -> Vec<usize> {
+        LAYERS
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| eta >= l.eta_min && eta <= l.eta_max)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_is_about_190k() {
+        let g = Geometry::build();
+        assert!(
+            (185_000..195_000).contains(&g.n_cells()),
+            "cells={}",
+            g.n_cells()
+        );
+        assert_eq!(g.n_layers(), 17);
+    }
+
+    #[test]
+    fn device_footprint_about_20mb() {
+        let g = Geometry::build();
+        let mb = g.device_bytes() as f64 / 1e6;
+        assert!((15.0..25.0).contains(&mb), "geometry {mb} MB");
+    }
+
+    #[test]
+    fn cell_index_in_bounds_and_unique_per_layer() {
+        let g = Geometry::build();
+        for layer in 0..g.n_layers() {
+            let a = g.cell_index(layer, 0.0, 0.1);
+            let b = g.cell_index(layer, 0.0, 0.1);
+            assert_eq!(a, b);
+            assert!(a < g.n_cells());
+        }
+        // Different layers map to disjoint index ranges.
+        let i0 = g.cell_index(0, 0.0, 0.0);
+        let i1 = g.cell_index(1, 0.0, 0.0);
+        assert_ne!(i0, i1);
+    }
+
+    #[test]
+    fn out_of_range_eta_clamps() {
+        let g = Geometry::build();
+        let idx = g.cell_index(0, 99.0, 0.0);
+        assert!(idx < g.n_cells());
+    }
+
+    #[test]
+    fn central_eta_covered_by_barrel_and_more() {
+        let g = Geometry::build();
+        let layers = g.layers_at(0.3);
+        assert!(layers.len() >= 10);
+        let fwd = g.layers_at(4.0);
+        assert!(fwd.len() <= 3); // only FCal reaches |eta| = 4
+    }
+}

@@ -1,0 +1,23 @@
+//! FastCaloSim substrate (DESIGN.md S8): the paper's real-world benchmark.
+//!
+//! A parameterized calorimeter simulation in the style of the ATLAS
+//! FastCaloSim ports ([17], [21]): synthetic detector geometry (~190k
+//! sensitive cells over 17 sampling layers), synthetic energy/shower-shape
+//! parameterization tables loaded on demand, and an event loop whose hit
+//! sampling consumes three uniforms per hit through the portable RNG API —
+//! the integration point the paper §5.2 describes.
+//!
+//! The ATLAS inputs (real geometry, O(1) GB parameterizations, MC samples)
+//! are not public; DESIGN.md §1 documents how the synthetic substitutes
+//! preserve the computational characteristics the paper's measurements
+//! depend on.
+
+mod event;
+mod geometry;
+mod param;
+mod simulation;
+
+pub use event::{single_electron_events, ttbar_events, Event, Particle};
+pub use geometry::{Geometry, LayerSpec, LAYERS};
+pub use param::{ParamStore, ParamTable, TableId};
+pub use simulation::{run_fastcalosim, FcsApi, FcsConfig, FcsReport, Simulator, Workload, FCS_ENGINE};

@@ -1,0 +1,524 @@
+//! The FastCaloSim event loop over the portable RNG API.
+//!
+//! Per event, per particle: bin into a parameterization table (loading it
+//! to the device on first use), derive the hit count, draw 3 uniforms per
+//! hit through the RNG backend, and deposit hit energies into the
+//! calorimeter cells. The paper's §5.2/§7 observations are reproduced
+//! structurally: intra-event hit parallelism only (no inter-event
+//! batching), parameterization H2D traffic dominating t t̄, and the RNG
+//! contribution being small but mandatory for portability.
+
+use crate::backends::NativeTimeline;
+use crate::error::Result;
+use crate::platform::{CommandCost, PlatformId, PlatformKind, TransferDir};
+use crate::rng::engines::PhiloxEngine;
+use crate::rng::{u32_to_uniform_f32, Engine};
+use crate::sycl::{CommandClass, Queue, SyclRuntimeProfile};
+
+use super::event::Event;
+use super::geometry::Geometry;
+use super::param::{ParamStore, TableId};
+
+/// Which FastCaloSim port runs (paper §5.2: C++/CUDA native vs SYCL).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FcsApi {
+    /// The original codes: C++ on CPUs, CUDA on NVIDIA.
+    Native,
+    /// The SYCL port with the oneMKL RNG integration.
+    Sycl,
+}
+
+impl FcsApi {
+    /// CLI token.
+    pub fn token(self) -> &'static str {
+        match self {
+            FcsApi::Native => "native",
+            FcsApi::Sycl => "sycl",
+        }
+    }
+
+    /// Parse CLI token.
+    pub fn parse(s: &str) -> Option<FcsApi> {
+        match s {
+            "native" => Some(FcsApi::Native),
+            "sycl" => Some(FcsApi::Sycl),
+            _ => None,
+        }
+    }
+}
+
+/// The two paper workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// 1000 (paper: 10^3) single 65 GeV electrons.
+    SingleElectron {
+        /// Event count.
+        events: usize,
+    },
+    /// 500 t t̄ events.
+    TTbar {
+        /// Event count.
+        events: usize,
+    },
+}
+
+impl Workload {
+    /// Paper-sized single-electron workload.
+    pub fn single_electron() -> Workload {
+        Workload::SingleElectron { events: 1000 }
+    }
+
+    /// Paper-sized t t̄ workload.
+    pub fn ttbar() -> Workload {
+        Workload::TTbar { events: 500 }
+    }
+
+    /// Label for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Workload::SingleElectron { .. } => "single-e",
+            Workload::TTbar { .. } => "ttbar",
+        }
+    }
+
+    /// Build the events.
+    pub fn events(&self, seed: u64) -> Vec<Event> {
+        match *self {
+            Workload::SingleElectron { events } => super::event::single_electron_events(events, seed),
+            Workload::TTbar { events } => super::event::ttbar_events(events, seed),
+        }
+    }
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct FcsConfig {
+    /// Target platform.
+    pub platform: PlatformId,
+    /// Port (native vs SYCL).
+    pub api: FcsApi,
+    /// RNG seed.
+    pub seed: u64,
+    /// Real per-hit computation cap per event (virtual accounting is
+    /// always exact; see DESIGN.md on tractability).
+    pub real_hit_cap: usize,
+}
+
+impl FcsConfig {
+    /// Defaults for a platform/api pair.
+    pub fn new(platform: PlatformId, api: FcsApi) -> FcsConfig {
+        FcsConfig { platform, api, seed: 0xFC5, real_hit_cap: 20_000 }
+    }
+}
+
+/// Simulation outcome + virtual timing.
+#[derive(Debug, Clone)]
+pub struct FcsReport {
+    /// Config echoed.
+    pub platform: PlatformId,
+    /// Port.
+    pub api: FcsApi,
+    /// Workload label.
+    pub workload: &'static str,
+    /// Events simulated.
+    pub events: usize,
+    /// Virtual per-event times, ns.
+    pub per_event_ns: Vec<f64>,
+    /// Total virtual time, ns.
+    pub total_ns: u64,
+    /// Total hits simulated (virtual count).
+    pub hits: u64,
+    /// Random numbers consumed (virtual count; 3 per hit + minimum floor).
+    pub rns: u64,
+    /// Distinct parameterization tables loaded.
+    pub tables_loaded: usize,
+    /// Energy entering the calorimeter (real-computed subset).
+    pub energy_in: f64,
+    /// Energy deposited (real-computed subset).
+    pub energy_dep: f64,
+    /// Wall time of the run, ns.
+    pub wall_ns: u64,
+}
+
+impl FcsReport {
+    /// Mean virtual time per event, ms.
+    pub fn mean_event_ms(&self) -> f64 {
+        crate::metrics::mean(&self.per_event_ns) / 1e6
+    }
+}
+
+/// Per-hit host cost for the CPU ports, ns (calibrated so 1000 single-e
+/// events take O(seconds) on CPUs, matching Fig. 5's scale).
+const CPU_NS_PER_HIT: f64 = 350.0;
+/// Host-side per-particle bookkeeping, ns.
+const HOST_NS_PER_PARTICLE: u64 = 4_000;
+/// Minimum random numbers per event (paper: "the minimum set to 200,000 —
+/// approximately one per calorimeter cell").
+const MIN_RNS_PER_EVENT: u64 = 200_000;
+
+/// The simulator: owns geometry, parameterizations and the RNG stream.
+pub struct Simulator {
+    cfg: FcsConfig,
+    geometry: Geometry,
+    params: ParamStore,
+    rng: PhiloxEngine,
+    deposits: Vec<f32>,
+}
+
+impl Simulator {
+    /// Build a simulator (geometry upload happens on first `simulate`).
+    pub fn new(cfg: FcsConfig) -> Simulator {
+        let geometry = Geometry::build();
+        let params = ParamStore::new(geometry.n_layers());
+        Simulator {
+            rng: PhiloxEngine::new(cfg.seed),
+            geometry,
+            params,
+            cfg,
+            deposits: Vec::new(),
+        }
+    }
+
+    /// The detector geometry.
+    pub fn geometry(&self) -> &Geometry {
+        &self.geometry
+    }
+
+    /// Run the full workload.
+    pub fn simulate(&mut self, events: &[Event]) -> Result<FcsReport> {
+        let wall_start = std::time::Instant::now();
+        let spec = self.cfg.platform.spec();
+        let is_gpu = spec.kind != PlatformKind::Cpu;
+        self.deposits = vec![0f32; self.geometry.n_cells()];
+
+        // Timelines: the native port uses the sequential native clock; the
+        // SYCL port pays queue/DAG costs. Both share the kernel cost model.
+        let mut native = NativeTimeline::new(self.cfg.platform);
+        let queue = Queue::new(
+            self.cfg.platform,
+            SyclRuntimeProfile::for_platform(&spec),
+        );
+
+        // Geometry upload (~20 MB) once, GPU only.
+        if is_gpu {
+            match self.cfg.api {
+                FcsApi::Native => {
+                    native.transfer(self.geometry.device_bytes(), TransferDir::H2D)
+                }
+                FcsApi::Sycl => {
+                    let bytes = self.geometry.device_bytes();
+                    queue.submit(|cgh| {
+                        cgh.host_task(
+                            "geometry:h2d",
+                            CommandClass::TransferH2D,
+                            CommandCost::Transfer { bytes, dir: TransferDir::H2D },
+                            |_| {},
+                        );
+                    });
+                }
+            }
+        }
+
+        let mut per_event_ns = Vec::with_capacity(events.len());
+        let (mut hits_total, mut rns_total) = (0u64, 0u64);
+        let (mut energy_in, mut energy_dep) = (0f64, 0f64);
+
+        for (i, ev) in events.iter().enumerate() {
+            let start_ns = match self.cfg.api {
+                FcsApi::Native => native.total_ns(),
+                FcsApi::Sycl => queue.virtual_now_ns(),
+            };
+            let (hits, rns, e_in, e_dep) =
+                self.simulate_event(ev, i as u64, &mut native, &queue, is_gpu)?;
+            hits_total += hits;
+            rns_total += rns;
+            energy_in += e_in;
+            energy_dep += e_dep;
+            let end_ns = match self.cfg.api {
+                FcsApi::Native => native.total_ns(),
+                FcsApi::Sycl => queue.wait(),
+            };
+            per_event_ns.push((end_ns - start_ns) as f64);
+        }
+
+        let total_ns = match self.cfg.api {
+            FcsApi::Native => native.total_ns(),
+            FcsApi::Sycl => queue.wait(),
+        };
+
+        Ok(FcsReport {
+            platform: self.cfg.platform,
+            api: self.cfg.api,
+            workload: if events.first().map(|e| e.particles.len() > 1).unwrap_or(false) {
+                "ttbar"
+            } else {
+                "single-e"
+            },
+            events: events.len(),
+            per_event_ns,
+            total_ns,
+            hits: hits_total,
+            rns: rns_total,
+            tables_loaded: self.params.loaded_count(),
+            energy_in,
+            energy_dep,
+            wall_ns: wall_start.elapsed().as_nanos() as u64,
+        })
+    }
+
+    /// One event: per-particle table fetch, RNG draw, hit deposition.
+    fn simulate_event(
+        &mut self,
+        ev: &Event,
+        salt: u64,
+        native: &mut NativeTimeline,
+        queue: &Queue,
+        is_gpu: bool,
+    ) -> Result<(u64, u64, f64, f64)> {
+        native.set_noise_salt(salt);
+        queue.set_noise_salt(salt);
+        let mut event_hits = 0u64;
+        let mut e_in = 0f64;
+        let mut e_dep = 0f64;
+        let mut real_hits_left = self.cfg.real_hit_cap;
+
+        for p in &ev.particles {
+            let id = TableId::for_particle(p.pdg, p.energy_gev, p.eta);
+            let (table, h2d_bytes) = self.params.fetch(id);
+
+            // Parameterization load (t t̄: 20-30 of these, §5.2).
+            if h2d_bytes > 0 && is_gpu {
+                match self.cfg.api {
+                    FcsApi::Native => native.transfer(h2d_bytes, TransferDir::H2D),
+                    FcsApi::Sycl => {
+                        queue.submit(|cgh| {
+                            cgh.host_task(
+                                "param:h2d",
+                                CommandClass::TransferH2D,
+                                CommandCost::Transfer { bytes: h2d_bytes, dir: TransferDir::H2D },
+                                |_| {},
+                            );
+                        });
+                    }
+                }
+            }
+
+            let n_hits = (p.energy_gev * table.hits_per_gev) as u64;
+            event_hits += n_hits;
+            e_in += p.energy_gev as f64;
+
+            // Host bookkeeping per particle.
+            match self.cfg.api {
+                FcsApi::Native => native.host("particle", HOST_NS_PER_PARTICLE),
+                FcsApi::Sycl => queue.advance_host(HOST_NS_PER_PARTICLE),
+            }
+
+            // RNG + hit kernels (intra-event parallelism only).
+            let n_rns = 3 * n_hits;
+            let rng_cost = CommandCost::Kernel {
+                bytes_read: 0,
+                bytes_written: n_rns * 4,
+                items: n_rns,
+                tpb: 0,
+            };
+            let hit_cost = if is_gpu {
+                CommandCost::Kernel {
+                    bytes_read: n_rns * 4,
+                    bytes_written: n_hits * 8,
+                    items: n_hits,
+                    tpb: 0,
+                }
+            } else {
+                CommandCost::HostCompute { ns: (n_hits as f64 * CPU_NS_PER_HIT) as u64 }
+            };
+            match self.cfg.api {
+                FcsApi::Native => {
+                    // Pipelined launches; one sync per event (below).
+                    native.kernel_async("rng", CommandClass::Generate, rng_cost);
+                    native.kernel_async("hits", CommandClass::Other, hit_cost);
+                }
+                FcsApi::Sycl => {
+                    // Buffer-path submissions (the FastCaloSim SYCL port
+                    // uses accessors; RAW dependency rng -> hits).
+                    let ev1 = queue.submit(|cgh| {
+                        cgh.host_task("rng", CommandClass::Generate, rng_cost, |_| {});
+                    });
+                    let _ = queue.submit(|cgh| {
+                        cgh.depends_on(&ev1);
+                        cgh.host_task("hits", CommandClass::Other, hit_cost, |_| {});
+                    });
+                }
+            }
+
+            // Real hit computation (capped): same math as the L2 graph.
+            let real_hits = (n_hits as usize).min(real_hits_left);
+            real_hits_left -= real_hits;
+            if real_hits > 0 {
+                let scale = n_hits as f32 / real_hits as f32;
+                let e_per_hit = p.energy_gev / n_hits as f32;
+                let layers = self.geometry.layers_at(p.eta);
+                for _ in 0..real_hits {
+                    let u_e = u32_to_uniform_f32(self.rng.next_u32());
+                    let u_eta = u32_to_uniform_f32(self.rng.next_u32());
+                    let u_phi = u32_to_uniform_f32(self.rng.next_u32());
+                    let e = e_per_hit * -(1.0 - u_e).ln();
+                    let eta = p.eta + table.sigma_eta * (2.0 * u_eta - 1.0);
+                    let phi = p.phi + table.sigma_phi * (2.0 * u_phi - 1.0);
+                    // Deposit split over covered layers by the table
+                    // weights (renormalised to the covered subset).
+                    let wsum: f32 = layers.iter().map(|&l| table.layer_weights[l]).sum();
+                    for &l in &layers {
+                        let frac = table.layer_weights[l] / wsum.max(1e-6);
+                        let idx = self.geometry.cell_index(l, eta, phi);
+                        self.deposits[idx] += scale * e * frac;
+                        e_dep += (scale * e * frac) as f64;
+                    }
+                }
+            }
+        }
+
+        // Per-event RN floor (~one per cell).
+        let event_rns = (3 * event_hits).max(MIN_RNS_PER_EVENT);
+        if 3 * event_hits < MIN_RNS_PER_EVENT {
+            let extra = MIN_RNS_PER_EVENT - 3 * event_hits;
+            let cost = CommandCost::Kernel {
+                bytes_read: 0,
+                bytes_written: extra * 4,
+                items: extra,
+                tpb: 0,
+            };
+            match self.cfg.api {
+                FcsApi::Native => native.kernel_async("rng:floor", CommandClass::Generate, cost),
+                FcsApi::Sycl => {
+                    queue.submit(|cgh| {
+                        cgh.host_task("rng:floor", CommandClass::Generate, cost, |_| {});
+                    });
+                }
+            }
+        }
+
+        // Result readback (deposited-cell list, ~a few hundred KB).
+        if is_gpu {
+            let bytes = (self.geometry.n_cells() as u64) * 4;
+            match self.cfg.api {
+                FcsApi::Native => {
+                    native.sync();
+                    native.transfer(bytes, TransferDir::D2H)
+                }
+                FcsApi::Sycl => {
+                    queue.submit(|cgh| {
+                        cgh.host_task(
+                            "result:d2h",
+                            CommandClass::TransferD2H,
+                            CommandCost::Transfer { bytes, dir: TransferDir::D2H },
+                            |_| {},
+                        );
+                    });
+                }
+            }
+        }
+        Ok((event_hits, event_rns, e_in, e_dep))
+    }
+
+    /// Accumulated deposits (real-computed subset).
+    pub fn deposits(&self) -> &[f32] {
+        &self.deposits
+    }
+}
+
+/// Convenience driver: simulate `workload` on (platform, api).
+pub fn run_fastcalosim(
+    platform: PlatformId,
+    api: FcsApi,
+    workload: Workload,
+    seed: u64,
+) -> Result<FcsReport> {
+    let events = workload.events(seed);
+    let mut sim = Simulator::new(FcsConfig::new(platform, api));
+    let mut report = sim.simulate(&events)?;
+    report.workload = workload.label();
+    Ok(report)
+}
+
+/// The RNG engine FastCaloSim requests from the portable API.
+pub const FCS_ENGINE: crate::rng::EngineKind =
+    crate::rng::EngineKind::Philox4x32x10;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(workload: Workload) -> FcsReport {
+        run_fastcalosim(PlatformId::A100, FcsApi::Sycl, workload, 42).unwrap()
+    }
+
+    #[test]
+    fn single_electron_hits_in_window() {
+        let r = small(Workload::SingleElectron { events: 20 });
+        let hits_per_event = r.hits as f64 / r.events as f64;
+        assert!(
+            (4000.0..6500.0).contains(&hits_per_event),
+            "hits/event = {hits_per_event}"
+        );
+        // 12000-19500 RNs/event before the 200k floor -> floor applies.
+        assert!(r.rns >= r.events as u64 * 200_000);
+    }
+
+    #[test]
+    fn energy_approximately_conserved() {
+        let r = small(Workload::SingleElectron { events: 5 });
+        // Real compute covers all single-e hits (< cap): deposits ~ input.
+        let ratio = r.energy_dep / r.energy_in;
+        assert!((0.9..1.1).contains(&ratio), "dep/in = {ratio}");
+    }
+
+    #[test]
+    fn ttbar_loads_many_tables_and_is_slower() {
+        let se = small(Workload::SingleElectron { events: 5 });
+        let tt = small(Workload::TTbar { events: 5 });
+        assert_eq!(se.tables_loaded, 1);
+        assert!((15..=40).contains(&tt.tables_loaded), "tables={}", tt.tables_loaded);
+        assert!(tt.mean_event_ms() > 10.0 * se.mean_event_ms());
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_single_electrons() {
+        // The paper's ~80% reduction on GPUs vs CPUs (Fig. 5a).
+        let gpu = run_fastcalosim(
+            PlatformId::A100,
+            FcsApi::Sycl,
+            Workload::SingleElectron { events: 10 },
+            1,
+        )
+        .unwrap();
+        let cpu = run_fastcalosim(
+            PlatformId::CoreI7_10875H,
+            FcsApi::Sycl,
+            Workload::SingleElectron { events: 10 },
+            1,
+        )
+        .unwrap();
+        let reduction = 1.0 - gpu.mean_event_ms() / cpu.mean_event_ms();
+        assert!(reduction > 0.5, "reduction = {reduction}");
+    }
+
+    #[test]
+    fn sycl_close_to_native() {
+        let nat = run_fastcalosim(
+            PlatformId::A100,
+            FcsApi::Native,
+            Workload::SingleElectron { events: 10 },
+            1,
+        )
+        .unwrap();
+        let syc = run_fastcalosim(
+            PlatformId::A100,
+            FcsApi::Sycl,
+            Workload::SingleElectron { events: 10 },
+            1,
+        )
+        .unwrap();
+        let eff = crate::metrics::vavs_efficiency(nat.mean_event_ms(), syc.mean_event_ms());
+        assert!((0.7..1.4).contains(&eff), "VAVS eff = {eff}");
+    }
+}

@@ -1,0 +1,50 @@
+//! # portarng — cross-platform performance-portable RNG through interoperability
+//!
+//! Reproduction of Pascuzzi & Goli, *"Achieving near native runtime
+//! performance and cross-platform performance portability for random number
+//! generation through SYCL interoperability"* (2021), rebuilt on a
+//! Rust + JAX + Pallas three-layer stack (see `DESIGN.md`).
+//!
+//! The crate is organised exactly along the paper's stack:
+//!
+//! * [`sycl`] — a faithful mini SYCL-runtime substrate: queues, command
+//!   groups, buffer accessors with an automatically derived dependency DAG,
+//!   USM allocations with explicit event dependencies, and host-task
+//!   interoperability handles (the paper's `codeplay_host_task`).
+//! * [`rng`] — the oneMKL-like front-end: engines (Philox4x32x10, MRG32k3a,
+//!   XORWOW, MT19937, Sobol32), distributions, the generate API and the
+//!   range-transformation kernel the native libraries lack.
+//! * [`backends`] — "vendor" backends: cuRAND- and hipRAND-shaped native
+//!   simulators, oneMKL CPU/iGPU natives, and the real-compute PJRT backend
+//!   executing the AOT-compiled Pallas Philox kernel.
+//! * [`platform`] — platform descriptors and calibrated performance models
+//!   (virtual clock) for the paper's six test machines.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`.
+//! * [`fastcalosim`] — the real-world benchmark substrate: ATLAS-like
+//!   calorimeter geometry, parameterization store, event generation and hit
+//!   simulation.
+//! * [`burner`] — the paper's §5.1 RNG-burner benchmark application.
+//! * [`metrics`] — VAVS efficiency and the Pennycook performance-portability
+//!   metric (paper eq. 1).
+//! * [`coordinator`] — backend registry/dispatch, request batcher, and the
+//!   §8 "heuristic backend selection" extension.
+//! * [`repro`] — drivers that regenerate every table and figure.
+//! * [`benchkit`] / [`testkit`] / [`jsonlite`] — in-tree substrates for the
+//!   criterion / proptest / serde_json roles (unavailable offline).
+
+pub mod backends;
+pub mod benchkit;
+pub mod burner;
+pub mod coordinator;
+pub mod error;
+pub mod fastcalosim;
+pub mod jsonlite;
+pub mod metrics;
+pub mod platform;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod sycl;
+pub mod testkit;
+
+pub use error::{Error, Result};

@@ -1,0 +1,247 @@
+//! `portarng` CLI — leader entry point.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! portarng platforms                         # Table-1 inventory
+//! portarng burner --platform a100 --api sycl-buffer --batch 65536 [--iters 100]
+//! portarng fastcalosim --platform a100 --api sycl --workload single-e [--events N]
+//! portarng repro --experiment fig3 [--quick] [--outdir results]
+//! portarng serve --batch-max 1048576 --demo-requests 32
+//! portarng check-artifacts                   # PJRT round-trip smoke test
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use portarng::burner::{run_burner_auto, run_burner_with_runtime, BurnerApi, BurnerConfig};
+use portarng::coordinator::RngService;
+use portarng::fastcalosim::{run_fastcalosim, FcsApi, Workload};
+use portarng::platform::PlatformId;
+use portarng::repro::ExperimentId;
+use portarng::runtime::PjrtRuntime;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", USAGE);
+        return ExitCode::FAILURE;
+    };
+    let opts = parse_opts(rest);
+    let result = match cmd.as_str() {
+        "platforms" => cmd_platforms(),
+        "burner" => cmd_burner(&opts),
+        "fastcalosim" => cmd_fastcalosim(&opts),
+        "repro" => cmd_repro(&opts),
+        "serve" => cmd_serve(&opts),
+        "check-artifacts" => cmd_check_artifacts(),
+        "--help" | "-h" | "help" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n{USAGE}").into()),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "portarng — cross-platform performance-portable RNG (paper reproduction)
+
+USAGE:
+  portarng platforms
+  portarng burner --platform <p> --api <native|sycl-buffer|sycl-usm|pjrt>
+                  --batch <n> [--iters <n>] [--range a,b]
+  portarng fastcalosim --platform <p> --api <native|sycl>
+                  --workload <single-e|ttbar> [--events <n>]
+  portarng repro --experiment <table1|fig2|fig3|fig4|table2|fig5|ablation-heuristic|all>
+                  [--quick] [--outdir <dir>]
+  portarng serve [--batch-max <n>] [--demo-requests <n>]
+  portarng check-artifacts
+
+Platforms: rome7742, i7-10875h, xeon5220, uhd630, vega56, a100";
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            map.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    map
+}
+
+fn need<'a>(opts: &'a HashMap<String, String>, key: &str) -> Result<&'a str, String> {
+    opts.get(key).map(String::as_str).ok_or_else(|| format!("missing --{key}"))
+}
+
+fn cmd_platforms() -> CliResult {
+    println!("{}", portarng::repro::table1().to_markdown());
+    Ok(())
+}
+
+fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
+    let platform = PlatformId::parse(need(opts, "platform")?)
+        .ok_or("unknown platform; see `portarng platforms`")?;
+    let api = BurnerApi::parse(need(opts, "api")?).ok_or("bad --api")?;
+    let batch: usize = need(opts, "batch")?.parse()?;
+    let iters: usize = opts.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(100);
+
+    let mut cfg = BurnerConfig::paper_default(platform, api, batch);
+    cfg.iterations = iters;
+    if let Some(range) = opts.get("range") {
+        let (a, b) = range.split_once(',').ok_or("bad --range, want a,b")?;
+        cfg.distr = portarng::rng::Distribution::uniform(a.parse()?, b.parse()?);
+    }
+
+    let report = if api == BurnerApi::Pjrt {
+        let rt = Arc::new(PjrtRuntime::discover()?);
+        run_burner_with_runtime(&cfg, Some(rt))?
+    } else {
+        run_burner_auto(&cfg)?
+    };
+    let s = portarng::metrics::Summary::of(&report.totals_ns);
+    println!(
+        "burner {} {} batch={} iters={}\n  total: {:.4} ms ± {:.4} (median {:.4})",
+        platform.token(),
+        api.token(),
+        batch,
+        iters,
+        s.mean / 1e6,
+        s.stddev / 1e6,
+        s.median / 1e6
+    );
+    let b = report.breakdown;
+    println!(
+        "  kernels: setup {:.4} ms | generate {:.4} ms (occ {:.2}, tpb {}) | \
+         transform {:.4} ms | h2d {:.4} | d2h {:.4}",
+        b.setup_ns as f64 / 1e6,
+        b.generate_ns as f64 / 1e6,
+        b.generate_occupancy,
+        b.tpb,
+        b.transform_ns as f64 / 1e6,
+        b.h2d_ns as f64 / 1e6,
+        b.d2h_ns as f64 / 1e6
+    );
+    if !report.sample.is_empty() {
+        println!("  sample: {:?}", &report.sample);
+    }
+    println!("  wall: {:.1} ms", report.wall_ns as f64 / 1e6);
+    Ok(())
+}
+
+fn cmd_fastcalosim(opts: &HashMap<String, String>) -> CliResult {
+    let platform = PlatformId::parse(need(opts, "platform")?).ok_or("unknown platform")?;
+    let api = FcsApi::parse(need(opts, "api")?).ok_or("bad --api (native|sycl)")?;
+    let events: Option<usize> = opts.get("events").map(|s| s.parse()).transpose()?;
+    let workload = match need(opts, "workload")? {
+        "single-e" => Workload::SingleElectron { events: events.unwrap_or(1000) },
+        "ttbar" => Workload::TTbar { events: events.unwrap_or(500) },
+        other => return Err(format!("unknown workload `{other}`").into()),
+    };
+    let r = run_fastcalosim(platform, api, workload, 2024)?;
+    println!(
+        "fastcalosim {} {} {}: {} events in {:.3} s (virtual), {:.2} ms/event",
+        platform.token(),
+        api.token(),
+        r.workload,
+        r.events,
+        r.total_ns as f64 / 1e9,
+        r.mean_event_ms()
+    );
+    println!(
+        "  hits {} | rns {} | tables {} | E_in {:.1} GeV -> E_dep {:.1} GeV | wall {:.1} ms",
+        r.hits,
+        r.rns,
+        r.tables_loaded,
+        r.energy_in,
+        r.energy_dep,
+        r.wall_ns as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_repro(opts: &HashMap<String, String>) -> CliResult {
+    let quick = opts.contains_key("quick");
+    let outdir = std::path::PathBuf::from(
+        opts.get("outdir").cloned().unwrap_or_else(|| "results".into()),
+    );
+    let which = need(opts, "experiment")?;
+    let ids: Vec<ExperimentId> = if which == "all" {
+        ExperimentId::ALL.to_vec()
+    } else {
+        vec![ExperimentId::parse(which).ok_or("unknown experiment id")?]
+    };
+    for id in ids {
+        for table in id.run(quick)? {
+            println!("{}", table.to_markdown());
+            let path = table.write_csv(&outdir)?;
+            println!("[wrote {}]\n", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
+    let batch_max: usize =
+        opts.get("batch-max").map(|s| s.parse()).transpose()?.unwrap_or(1 << 20);
+    let n_req: usize =
+        opts.get("demo-requests").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let svc = RngService::spawn(PlatformId::A100, 0x5EED, batch_max, 16);
+    let mut receivers = Vec::new();
+    for i in 0..n_req {
+        receivers.push(svc.generate(1000 + 137 * i, (0.0, 1.0)));
+    }
+    svc.flush();
+    let mut total = 0usize;
+    for rx in receivers {
+        total += rx.recv()??.len();
+    }
+    let stats = svc.shutdown()?;
+    println!(
+        "served {} requests / {} numbers in {} launches (batched)",
+        stats.requests, total, stats.launches
+    );
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> CliResult {
+    let rt = PjrtRuntime::discover()?;
+    println!("manifest: {} artifacts", rt.manifest().artifacts.len());
+    for name in rt.manifest().artifacts.keys() {
+        print!("  compiling {name} ... ");
+        rt.load(name)?;
+        println!("ok");
+    }
+    // Numeric round-trip on the smallest burner artifact.
+    let out = rt.run_burner("burner_uniform_4096", [1234, 5678], [0, 0], -2.0, 3.0)?;
+    let mut engine = portarng::rng::PhiloxEngine::new((5678u64 << 32) | 1234u64);
+    let mut want = vec![0f32; 4096];
+    portarng::rng::Engine::fill_uniform_f32(&mut engine, &mut want);
+    let max_err = out
+        .iter()
+        .zip(want.iter().map(|&u| -2.0 + u * 5.0))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("pjrt round-trip max |err| vs rust philox: {max_err:.2e}");
+    if max_err > 1e-6 {
+        return Err("PJRT output diverges from the Rust Philox reference".into());
+    }
+    println!("artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Performance-portability metrics (paper §6.1) and measurement statistics.
+
+mod stats;
+mod vavs;
+
+pub use stats::{ci95, mean, median, stddev, Summary};
+pub use vavs::{pennycook, vavs_efficiency};

@@ -1,0 +1,56 @@
+//! VAVS efficiency and the Pennycook performance-portability metric.
+//!
+//! Paper eq. (1): P(a, p; H) = |H| / sum_i 1/e_i if a is supported on all
+//! i in H, else 0. The paper's e_i is the *vendor-agnostic to
+//! vendor-specific* (VAVS) efficiency: achieved performance of the
+//! portability solution relative to the native solution on the same
+//! platform.
+
+/// VAVS efficiency: native time / portable time (in time domain, higher is
+/// better; > 1 means the portable path beat the native app).
+pub fn vavs_efficiency(t_native_ns: f64, t_portable_ns: f64) -> f64 {
+    assert!(t_native_ns > 0.0 && t_portable_ns > 0.0, "times must be positive");
+    t_native_ns / t_portable_ns
+}
+
+/// Pennycook P̄: harmonic mean of per-platform efficiencies; `None` in the
+/// efficiency list means "unsupported on that platform" -> P = 0.
+pub fn pennycook(efficiencies: &[Option<f64>]) -> f64 {
+    if efficiencies.is_empty() || efficiencies.iter().any(Option::is_none) {
+        return 0.0;
+    }
+    let inv_sum: f64 = efficiencies.iter().map(|e| 1.0 / e.unwrap()).sum();
+    efficiencies.len() as f64 / inv_sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_direction() {
+        assert_eq!(vavs_efficiency(100.0, 100.0), 1.0);
+        assert!(vavs_efficiency(100.0, 200.0) < 1.0); // portable slower
+        assert!(vavs_efficiency(200.0, 100.0) > 1.0); // portable faster
+    }
+
+    #[test]
+    fn pennycook_harmonic_mean() {
+        // Paper Table 2 row {Vega56, A100} buffer: e = {0.974.., 1.186..}
+        // combine to ~1.07.
+        let p = pennycook(&[Some(0.974), Some(1.186)]);
+        assert!((p - 1.0695).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn unsupported_platform_zeroes_p() {
+        assert_eq!(pennycook(&[Some(1.0), None]), 0.0);
+        assert_eq!(pennycook(&[]), 0.0);
+    }
+
+    #[test]
+    fn harmonic_mean_penalises_outliers() {
+        let p = pennycook(&[Some(1.0), Some(0.1)]);
+        assert!(p < 0.2, "p={p}"); // far below the arithmetic mean 0.55
+    }
+}

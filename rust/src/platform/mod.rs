@@ -1,0 +1,19 @@
+//! Platform descriptors and calibrated performance models.
+//!
+//! The paper's evaluation runs on six machines (Table 1). We cannot run on
+//! that hardware, so each platform is modelled by a [`PlatformSpec`] whose
+//! constants drive a **virtual clock**: every command executed through the
+//! mini-SYCL runtime or a native backend advances virtual time by a cost
+//! derived from the platform's latency/bandwidth/throughput figures. The
+//! paper's figures are *shapes over batch size*; those shapes come from the
+//! cost structure encoded here (see DESIGN.md §1 substitution table).
+
+mod noise;
+mod occupancy;
+mod perf_model;
+mod spec;
+
+pub use noise::{jitter, jitter_amp, jitter_from};
+pub use occupancy::{occupancy, OccupancyReport};
+pub use perf_model::{CommandCost, PerfModel, TransferDir};
+pub use spec::{PlatformId, PlatformKind, PlatformSpec};

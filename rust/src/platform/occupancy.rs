@@ -1,0 +1,96 @@
+//! GPU occupancy model for the Fig. 4(b) reproduction.
+//!
+//! The paper observes that the DPC++ SYCL runtime picks 1024
+//! threads-per-block on the A100 while the native CUDA code hardcodes 256,
+//! producing visibly different occupancy in the 10^2–10^4 batch region even
+//! though kernel *durations* are statistically identical. This model
+//! captures exactly that mechanism: achieved occupancy is the fraction of
+//! resident thread slots filled, with block granularity.
+
+use super::spec::{PlatformKind, PlatformSpec};
+
+/// Occupancy computation result.
+#[derive(Debug, Clone, Copy)]
+pub struct OccupancyReport {
+    /// Thread blocks launched.
+    pub blocks: u64,
+    /// Threads per block in effect.
+    pub tpb: u32,
+    /// Achieved occupancy in [0, 1]: resident threads / max resident.
+    pub achieved: f64,
+    /// Waves needed to drain the grid.
+    pub waves: u64,
+}
+
+/// Occupancy for a kernel of `items` work items at block size `tpb`.
+pub fn occupancy(items: u64, tpb: u32, spec: &PlatformSpec) -> OccupancyReport {
+    if spec.kind == PlatformKind::Cpu {
+        return OccupancyReport { blocks: 1, tpb: 1, achieved: 1.0, waves: 1 };
+    }
+    let tpb = tpb.max(1) as u64;
+    // Each thread handles 4 outputs (Philox4x32 block granularity).
+    let threads_needed = items.div_ceil(4).max(1);
+    let blocks = threads_needed.div_ceil(tpb);
+    let max_resident =
+        (spec.compute_units as u64) * (spec.max_threads_per_cu as u64);
+    // Block-granular residency: a partially filled block still occupies
+    // tpb-worth of scheduler slots.
+    let resident_threads = (blocks * tpb).min(max_resident);
+    let waves = (blocks * tpb).div_ceil(max_resident);
+    // In the final (or only) wave, achieved occupancy is the filled
+    // fraction; full waves run at 1.0. Weighted average:
+    let full_waves = waves.saturating_sub(1);
+    let tail_threads = blocks * tpb - full_waves * max_resident;
+    let tail_occ = tail_threads.min(max_resident) as f64 / max_resident as f64;
+    let achieved = if waves <= 1 {
+        resident_threads as f64 / max_resident as f64
+    } else {
+        (full_waves as f64 + tail_occ) / waves as f64
+    };
+    OccupancyReport { blocks, tpb: tpb as u32, achieved: achieved.min(1.0), waves }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+
+    #[test]
+    fn tiny_batch_low_occupancy() {
+        let spec = PlatformId::A100.spec();
+        let r = occupancy(100, 256, &spec);
+        assert!(r.achieved < 0.01, "achieved={}", r.achieved);
+        assert_eq!(r.blocks, 1);
+    }
+
+    #[test]
+    fn tpb_1024_fills_faster_than_256() {
+        // The paper's Fig 4b: SYCL (tpb=1024) shows a large occupancy jump
+        // between 10^2 and 10^4 relative to native (tpb=256).
+        let spec = PlatformId::A100.spec();
+        for items in [1_000u64, 10_000] {
+            let sycl = occupancy(items, 1024, &spec);
+            let native = occupancy(items, 256, &spec);
+            assert!(
+                sycl.achieved >= native.achieved,
+                "items={items}: sycl {} < native {}",
+                sycl.achieved,
+                native.achieved
+            );
+        }
+    }
+
+    #[test]
+    fn saturates_at_one() {
+        let spec = PlatformId::A100.spec();
+        let r = occupancy(100_000_000, 256, &spec);
+        assert!(r.achieved > 0.99);
+        assert!(r.waves > 1);
+    }
+
+    #[test]
+    fn cpu_is_always_full() {
+        let spec = PlatformId::Rome7742.spec();
+        assert_eq!(occupancy(10, 1, &spec).achieved, 1.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Virtual-clock cost model: maps commands to nanoseconds on a platform.
+
+use super::occupancy::occupancy;
+use super::spec::{PlatformKind, PlatformSpec};
+
+/// Host<->device transfer direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferDir {
+    /// Host to device.
+    H2D,
+    /// Device to host.
+    D2H,
+}
+
+/// Cost description attached to every command executed through the runtime.
+#[derive(Debug, Clone, Copy)]
+pub enum CommandCost {
+    /// A device kernel: bytes moved through device memory plus item count
+    /// for the compute-throughput term. `tpb` is the thread-block size in
+    /// effect (native apps hardcode it; the SYCL runtime chooses — Fig 4b).
+    Kernel {
+        /// Bytes read from device memory.
+        bytes_read: u64,
+        /// Bytes written to device memory.
+        bytes_written: u64,
+        /// Work items (numbers generated / transformed).
+        items: u64,
+        /// Thread-block size in effect.
+        tpb: u32,
+    },
+    /// Host<->device copy.
+    Transfer {
+        /// Payload size.
+        bytes: u64,
+        /// Direction.
+        dir: TransferDir,
+    },
+    /// Device memory allocation ({cuda,hip}Malloc).
+    Malloc,
+    /// Generator construction + seeding (curandCreateGenerator +
+    /// curandSetPseudoRandomGeneratorSeed).
+    GeneratorSetup,
+    /// Host-side computation of a known duration.
+    HostCompute {
+        /// Duration in ns.
+        ns: u64,
+    },
+}
+
+/// Performance model for one platform.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    spec: PlatformSpec,
+}
+
+impl PerfModel {
+    /// Model for `spec`.
+    pub fn new(spec: PlatformSpec) -> Self {
+        PerfModel { spec }
+    }
+
+    /// The platform spec behind this model.
+    pub fn spec(&self) -> &PlatformSpec {
+        &self.spec
+    }
+
+    /// Pure execution time of a command, excluding launch/callback
+    /// overheads (those belong to the runtime profile / native app model).
+    pub fn execution_ns(&self, cost: &CommandCost) -> u64 {
+        match *cost {
+            CommandCost::Kernel { bytes_read, bytes_written, items, tpb } => {
+                self.kernel_ns(bytes_read, bytes_written, items, tpb)
+            }
+            CommandCost::Transfer { bytes, dir: _ } => self.transfer_ns(bytes),
+            CommandCost::Malloc => self.spec.malloc_ns,
+            CommandCost::GeneratorSetup => self.spec.generator_setup_ns,
+            CommandCost::HostCompute { ns } => ns,
+        }
+    }
+
+    /// Kernel time: max of the bandwidth term and the throughput term,
+    /// divided by achieved occupancy, plus the launch pipeline latency.
+    pub fn kernel_ns(&self, bytes_read: u64, bytes_written: u64, items: u64, tpb: u32) -> u64 {
+        let s = &self.spec;
+        match s.kind {
+            PlatformKind::Cpu => {
+                // Host path: throughput-bound, no occupancy model.
+                let ns = items as f64 / s.host_gnum_per_s; // Gnum/s == num/ns
+                ns.ceil() as u64 + s.launch_latency_ns
+            }
+            _ => {
+                let bw_ns = (bytes_read + bytes_written) as f64 / s.mem_bw_gbps;
+                let compute_ns = items as f64 / s.rng_gnum_per_s;
+                let occ = occupancy(items, tpb, s).achieved.max(0.02);
+                let ns = bw_ns.max(compute_ns) / occ;
+                ns.ceil() as u64 + s.launch_latency_ns
+            }
+        }
+    }
+
+    /// Host<->device transfer time (zero for UMA platforms — the paper's
+    /// zero-copy point for the UHD 630).
+    pub fn transfer_ns(&self, bytes: u64) -> u64 {
+        if self.spec.uma {
+            return 0;
+        }
+        // Fixed DMA setup + payload over PCIe.
+        const DMA_SETUP_NS: u64 = 9_000;
+        DMA_SETUP_NS + (bytes as f64 / self.spec.pcie_gbps).ceil() as u64
+    }
+
+    /// Native-application per-call completion overhead (stream callback /
+    /// synchronize) — what the paper's native burner pays after each of its
+    /// kernels.
+    pub fn native_callback_ns(&self) -> u64 {
+        self.spec.native_callback_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+
+    fn model(p: PlatformId) -> PerfModel {
+        PerfModel::new(p.spec())
+    }
+
+    #[test]
+    fn kernel_time_monotonic_in_items() {
+        for p in PlatformId::ALL {
+            let m = model(p);
+            let tpb = m.spec().native_tpb;
+            let mut prev = 0;
+            for items in [1u64, 100, 10_000, 1_000_000, 100_000_000] {
+                let ns = m.kernel_ns(0, items * 4, items, tpb);
+                assert!(ns >= prev, "{:?} items={items}", p);
+                prev = ns;
+            }
+        }
+    }
+
+    #[test]
+    fn latency_floor_dominates_small_batches() {
+        let m = model(PlatformId::A100);
+        let small = m.kernel_ns(0, 4, 1, 256);
+        let smallish = m.kernel_ns(0, 400, 100, 256);
+        // Both dominated by launch latency: within 2x of each other.
+        assert!(smallish < small * 2);
+    }
+
+    #[test]
+    fn bandwidth_slope_dominates_large_batches() {
+        let m = model(PlatformId::A100);
+        let n1 = 100_000_000u64;
+        let t1 = m.kernel_ns(0, n1 * 4, n1, 256);
+        let t2 = m.kernel_ns(0, 2 * n1 * 4, 2 * n1, 256);
+        let ratio = t2 as f64 / t1 as f64;
+        assert!((ratio - 2.0).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn uma_transfers_are_free() {
+        assert_eq!(model(PlatformId::Uhd630).transfer_ns(1 << 30), 0);
+        assert!(model(PlatformId::A100).transfer_ns(1 << 30) > 0);
+    }
+
+    #[test]
+    fn pcie_transfer_dominates_large_d2h() {
+        // 4e8 bytes over 16 GB/s ~ 25 ms: the paper's large-batch regime.
+        let ns = model(PlatformId::A100).transfer_ns(400_000_000);
+        assert!((20e6..35e6).contains(&(ns as f64)), "ns={ns}");
+    }
+}

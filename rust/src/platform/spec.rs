@@ -1,0 +1,273 @@
+//! The six evaluation platforms (paper Table 1 + §6.2) with the hardware
+//! constants used by the performance model.
+
+/// Identifier for each platform in the paper's test fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformId {
+    /// AMD Rome 7742 (DGX A100 host, 16 of 128 cores used).
+    Rome7742,
+    /// Intel Core i7-10875H (8C/16T consumer CPU).
+    CoreI7_10875H,
+    /// Intel Xeon Gold 5220 (Vega host).
+    XeonGold5220,
+    /// Intel UHD Graphics 630 iGPU (UMA, zero-copy).
+    Uhd630,
+    /// MSI Radeon RX Vega 56.
+    Vega56,
+    /// NVIDIA A100 (DGX, one GPU).
+    A100,
+}
+
+/// Broad device class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    /// Host CPU device.
+    Cpu,
+    /// Integrated GPU sharing host memory (UMA).
+    IntegratedGpu,
+    /// Discrete GPU behind PCIe.
+    DiscreteGpu,
+}
+
+/// Hardware + software constants for one platform.
+///
+/// Latencies/bandwidths are calibrated to reproduce the *shape* of the
+/// paper's measurements (latency floor, bandwidth slope, crossovers), not
+/// absolute wall-clock — see EXPERIMENTS.md for the shape comparison.
+#[derive(Debug, Clone)]
+pub struct PlatformSpec {
+    /// Platform identity.
+    pub id: PlatformId,
+    /// Display name (Table 1).
+    pub name: &'static str,
+    /// Device class.
+    pub kind: PlatformKind,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Host<->device interconnect bandwidth, GB/s (ignored when `uma`).
+    pub pcie_gbps: f64,
+    /// Kernel-launch latency, ns.
+    pub launch_latency_ns: u64,
+    /// Completion-callback latency of the *native* runtime, ns
+    /// (CUDA stream callbacks vs the "nearly callback-free" HIP runtime —
+    /// paper §7).
+    pub native_callback_ns: u64,
+    /// Device-memory allocation latency, ns ({cuda,hip}Malloc analogue).
+    pub malloc_ns: u64,
+    /// Generator-construction cost, ns (curandCreateGenerator analogue).
+    pub generator_setup_ns: u64,
+    /// RNG kernel arithmetic throughput ceiling, Gnumbers/s (the kernel is
+    /// memory-bound on GPUs, so min(this, bw/4B) applies).
+    pub rng_gnum_per_s: f64,
+    /// Number of SMs / CUs / cores.
+    pub compute_units: u32,
+    /// Max resident threads per compute unit (occupancy model).
+    pub max_threads_per_cu: u32,
+    /// Thread-block size the native application hardcodes (paper: 256).
+    pub native_tpb: u32,
+    /// Unified memory architecture: zero-copy buffers (UHD 630).
+    pub uma: bool,
+    /// Host-side RNG throughput, Gnumbers/s (CPU platforms; also used for
+    /// host fallbacks).
+    pub host_gnum_per_s: f64,
+    /// Table 1 columns: OS / compiler / native RNG library.
+    pub os: &'static str,
+    /// Native compiler toolchain (Table 1).
+    pub compiler: &'static str,
+    /// Native RNG library (Table 1).
+    pub rng_library: &'static str,
+}
+
+impl PlatformId {
+    /// All platforms, Table 1 order.
+    pub const ALL: [PlatformId; 6] = [
+        PlatformId::Rome7742,
+        PlatformId::CoreI7_10875H,
+        PlatformId::XeonGold5220,
+        PlatformId::Uhd630,
+        PlatformId::Vega56,
+        PlatformId::A100,
+    ];
+
+    /// The platform's spec sheet.
+    pub fn spec(self) -> PlatformSpec {
+        match self {
+            PlatformId::Rome7742 => PlatformSpec {
+                id: self,
+                name: "AMD Rome 7742 (16 cores)",
+                kind: PlatformKind::Cpu,
+                mem_bw_gbps: 95.0,
+                pcie_gbps: f64::INFINITY,
+                launch_latency_ns: 400,
+                native_callback_ns: 100,
+                malloc_ns: 2_000,
+                generator_setup_ns: 6_000,
+                rng_gnum_per_s: 14.0,
+                compute_units: 16,
+                max_threads_per_cu: 2,
+                native_tpb: 1,
+                uma: true,
+                host_gnum_per_s: 14.0,
+                os: "OpenSUSE 15.0 / 4.12",
+                compiler: "GNU 8.2.0 + DPC++",
+                rng_library: "oneMKL (x86)",
+            },
+            PlatformId::CoreI7_10875H => PlatformSpec {
+                id: self,
+                name: "Intel Core i7-10875H",
+                kind: PlatformKind::Cpu,
+                mem_bw_gbps: 41.6,
+                pcie_gbps: f64::INFINITY,
+                launch_latency_ns: 400,
+                native_callback_ns: 100,
+                malloc_ns: 2_000,
+                generator_setup_ns: 6_000,
+                rng_gnum_per_s: 7.0,
+                compute_units: 8,
+                max_threads_per_cu: 2,
+                native_tpb: 1,
+                uma: true,
+                host_gnum_per_s: 7.0,
+                os: "Ubuntu 20.04 / 5.8.18",
+                compiler: "GNU 8.4.0 + DPC++",
+                rng_library: "oneMKL (x86)",
+            },
+            PlatformId::XeonGold5220 => PlatformSpec {
+                id: self,
+                name: "Intel Xeon Gold 5220",
+                kind: PlatformKind::Cpu,
+                mem_bw_gbps: 107.0,
+                pcie_gbps: f64::INFINITY,
+                launch_latency_ns: 400,
+                native_callback_ns: 100,
+                malloc_ns: 2_000,
+                generator_setup_ns: 6_000,
+                rng_gnum_per_s: 10.0,
+                compute_units: 18,
+                max_threads_per_cu: 2,
+                native_tpb: 1,
+                uma: true,
+                host_gnum_per_s: 10.0,
+                os: "CentOS 7 / 3.10.0",
+                compiler: "GNU + hipSYCL 0.9.0",
+                rng_library: "oneMKL (x86)",
+            },
+            PlatformId::Uhd630 => PlatformSpec {
+                id: self,
+                name: "Intel UHD Graphics 630",
+                kind: PlatformKind::IntegratedGpu,
+                mem_bw_gbps: 41.6, // shares host DDR4
+                pcie_gbps: f64::INFINITY,
+                launch_latency_ns: 18_000,
+                native_callback_ns: 4_000,
+                malloc_ns: 8_000,
+                generator_setup_ns: 30_000,
+                rng_gnum_per_s: 9.0,
+                compute_units: 24,
+                max_threads_per_cu: 448,
+                native_tpb: 256,
+                uma: true, // zero-copy buffers (paper §6.2)
+                host_gnum_per_s: 7.0,
+                os: "Ubuntu 20.04 / 5.8.18",
+                compiler: "DPC++ (21.11.19310)",
+                rng_library: "oneMKL (Intel GPU)",
+            },
+            PlatformId::Vega56 => PlatformSpec {
+                id: self,
+                name: "MSI Radeon RX Vega 56",
+                kind: PlatformKind::DiscreteGpu,
+                mem_bw_gbps: 410.0,
+                pcie_gbps: 11.0,
+                launch_latency_ns: 12_000,
+                // "The nearly callback-free hipRAND runtime therefore
+                // offers higher task throughput" (§7): the native HIP app
+                // barely pays per-kernel completion costs.
+                native_callback_ns: 2_000,
+                malloc_ns: 40_000,
+                generator_setup_ns: 180_000,
+                rng_gnum_per_s: 60.0,
+                compute_units: 56,
+                max_threads_per_cu: 2_560,
+                native_tpb: 256,
+                uma: false,
+                host_gnum_per_s: 10.0,
+                os: "CentOS 7 / 3.10.0",
+                compiler: "HIP 4.0.0 + hipSYCL 0.9.0",
+                rng_library: "hipRAND 4.0.0",
+            },
+            PlatformId::A100 => PlatformSpec {
+                id: self,
+                name: "NVIDIA A100",
+                kind: PlatformKind::DiscreteGpu,
+                mem_bw_gbps: 1_555.0,
+                pcie_gbps: 16.0,
+                launch_latency_ns: 8_000,
+                native_callback_ns: 10_000,
+                malloc_ns: 60_000,
+                generator_setup_ns: 250_000,
+                rng_gnum_per_s: 220.0,
+                compute_units: 108,
+                max_threads_per_cu: 2_048,
+                native_tpb: 256,
+                uma: false,
+                host_gnum_per_s: 14.0,
+                os: "OpenSUSE 15.0 / 4.12",
+                compiler: "CUDA 10.2.89 + DPC++",
+                rng_library: "cuRAND 10.2.89",
+            },
+        }
+    }
+
+    /// Short token for CLI / CSV use.
+    pub fn token(self) -> &'static str {
+        match self {
+            PlatformId::Rome7742 => "rome7742",
+            PlatformId::CoreI7_10875H => "i7-10875h",
+            PlatformId::XeonGold5220 => "xeon5220",
+            PlatformId::Uhd630 => "uhd630",
+            PlatformId::Vega56 => "vega56",
+            PlatformId::A100 => "a100",
+        }
+    }
+
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Option<PlatformId> {
+        PlatformId::ALL.iter().copied().find(|p| p.token() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_roundtrip() {
+        for p in PlatformId::ALL {
+            assert_eq!(PlatformId::parse(p.token()), Some(p));
+        }
+        assert_eq!(PlatformId::parse("tpu"), None);
+    }
+
+    #[test]
+    fn discrete_gpus_are_not_uma() {
+        for p in PlatformId::ALL {
+            let s = p.spec();
+            match s.kind {
+                PlatformKind::DiscreteGpu => assert!(!s.uma, "{:?}", p),
+                PlatformKind::IntegratedGpu => assert!(s.uma, "{:?}", p),
+                PlatformKind::Cpu => assert!(s.uma, "{:?}", p),
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_rng_is_memory_bound() {
+        // Sanity: the model must put GPU RNG in the memory-bound regime,
+        // as the paper asserts ("memory-bound nature of RNG operations").
+        for p in [PlatformId::A100, PlatformId::Vega56] {
+            let s = p.spec();
+            assert!(s.rng_gnum_per_s * 4.0 < s.mem_bw_gbps,
+                "{:?} would be compute-bound", p);
+        }
+    }
+}

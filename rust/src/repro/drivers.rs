@@ -1,0 +1,362 @@
+//! Drivers that regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §3 per-experiment index).
+//!
+//! Each driver returns a [`ResultTable`] with the same rows/series the
+//! paper plots; `portarng repro --experiment <id>` prints/saves them and
+//! EXPERIMENTS.md records the shape comparison.
+
+use crate::burner::{run_burner_auto, BurnerApi, BurnerConfig};
+use crate::coordinator::BackendHeuristic;
+use crate::error::Result;
+use crate::fastcalosim::{run_fastcalosim, FcsApi, Workload};
+use crate::metrics::{mean, pennycook, stddev, vavs_efficiency};
+use crate::platform::PlatformId;
+
+use super::table::ResultTable;
+
+/// The paper's batch-size grid: 1 — 10^8, decades.
+pub const PAPER_BATCHES: [usize; 9] =
+    [1, 10, 100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000];
+
+/// Iterations per point (paper: 100; reduce with `quick` for CI).
+fn iters(quick: bool) -> usize {
+    if quick {
+        10
+    } else {
+        100
+    }
+}
+
+/// Known experiment ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExperimentId {
+    /// Platform/software inventory.
+    Table1,
+    /// CPU + iGPU burner, Buffer vs USM.
+    Fig2,
+    /// Vega/A100 burner, SYCL vs native.
+    Fig3,
+    /// A100 per-kernel breakdown + occupancy.
+    Fig4,
+    /// VAVS performance portability.
+    Table2,
+    /// FastCaloSim runtimes.
+    Fig5,
+    /// §8 heuristic backend selection (our extension).
+    AblationHeuristic,
+}
+
+impl ExperimentId {
+    /// Parse a CLI token.
+    pub fn parse(s: &str) -> Option<ExperimentId> {
+        match s {
+            "table1" => Some(ExperimentId::Table1),
+            "fig2" => Some(ExperimentId::Fig2),
+            "fig3" => Some(ExperimentId::Fig3),
+            "fig4" => Some(ExperimentId::Fig4),
+            "table2" => Some(ExperimentId::Table2),
+            "fig5" => Some(ExperimentId::Fig5),
+            "ablation-heuristic" => Some(ExperimentId::AblationHeuristic),
+            _ => None,
+        }
+    }
+
+    /// All ids.
+    pub const ALL: [ExperimentId; 7] = [
+        ExperimentId::Table1,
+        ExperimentId::Fig2,
+        ExperimentId::Fig3,
+        ExperimentId::Fig4,
+        ExperimentId::Table2,
+        ExperimentId::Fig5,
+        ExperimentId::AblationHeuristic,
+    ];
+
+    /// Run the driver.
+    pub fn run(self, quick: bool) -> Result<Vec<ResultTable>> {
+        match self {
+            ExperimentId::Table1 => Ok(vec![table1()]),
+            ExperimentId::Fig2 => fig2(quick),
+            ExperimentId::Fig3 => fig3(quick),
+            ExperimentId::Fig4 => fig4(quick),
+            ExperimentId::Table2 => table2(quick),
+            ExperimentId::Fig5 => fig5(quick),
+            ExperimentId::AblationHeuristic => ablation_heuristic(),
+        }
+    }
+}
+
+/// Table 1: driver and software versions per platform.
+pub fn table1() -> ResultTable {
+    let mut t = ResultTable::new(
+        "table1",
+        "Platform and software inventory (simulated fleet)",
+        &["platform", "kind", "os_kernel", "compiler", "rng_library", "mem_bw_gbps", "uma"],
+    );
+    for p in PlatformId::ALL {
+        let s = p.spec();
+        t.push(vec![
+            s.name.to_string(),
+            format!("{:?}", s.kind),
+            s.os.to_string(),
+            s.compiler.to_string(),
+            s.rng_library.to_string(),
+            format!("{:.1}", s.mem_bw_gbps),
+            s.uma.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The burner's distribution in the figures: a non-unit range so the
+/// range-transformation kernel is on the path ("the pseudorandom output
+/// sequence is generated and its range is transformed" — §5.1 step 4).
+fn paper_distr() -> crate::rng::Distribution {
+    crate::rng::Distribution::uniform(-1.0, 1.0)
+}
+
+fn burner_point(
+    platform: PlatformId,
+    api: BurnerApi,
+    batch: usize,
+    iterations: usize,
+) -> Result<(f64, f64)> {
+    let mut cfg = BurnerConfig::paper_default(platform, api, batch);
+    cfg.distr = paper_distr();
+    cfg.iterations = iterations;
+    let r = run_burner_auto(&cfg)?;
+    Ok((mean(&r.totals_ns) / 1e6, stddev(&r.totals_ns) / 1e6))
+}
+
+/// Fig. 2: burner on the two x86 CPUs + the iGPU, Buffer (a) vs USM (b).
+pub fn fig2(quick: bool) -> Result<Vec<ResultTable>> {
+    let platforms = [PlatformId::Rome7742, PlatformId::CoreI7_10875H, PlatformId::Uhd630];
+    let mut t = ResultTable::new(
+        "fig2",
+        "RNG burner total FP32 generation time: CPUs + iGPU, Buffer vs USM",
+        &["platform", "api", "batch", "mean_ms", "std_ms"],
+    );
+    for p in platforms {
+        for api in [BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+            for batch in PAPER_BATCHES {
+                let (m, s) = burner_point(p, api, batch, iters(quick))?;
+                t.push(vec![
+                    p.token().into(),
+                    api.token().into(),
+                    batch.to_string(),
+                    format!("{m:.4}"),
+                    format!("{s:.4}"),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 3: burner on Vega 56 (a) and A100 (b): SYCL buffer/USM vs native.
+pub fn fig3(quick: bool) -> Result<Vec<ResultTable>> {
+    let mut t = ResultTable::new(
+        "fig3",
+        "RNG burner: SYCL Buffer/USM vs native on the discrete GPUs",
+        &["platform", "api", "batch", "mean_ms", "std_ms"],
+    );
+    for p in [PlatformId::Vega56, PlatformId::A100] {
+        for api in [BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+            for batch in PAPER_BATCHES {
+                let (m, s) = burner_point(p, api, batch, iters(quick))?;
+                t.push(vec![
+                    p.token().into(),
+                    api.token().into(),
+                    batch.to_string(),
+                    format!("{m:.4}"),
+                    format!("{s:.4}"),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 4: per-kernel duration (a) and occupancy (b) on the A100.
+pub fn fig4(quick: bool) -> Result<Vec<ResultTable>> {
+    let mut dur = ResultTable::new(
+        "fig4a",
+        "A100 per-kernel durations (seed/generate/transform)",
+        &["api", "batch", "setup_ms", "generate_ms", "transform_ms", "d2h_ms"],
+    );
+    let mut occ = ResultTable::new(
+        "fig4b",
+        "A100 kernel occupancy (native tpb=256 vs SYCL tpb=1024)",
+        &["api", "batch", "tpb", "generate_occupancy", "transform_occupancy"],
+    );
+    let batches = [100usize, 10_000, 1_000_000, 100_000_000];
+    for api in [BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+        for batch in batches {
+            let mut cfg = BurnerConfig::paper_default(PlatformId::A100, api, batch);
+            cfg.distr = paper_distr();
+            cfg.iterations = iters(quick);
+            let r = run_burner_auto(&cfg)?;
+            let b = r.breakdown;
+            dur.push(vec![
+                api.token().into(),
+                batch.to_string(),
+                format!("{:.4}", b.setup_ns as f64 / 1e6),
+                format!("{:.4}", b.generate_ns as f64 / 1e6),
+                format!("{:.4}", b.transform_ns as f64 / 1e6),
+                format!("{:.4}", b.d2h_ns as f64 / 1e6),
+            ]);
+            occ.push(vec![
+                api.token().into(),
+                batch.to_string(),
+                b.tpb.to_string(),
+                format!("{:.4}", b.generate_occupancy),
+                format!("{:.4}", b.transform_occupancy),
+            ]);
+        }
+    }
+    Ok(vec![dur, occ])
+}
+
+/// Table 2: VAVS performance portability over the Fig. 3/4 data.
+pub fn table2(quick: bool) -> Result<Vec<ResultTable>> {
+    // Efficiency per platform/api: harmonic-mean VAVS over the batch grid
+    // (small batches weigh in exactly as the paper's kernel-level data do).
+    let eff = |p: PlatformId, api: BurnerApi| -> Result<f64> {
+        let mut effs = Vec::new();
+        for batch in PAPER_BATCHES {
+            let (native, _) = burner_point(p, BurnerApi::Native, batch, iters(quick))?;
+            let (sycl, _) = burner_point(p, api, batch, iters(quick))?;
+            effs.push(Some(vavs_efficiency(native, sycl)));
+        }
+        Ok(pennycook(&effs))
+    };
+    let e_vega_buf = eff(PlatformId::Vega56, BurnerApi::SyclBuffer)?;
+    let e_vega_usm = eff(PlatformId::Vega56, BurnerApi::SyclUsm)?;
+    let e_a100_buf = eff(PlatformId::A100, BurnerApi::SyclBuffer)?;
+    let e_a100_usm = eff(PlatformId::A100, BurnerApi::SyclUsm)?;
+
+    let mut t = ResultTable::new(
+        "table2",
+        "Performance portability (VAVS metric, paper eq. 1)",
+        &["H", "P_buffer", "P_usm", "P_mean"],
+    );
+    let p_both_buf = pennycook(&[Some(e_vega_buf), Some(e_a100_buf)]);
+    let p_both_usm = pennycook(&[Some(e_vega_usm), Some(e_a100_usm)]);
+    let p_both_mean = pennycook(&[
+        Some(e_vega_buf),
+        Some(e_a100_buf),
+        Some(e_vega_usm),
+        Some(e_a100_usm),
+    ]);
+    t.push(vec![
+        "{Vega 56, A100}".into(),
+        format!("{p_both_buf:.3}"),
+        format!("{p_both_usm:.3}"),
+        format!("{p_both_mean:.3}"),
+    ]);
+    t.push(vec![
+        "{Vega 56}".into(),
+        format!("{e_vega_buf:.3}"),
+        format!("{e_vega_usm:.3}"),
+        format!("{:.3}", pennycook(&[Some(e_vega_buf), Some(e_vega_usm)])),
+    ]);
+    t.push(vec![
+        "{A100}".into(),
+        format!("{e_a100_buf:.3}"),
+        format!("{e_a100_usm:.3}"),
+        format!("{:.3}", pennycook(&[Some(e_a100_buf), Some(e_a100_usm)])),
+    ]);
+    Ok(vec![t])
+}
+
+/// Fig. 5: FastCaloSim run-times across platforms, native vs SYCL, for
+/// single-electron (a) and t t̄ (b) samples.
+pub fn fig5(quick: bool) -> Result<Vec<ResultTable>> {
+    let platforms = [
+        PlatformId::Rome7742,
+        PlatformId::CoreI7_10875H,
+        PlatformId::Vega56,
+        PlatformId::A100,
+    ];
+    let (n_se, n_tt, runs) = if quick { (50, 10, 3) } else { (1000, 500, 10) };
+    let mut t = ResultTable::new(
+        "fig5",
+        "FastCaloSim total run-time (s): native vs SYCL port",
+        &["workload", "platform", "api", "mean_s", "std_s", "hits", "rns", "tables"],
+    );
+    for (workload, label) in [
+        (Workload::SingleElectron { events: n_se }, "single-e"),
+        (Workload::TTbar { events: n_tt }, "ttbar"),
+    ] {
+        for p in platforms {
+            for api in [FcsApi::Native, FcsApi::Sycl] {
+                // No native HIP port exists for the Radeon (paper §7).
+                if api == FcsApi::Native && p == PlatformId::Vega56 {
+                    continue;
+                }
+                let mut totals = Vec::new();
+                let mut last = None;
+                for run in 0..runs {
+                    let r = run_fastcalosim(p, api, workload, 1000 + run as u64)?;
+                    totals.push(r.total_ns as f64 / 1e9);
+                    last = Some(r);
+                }
+                let last = last.unwrap();
+                t.push(vec![
+                    label.into(),
+                    p.token().into(),
+                    api.token().into(),
+                    format!("{:.3}", mean(&totals)),
+                    format!("{:.3}", stddev(&totals)),
+                    last.hits.to_string(),
+                    last.rns.to_string(),
+                    last.tables_loaded.to_string(),
+                ]);
+            }
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Ablation (paper §8): heuristic host/device selection vs fixed backends.
+pub fn ablation_heuristic() -> Result<Vec<ResultTable>> {
+    let h = BackendHeuristic::calibrate(PlatformId::A100, PlatformId::Rome7742);
+    let mut t = ResultTable::new(
+        "ablation-heuristic",
+        format!("Heuristic backend selection (crossover = {} numbers)", h.crossover).as_str(),
+        &["batch", "host_ms", "device_ms", "heuristic_ms", "heuristic_picks"],
+    );
+    for batch in PAPER_BATCHES {
+        let (host_ms, _) = burner_point(PlatformId::Rome7742, BurnerApi::SyclBuffer, batch, 10)?;
+        let (dev_ms, _) = burner_point(PlatformId::A100, BurnerApi::SyclBuffer, batch, 10)?;
+        let pick = h.select(batch);
+        let heuristic_ms = if pick == PlatformId::A100 { dev_ms } else { host_ms };
+        t.push(vec![
+            batch.to_string(),
+            format!("{host_ms:.4}"),
+            format!("{dev_ms:.4}"),
+            format!("{heuristic_ms:.4}"),
+            pick.token().into(),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lists_all_platforms() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 6);
+        assert!(t.to_markdown().contains("A100"));
+    }
+
+    #[test]
+    fn experiment_id_parsing() {
+        assert_eq!(ExperimentId::parse("fig3"), Some(ExperimentId::Fig3));
+        assert_eq!(ExperimentId::parse("bogus"), None);
+        assert_eq!(ExperimentId::ALL.len(), 7);
+    }
+}

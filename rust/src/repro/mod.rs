@@ -1,0 +1,9 @@
+//! Experiment drivers regenerating every table and figure (DESIGN.md §3).
+
+mod drivers;
+mod table;
+
+pub use drivers::{
+    ablation_heuristic, fig2, fig3, fig4, fig5, table1, table2, ExperimentId, PAPER_BATCHES,
+};
+pub use table::ResultTable;

@@ -1,0 +1,98 @@
+//! Result tables: the common output container for experiment drivers.
+
+use std::fmt::Write as _;
+
+/// A rectangular result table with typed-as-string cells.
+#[derive(Debug, Clone)]
+pub struct ResultTable {
+    /// Experiment id ("fig3", "table2", ...).
+    pub id: String,
+    /// Caption.
+    pub title: String,
+    /// Column names.
+    pub headers: Vec<String>,
+    /// Rows.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl ResultTable {
+    /// Empty table.
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> ResultTable {
+        ResultTable {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// CSV rendering.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {} — {}\n", self.id, self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(out, "|{}|", "---|".repeat(self.headers.len()));
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    /// Write CSV to `results/<id>.csv` under `dir`.
+    pub fn write_csv(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+
+    /// Find a cell by (column name, row predicate on another column).
+    pub fn cell(&self, where_col: &str, equals: &str, get_col: &str) -> Option<&str> {
+        let wi = self.headers.iter().position(|h| h == where_col)?;
+        let gi = self.headers.iter().position(|h| h == get_col)?;
+        self.rows
+            .iter()
+            .find(|r| r[wi] == equals)
+            .map(|r| r[gi].as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_lookup() {
+        let mut t = ResultTable::new("figX", "demo", &["k", "v"]);
+        t.push(vec!["a".into(), "1".into()]);
+        t.push(vec!["b".into(), "2".into()]);
+        assert!(t.to_csv().starts_with("k,v\na,1\n"));
+        assert!(t.to_markdown().contains("| a | 1 |"));
+        assert_eq!(t.cell("k", "b", "v"), Some("2"));
+        assert_eq!(t.cell("k", "zzz", "v"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = ResultTable::new("x", "y", &["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+}

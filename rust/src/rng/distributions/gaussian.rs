@@ -1,0 +1,97 @@
+//! Gaussian sampling kernels: Box-Muller (all backends) and inverse-CDF
+//! (oneMKL-native backends only — paper §4.1).
+
+/// Box-Muller: two uniforms in [0,1) -> two independent N(0,1) draws.
+///
+/// `u1` is reflected to (0,1] before the log, matching the Pallas kernel
+/// and the jnp oracle bit-for-bit at the f32 level.
+#[inline]
+pub fn box_muller_pair(u1: f32, u2: f32) -> (f32, f32) {
+    let r = (-2.0f32 * (1.0 - u1).ln()).sqrt();
+    let theta = 2.0 * std::f32::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Acklam's rational approximation of the standard normal inverse CDF
+/// (|relative error| < 1.15e-9 over (0,1)).
+pub fn gaussian_icdf(p: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&p));
+    // Clamp away from {0,1}: engines emit [0,1) so p=1 cannot occur, and
+    // p=0 maps to the smallest representable draw's quantile.
+    let p = p.clamp(1e-300, 1.0 - 1e-16);
+
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn icdf_known_quantiles() {
+        assert!((gaussian_icdf(0.5)).abs() < 1e-9);
+        assert!((gaussian_icdf(0.975) - 1.959_964).abs() < 1e-4);
+        assert!((gaussian_icdf(0.025) + 1.959_964).abs() < 1e-4);
+        assert!((gaussian_icdf(0.8413) - 0.9998).abs() < 1e-2); // ~ +1 sigma
+    }
+
+    #[test]
+    fn icdf_symmetry() {
+        for p in [0.001, 0.01, 0.1, 0.3, 0.49] {
+            assert!((gaussian_icdf(p) + gaussian_icdf(1.0 - p)).abs() < 1e-8, "p={p}");
+        }
+    }
+
+    #[test]
+    fn box_muller_finite_and_centered() {
+        // u1=0 must not produce inf: log argument is 1-u1 = 1.
+        let (z0, z1) = box_muller_pair(0.0, 0.0);
+        assert!(z0.is_finite() && z1.is_finite());
+        let (z0, _) = box_muller_pair(0.9999999, 0.25);
+        assert!(z0.is_finite());
+    }
+}

@@ -1,0 +1,317 @@
+//! Distribution layer on top of raw u32 engines.
+//!
+//! Mirrors the oneMKL RNG interface: distribution objects carry their
+//! parameters *and* a generation-method tag. The method asymmetry is the
+//! paper's §4.1 point: oneMKL supports both Box-Muller and ICDF methods,
+//! while cuRAND/hipRAND expose ICDF only for quasirandom engines — so of
+//! the 36 oneMKL generate entry points only 20 are implementable on the
+//! cuRAND/hipRAND backends.
+
+mod gaussian;
+mod poisson;
+
+pub use gaussian::{box_muller_pair, gaussian_icdf};
+pub use poisson::poisson_knuth;
+
+use crate::rng::engines::Engine;
+use crate::rng::{u32_to_uniform_f32, u32x2_to_uniform_f64};
+
+/// Generation method for uniform outputs (oneMKL `uniform_method`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum UniformMethod {
+    /// Plain scale/offset of the canonical [0,1) draw.
+    #[default]
+    Standard,
+    /// Extra-accurate endpoint handling (maps to the same arithmetic here).
+    Accurate,
+}
+
+/// Generation method for gaussian-family outputs (oneMKL `gaussian_method`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum GaussianMethod {
+    /// Box-Muller pairs — supported by every backend.
+    #[default]
+    BoxMuller,
+    /// Inverse-CDF — oneMKL-native backends only (paper §4.1): the
+    /// cuRAND/hipRAND backends reject this with `Error::Unsupported`.
+    Icdf,
+}
+
+/// A distribution request, oneMKL-style.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Distribution {
+    /// Uniform in `[a, b)` — the paper's benchmark distribution.
+    Uniform { a: f32, b: f32, method: UniformMethod },
+    /// Gaussian N(mean, stddev).
+    Gaussian { mean: f32, stddev: f32, method: GaussianMethod },
+    /// Lognormal: exp of N(m, s).
+    Lognormal { m: f32, s: f32, method: GaussianMethod },
+    /// Exponential with rate `lambda`.
+    Exponential { lambda: f32 },
+    /// Poisson with mean `lambda` (integer output reinterpreted as f32).
+    Poisson { lambda: f64 },
+    /// Raw 32 bits.
+    Bits,
+}
+
+impl Distribution {
+    /// Convenience constructor for the benchmark distribution.
+    pub fn uniform(a: f32, b: f32) -> Self {
+        Distribution::Uniform { a, b, method: UniformMethod::Standard }
+    }
+
+    /// Convenience constructor: standard normal scaled.
+    pub fn gaussian(mean: f32, stddev: f32) -> Self {
+        Distribution::Gaussian { mean, stddev, method: GaussianMethod::BoxMuller }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform { .. } => "uniform",
+            Distribution::Gaussian { .. } => "gaussian",
+            Distribution::Lognormal { .. } => "lognormal",
+            Distribution::Exponential { .. } => "exponential",
+            Distribution::Poisson { .. } => "poisson",
+            Distribution::Bits => "bits",
+        }
+    }
+
+    /// Whether the vendor-native generation step produces only the
+    /// canonical [0,1)/N(0,1) sequence, requiring the oneMKL-side range
+    /// transformation kernel afterwards (paper §4.3: cuRAND/hipRAND have
+    /// "no concept of a range").
+    pub fn requires_range_transform(&self) -> bool {
+        match self {
+            Distribution::Uniform { a, b, .. } => *a != 0.0 || *b != 1.0,
+            Distribution::Gaussian { mean, stddev, .. } => *mean != 0.0 || *stddev != 1.0,
+            Distribution::Lognormal { .. } => false,
+            Distribution::Exponential { .. } => false,
+            Distribution::Poisson { .. } => false,
+            Distribution::Bits => false,
+        }
+    }
+
+    /// Whether the distribution uses an ICDF method.
+    pub fn uses_icdf(&self) -> bool {
+        matches!(
+            self,
+            Distribution::Gaussian { method: GaussianMethod::Icdf, .. }
+                | Distribution::Lognormal { method: GaussianMethod::Icdf, .. }
+        )
+    }
+
+    /// Host-side sampling: fill `out` from `engine`. This is the reference
+    /// path used by CPU backends and by tests to validate device paths.
+    pub fn sample_f32(&self, engine: &mut dyn Engine, out: &mut [f32]) {
+        match *self {
+            Distribution::Uniform { a, b, .. } => {
+                engine.fill_uniform_f32(out);
+                if self.requires_range_transform() {
+                    crate::rng::range_transform::range_transform_inplace(out, a, b);
+                }
+            }
+            Distribution::Gaussian { mean, stddev, method } => {
+                sample_gaussian(engine, out, mean, stddev, method, false);
+            }
+            Distribution::Lognormal { m, s, method } => {
+                sample_gaussian(engine, out, m, s, method, true);
+            }
+            Distribution::Exponential { lambda } => {
+                engine.fill_uniform_f32(out);
+                for x in out.iter_mut() {
+                    // -ln(1-u)/lambda, u in [0,1) so the argument is (0,1].
+                    *x = -(1.0 - *x).ln() / lambda;
+                }
+            }
+            Distribution::Poisson { lambda } => {
+                for x in out.iter_mut() {
+                    *x = poisson_knuth(engine, lambda) as f32;
+                }
+            }
+            Distribution::Bits => {
+                let mut raw = vec![0u32; out.len()];
+                engine.fill_u32(&mut raw);
+                for (dst, &src) in out.iter_mut().zip(raw.iter()) {
+                    *dst = f32::from_bits(src);
+                }
+            }
+        }
+    }
+
+    /// Host-side f64 sampling (uniform/gaussian only — the f64 entry points
+    /// of the 36-function API).
+    pub fn sample_f64(&self, engine: &mut dyn Engine, out: &mut [f64]) {
+        match *self {
+            Distribution::Uniform { a, b, .. } => {
+                let mut raw = vec![0u32; out.len() * 2];
+                engine.fill_u32(&mut raw);
+                for (i, dst) in out.iter_mut().enumerate() {
+                    let u = u32x2_to_uniform_f64(raw[2 * i], raw[2 * i + 1]);
+                    *dst = a as f64 + u * (b as f64 - a as f64);
+                }
+            }
+            Distribution::Gaussian { mean, stddev, method } => {
+                let mut raw = vec![0u32; out.len() * 2 + 2];
+                engine.fill_u32(&mut raw);
+                let mut i = 0;
+                for pair in out.chunks_mut(2) {
+                    let u1 = u32_to_uniform_f32(raw[i]) as f64;
+                    let u2 = u32_to_uniform_f32(raw[i + 1]) as f64;
+                    i += 2;
+                    let (z0, z1) = if method == GaussianMethod::Icdf {
+                        (gaussian_icdf(u1), gaussian_icdf(u2))
+                    } else {
+                        let r = (-2.0 * (1.0 - u1).ln()).sqrt();
+                        let th = 2.0 * std::f64::consts::PI * u2;
+                        (r * th.cos(), r * th.sin())
+                    };
+                    pair[0] = mean as f64 + stddev as f64 * z0;
+                    if pair.len() > 1 {
+                        pair[1] = mean as f64 + stddev as f64 * z1;
+                    }
+                }
+            }
+            _ => {
+                let mut tmp = vec![0f32; out.len()];
+                self.sample_f32(engine, &mut tmp);
+                for (dst, &src) in out.iter_mut().zip(tmp.iter()) {
+                    *dst = src as f64;
+                }
+            }
+        }
+    }
+}
+
+fn sample_gaussian(
+    engine: &mut dyn Engine,
+    out: &mut [f32],
+    p0: f32,
+    p1: f32,
+    method: GaussianMethod,
+    log_transform: bool,
+) {
+    let n = out.len();
+    let n_u = n + (n & 1);
+    let mut u = vec![0f32; n_u];
+    engine.fill_uniform_f32(&mut u);
+    match method {
+        GaussianMethod::BoxMuller => {
+            for i in (0..n).step_by(2) {
+                let (z0, z1) = box_muller_pair(u[i], u[i + 1]);
+                out[i] = p0 + p1 * z0;
+                if i + 1 < n {
+                    out[i + 1] = p0 + p1 * z1;
+                }
+            }
+        }
+        GaussianMethod::Icdf => {
+            for i in 0..n {
+                out[i] = p0 + p1 * gaussian_icdf(u[i] as f64) as f32;
+            }
+        }
+    }
+    if log_transform {
+        for x in out.iter_mut() {
+            *x = x.exp();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::engines::PhiloxEngine;
+
+    fn sample(d: Distribution, n: usize) -> Vec<f32> {
+        let mut e = PhiloxEngine::new(2024);
+        let mut out = vec![0f32; n];
+        d.sample_f32(&mut e, &mut out);
+        out
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let out = sample(Distribution::uniform(-3.0, 5.0), 100_000);
+        assert!(out.iter().all(|&x| (-3.0..5.0).contains(&x)));
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments_both_methods() {
+        for method in [GaussianMethod::BoxMuller, GaussianMethod::Icdf] {
+            let out = sample(
+                Distribution::Gaussian { mean: 2.0, stddev: 3.0, method },
+                100_000,
+            );
+            let n = out.len() as f32;
+            let mean = out.iter().sum::<f32>() / n;
+            let var = out.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+            assert!((mean - 2.0).abs() < 0.05, "{method:?} mean={mean}");
+            assert!((var.sqrt() - 3.0).abs() < 0.05, "{method:?} std={}", var.sqrt());
+        }
+    }
+
+    #[test]
+    fn methods_agree_in_distribution() {
+        // Same distribution, different methods: compare quartiles.
+        let a = sample(Distribution::Gaussian { mean: 0.0, stddev: 1.0, method: GaussianMethod::BoxMuller }, 200_000);
+        let b = sample(Distribution::Gaussian { mean: 0.0, stddev: 1.0, method: GaussianMethod::Icdf }, 200_000);
+        let q = |v: &[f32], p: f64| {
+            let mut s = v.to_vec();
+            s.sort_by(f32::total_cmp);
+            s[(p * (s.len() - 1) as f64) as usize]
+        };
+        for p in [0.1, 0.25, 0.5, 0.75, 0.9] {
+            assert!((q(&a, p) - q(&b, p)).abs() < 0.02, "quartile {p}");
+        }
+    }
+
+    #[test]
+    fn lognormal_is_exp_gaussian() {
+        let out = sample(
+            Distribution::Lognormal { m: 0.0, s: 0.5, method: GaussianMethod::BoxMuller },
+            50_000,
+        );
+        assert!(out.iter().all(|&x| x > 0.0));
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        // E[lognormal(0, 0.5)] = exp(0.125) ~ 1.133
+        assert!((mean - 1.133).abs() < 0.03, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let out = sample(Distribution::Exponential { lambda: 2.0 }, 100_000);
+        assert!(out.iter().all(|&x| x >= 0.0));
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_moments() {
+        let out = sample(Distribution::Poisson { lambda: 4.0 }, 20_000);
+        let mean = out.iter().sum::<f32>() / out.len() as f32;
+        let var = out.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / out.len() as f32;
+        assert!((mean - 4.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn range_transform_required_detection() {
+        assert!(!Distribution::uniform(0.0, 1.0).requires_range_transform());
+        assert!(Distribution::uniform(0.0, 2.0).requires_range_transform());
+        assert!(Distribution::gaussian(0.0, 2.0).requires_range_transform());
+        assert!(!Distribution::gaussian(0.0, 1.0).requires_range_transform());
+    }
+
+    #[test]
+    fn f64_uniform_uses_53_bits() {
+        let mut e = PhiloxEngine::new(1);
+        let mut out = vec![0f64; 4096];
+        Distribution::uniform(0.0, 1.0).sample_f64(&mut e, &mut out);
+        assert!(out.iter().all(|&x| (0.0..1.0).contains(&x)));
+        // More resolution than f32: some values need >24 bits.
+        assert!(out.iter().any(|&x| (x * (1u64 << 32) as f64).fract() != 0.0));
+    }
+}

@@ -1,0 +1,56 @@
+//! Poisson sampling (Knuth's product method for small lambda, normal
+//! approximation above the practical threshold).
+
+use crate::rng::engines::Engine;
+use crate::rng::u32_to_uniform_f32;
+
+/// One Poisson(lambda) draw.
+///
+/// Knuth's multiplicative method consumes a geometric number of uniforms
+/// (mean lambda+1); above `lambda > 30` the rounded-normal approximation is
+/// used, matching what vendor libraries do for large means.
+pub fn poisson_knuth(engine: &mut dyn Engine, lambda: f64) -> u64 {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda > 30.0 {
+        // Normal approximation with continuity correction.
+        let u1 = u32_to_uniform_f32(engine.next_u32()) as f64;
+        let u2 = u32_to_uniform_f32(engine.next_u32()) as f64;
+        let r = (-2.0 * (1.0 - u1).ln()).sqrt();
+        let z = r * (2.0 * std::f64::consts::PI * u2).cos();
+        return (lambda + lambda.sqrt() * z + 0.5).max(0.0) as u64;
+    }
+    let l = (-lambda).exp();
+    let mut k = 0u64;
+    let mut p = 1.0f64;
+    loop {
+        p *= u32_to_uniform_f32(engine.next_u32()) as f64;
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::engines::PhiloxEngine;
+
+    #[test]
+    fn zero_lambda_is_zero() {
+        let mut e = PhiloxEngine::new(1);
+        assert_eq!(poisson_knuth(&mut e, 0.0), 0);
+    }
+
+    #[test]
+    fn large_lambda_normal_branch_moments() {
+        let mut e = PhiloxEngine::new(5);
+        let n = 20_000;
+        let lambda = 100.0;
+        let draws: Vec<u64> = (0..n).map(|_| poisson_knuth(&mut e, lambda)).collect();
+        let mean = draws.iter().sum::<u64>() as f64 / n as f64;
+        assert!((mean - lambda).abs() < 1.0, "mean={mean}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Pseudo- and quasirandom engines, bit-exact with their reference
+//! implementations (Random123 for Philox, L'Ecuyer for MRG32k3a, Marsaglia
+//! for XORWOW, Matsumoto–Nishimura for MT19937, Joe–Kuo for Sobol32).
+//!
+//! All engines expose the same [`Engine`] trait used by backends; Philox is
+//! the paper's benchmark generator and the only one with O(1) skip-ahead
+//! (counter-based), which the PJRT device path relies on.
+
+mod mrg32k3a;
+mod mt19937;
+mod philox;
+mod sobol32;
+mod xorwow;
+
+pub use mrg32k3a::Mrg32k3aEngine;
+pub use mt19937::Mt19937Engine;
+pub use philox::{philox4x32_10, PhiloxEngine, PHILOX_M0, PHILOX_M1, PHILOX_W0, PHILOX_W1};
+pub use sobol32::Sobol32Engine;
+pub use xorwow::XorwowEngine;
+
+/// Engine families, matching oneMKL / cuRAND / hipRAND generator types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Philox4x32x10 counter-based generator (paper's benchmark engine).
+    Philox4x32x10,
+    /// L'Ecuyer combined multiple-recursive generator.
+    Mrg32k3a,
+    /// Marsaglia XORWOW (cuRAND's default pseudorandom engine).
+    Xorwow,
+    /// Mersenne Twister 19937.
+    Mt19937,
+    /// Sobol 32-bit quasirandom sequence.
+    Sobol32,
+}
+
+impl EngineKind {
+    /// All engine kinds (for sweeps and property tests).
+    pub const ALL: [EngineKind; 5] = [
+        EngineKind::Philox4x32x10,
+        EngineKind::Mrg32k3a,
+        EngineKind::Xorwow,
+        EngineKind::Mt19937,
+        EngineKind::Sobol32,
+    ];
+
+    /// Human-readable name as used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Philox4x32x10 => "philox4x32x10",
+            EngineKind::Mrg32k3a => "mrg32k3a",
+            EngineKind::Xorwow => "xorwow",
+            EngineKind::Mt19937 => "mt19937",
+            EngineKind::Sobol32 => "sobol32",
+        }
+    }
+
+    /// Whether the engine is quasirandom (ICDF-only in cuRAND/hipRAND —
+    /// paper §4.1: "such methods are available only for quasirandom number
+    /// generators in the curand and hiprand API").
+    pub fn is_quasi(self) -> bool {
+        matches!(self, EngineKind::Sobol32)
+    }
+
+    /// Construct a boxed engine of this kind.
+    pub fn create(self, seed: u64) -> Box<dyn Engine> {
+        match self {
+            EngineKind::Philox4x32x10 => Box::new(PhiloxEngine::new(seed)),
+            EngineKind::Mrg32k3a => Box::new(Mrg32k3aEngine::new(seed)),
+            EngineKind::Xorwow => Box::new(XorwowEngine::new(seed)),
+            EngineKind::Mt19937 => Box::new(Mt19937Engine::new(seed as u32)),
+            EngineKind::Sobol32 => Box::new(Sobol32Engine::new(1)),
+        }
+    }
+}
+
+/// A raw u32 stream generator.
+///
+/// The distribution layer sits on top of this; backends may bypass it when
+/// they have a fused path (e.g. the PJRT Pallas kernel generates, converts
+/// and transforms in one device pass).
+pub trait Engine: Send {
+    /// Engine family.
+    fn kind(&self) -> EngineKind;
+
+    /// Fill `out` with the next raw u32 draws.
+    fn fill_u32(&mut self, out: &mut [u32]);
+
+    /// Skip `n` raw u32 draws ahead. O(1) for Philox, O(n) in general.
+    fn skip_ahead(&mut self, n: u64);
+
+    /// Clone into a boxed engine (engines are deterministic state machines).
+    fn clone_box(&self) -> Box<dyn Engine>;
+
+    /// Next single u32 (convenience; engines may override).
+    fn next_u32(&mut self) -> u32 {
+        let mut one = [0u32; 1];
+        self.fill_u32(&mut one);
+        one[0]
+    }
+
+    /// Fill with f32 uniforms in [0,1) via the canonical conversion.
+    fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        // Chunked to keep the scratch buffer cache-resident.
+        const CHUNK: usize = 4096;
+        let mut scratch = [0u32; CHUNK];
+        for block in out.chunks_mut(CHUNK) {
+            let s = &mut scratch[..block.len()];
+            self.fill_u32(s);
+            for (dst, &src) in block.iter_mut().zip(s.iter()) {
+                *dst = super::u32_to_uniform_f32(src);
+            }
+        }
+    }
+}
+
+impl Clone for Box<dyn Engine> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_create_and_generate() {
+        for kind in EngineKind::ALL {
+            let mut e = kind.create(12345);
+            let mut out = vec![0u32; 64];
+            e.fill_u32(&mut out);
+            assert!(out.iter().any(|&x| x != 0), "{:?} all zero", kind);
+            assert_eq!(e.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn clone_preserves_stream() {
+        for kind in EngineKind::ALL {
+            let mut a = kind.create(7);
+            let mut warm = vec![0u32; 17];
+            a.fill_u32(&mut warm);
+            let mut b = a.clone_box();
+            let (mut xa, mut xb) = (vec![0u32; 32], vec![0u32; 32]);
+            a.fill_u32(&mut xa);
+            b.fill_u32(&mut xb);
+            assert_eq!(xa, xb, "{:?} clone diverged", kind);
+        }
+    }
+
+    #[test]
+    fn skip_ahead_matches_sequential_draw() {
+        for kind in EngineKind::ALL {
+            let mut a = kind.create(99);
+            let mut b = kind.create(99);
+            let mut burn = vec![0u32; 1000];
+            a.fill_u32(&mut burn);
+            b.skip_ahead(1000);
+            let (mut xa, mut xb) = (vec![0u32; 16], vec![0u32; 16]);
+            a.fill_u32(&mut xa);
+            b.fill_u32(&mut xb);
+            assert_eq!(xa, xb, "{:?} skip_ahead != sequential", kind);
+        }
+    }
+
+    #[test]
+    fn uniform_f32_in_unit_interval() {
+        for kind in EngineKind::ALL {
+            let mut e = kind.create(3);
+            let mut out = vec![0f32; 10_000];
+            e.fill_uniform_f32(&mut out);
+            assert!(out.iter().all(|&x| (0.0..1.0).contains(&x)), "{:?}", kind);
+            let mean = out.iter().sum::<f32>() / out.len() as f32;
+            assert!((mean - 0.5).abs() < 0.02, "{:?} mean={mean}", kind);
+        }
+    }
+}

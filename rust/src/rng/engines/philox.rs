@@ -1,0 +1,339 @@
+//! Philox4x32x10 — the paper's benchmark generator (cuRAND
+//! `CURAND_RNG_PSEUDO_PHILOX4_32_10`, oneMKL `philox4x32x10`).
+//!
+//! Random123 convention, bit-exact with the Pallas kernel and the jnp
+//! oracle (`python/compile/kernels/ref.py`) — see DESIGN.md §4 and the
+//! `cross_layer` integration test.
+
+use super::{Engine, EngineKind};
+
+/// Round multiplier for lanes 0/1.
+pub const PHILOX_M0: u32 = 0xD251_1F53;
+/// Round multiplier for lanes 2/3.
+pub const PHILOX_M1: u32 = 0xCD9E_8D57;
+/// Weyl increment for key word 0.
+pub const PHILOX_W0: u32 = 0x9E37_79B9;
+/// Weyl increment for key word 1.
+pub const PHILOX_W1: u32 = 0xBB67_AE85;
+
+const ROUNDS: u32 = 10;
+
+#[inline(always)]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+#[inline(always)]
+fn round(c: [u32; 4], k: [u32; 2]) -> [u32; 4] {
+    let (hi0, lo0) = mulhilo(PHILOX_M0, c[0]);
+    let (hi1, lo1) = mulhilo(PHILOX_M1, c[2]);
+    [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0]
+}
+
+/// The full 10-round Philox4x32 keyed permutation.
+#[inline(always)]
+pub fn philox4x32_10(mut ctr: [u32; 4], mut key: [u32; 2]) -> [u32; 4] {
+    for r in 0..ROUNDS {
+        if r > 0 {
+            key[0] = key[0].wrapping_add(PHILOX_W0);
+            key[1] = key[1].wrapping_add(PHILOX_W1);
+        }
+        ctr = round(ctr, key);
+    }
+    ctr
+}
+
+/// Counter-based Philox engine with O(1) skip-ahead.
+///
+/// Counter layout (DESIGN.md §4): block `j` uses `(lo(off+j), hi(off+j),
+/// 0, 0)` with the 64-bit block offset split into u32 words; the seed
+/// occupies the 64-bit key. One block yields 4 u32 draws; `phase` tracks
+/// the intra-block position so arbitrary-length fills stay stream-exact.
+#[derive(Debug, Clone)]
+pub struct PhiloxEngine {
+    key: [u32; 2],
+    /// 128-bit counter; low 64 bits used as the block index.
+    block: u64,
+    /// Draws already consumed from the current block (0..=3).
+    phase: u8,
+    /// Cached current block output.
+    cache: [u32; 4],
+}
+
+impl PhiloxEngine {
+    /// New engine from a 64-bit seed (cuRAND-style
+    /// `curandSetPseudoRandomGeneratorSeed`).
+    pub fn new(seed: u64) -> Self {
+        Self::with_offset(seed, 0)
+    }
+
+    /// New engine skipped ahead to raw-draw offset `offset`
+    /// (`curandSetGeneratorOffset` analogue; offset counts u32 draws).
+    pub fn with_offset(seed: u64, offset: u64) -> Self {
+        let mut e = PhiloxEngine {
+            key: [seed as u32, (seed >> 32) as u32],
+            block: 0,
+            phase: 0,
+            cache: [0; 4],
+        };
+        e.seek(offset);
+        e
+    }
+
+    /// Absolute seek to raw-draw position `pos` in the stream.
+    pub fn seek(&mut self, pos: u64) {
+        self.block = pos / 4;
+        self.phase = (pos % 4) as u8;
+        if self.phase != 0 {
+            self.cache = self.block_output(self.block);
+        }
+    }
+
+    /// Current absolute raw-draw position.
+    pub fn position(&self) -> u64 {
+        self.block * 4 + self.phase as u64
+    }
+
+    #[inline]
+    fn block_output(&self, block: u64) -> [u32; 4] {
+        philox4x32_10([block as u32, (block >> 32) as u32, 0, 0], self.key)
+    }
+
+    /// `W` independent counter blocks evaluated in lockstep. The Philox
+    /// round is a multiply-latency chain; interleaving independent chains
+    /// gives the out-of-order core the ILP to hide it (§Perf L3
+    /// optimization iterations: 176 -> 272 -> 320+ M u32/s, see
+    /// EXPERIMENTS.md §Perf).
+    #[inline(always)]
+    fn block_output_wide<const W: usize>(&self, block: u64) -> [[u32; 4]; W] {
+        let mut c = [[0u32; 4]; W];
+        for (i, ci) in c.iter_mut().enumerate() {
+            let b = block.wrapping_add(i as u64);
+            *ci = [b as u32, (b >> 32) as u32, 0, 0];
+        }
+        let mut k = self.key;
+        for r in 0..ROUNDS {
+            if r > 0 {
+                k[0] = k[0].wrapping_add(PHILOX_W0);
+                k[1] = k[1].wrapping_add(PHILOX_W1);
+            }
+            // W independent S-box rounds; the compiler interleaves.
+            for ci in c.iter_mut() {
+                *ci = round(*ci, k);
+            }
+        }
+        c
+    }
+
+    #[inline(always)]
+    fn block_output_x4(&self, block: u64) -> [[u32; 4]; 4] {
+        self.block_output_wide::<4>(block)
+    }
+
+    /// Fill `out` with uniforms in [0,1) fused with generation (hot path:
+    /// avoids the intermediate u32 buffer of the default trait method).
+    pub fn fill_uniform_f32_fused(&mut self, out: &mut [f32]) {
+        let mut i = 0;
+        // Drain a partially consumed block first.
+        while self.phase != 0 && i < out.len() {
+            out[i] = crate::rng::u32_to_uniform_f32(self.cache[self.phase as usize]);
+            self.advance_phase();
+            i += 1;
+        }
+        // 4-blocks-at-a-time main loop (16 outputs per iteration);
+        // 8-wide was tried and regressed (register pressure) — §Perf log.
+        let mut wide = out[i..].chunks_exact_mut(16);
+        for chunk in &mut wide {
+            let blocks = self.block_output_wide::<4>(self.block);
+            self.block = self.block.wrapping_add(4);
+            for (j, v) in blocks.iter().enumerate() {
+                chunk[4 * j] = crate::rng::u32_to_uniform_f32(v[0]);
+                chunk[4 * j + 1] = crate::rng::u32_to_uniform_f32(v[1]);
+                chunk[4 * j + 2] = crate::rng::u32_to_uniform_f32(v[2]);
+                chunk[4 * j + 3] = crate::rng::u32_to_uniform_f32(v[3]);
+            }
+        }
+        let rem16 = wide.into_remainder();
+        let mut chunks = rem16.chunks_exact_mut(4);
+        for chunk in &mut chunks {
+            let v = self.block_output(self.block);
+            self.block = self.block.wrapping_add(1);
+            chunk[0] = crate::rng::u32_to_uniform_f32(v[0]);
+            chunk[1] = crate::rng::u32_to_uniform_f32(v[1]);
+            chunk[2] = crate::rng::u32_to_uniform_f32(v[2]);
+            chunk[3] = crate::rng::u32_to_uniform_f32(v[3]);
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            self.cache = self.block_output(self.block);
+            for (j, dst) in rem.iter_mut().enumerate() {
+                *dst = crate::rng::u32_to_uniform_f32(self.cache[j]);
+            }
+            self.phase = rem.len() as u8;
+        }
+    }
+
+    #[inline]
+    fn advance_phase(&mut self) {
+        self.phase += 1;
+        if self.phase == 4 {
+            self.phase = 0;
+            self.block = self.block.wrapping_add(1);
+        }
+    }
+}
+
+impl Engine for PhiloxEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Philox4x32x10
+    }
+
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        let mut i = 0;
+        while self.phase != 0 && i < out.len() {
+            out[i] = self.cache[self.phase as usize];
+            self.advance_phase();
+            i += 1;
+        }
+        // 4-blocks-at-a-time main loop (16 outputs per iteration);
+        // 8-wide was tried and regressed (register pressure) — §Perf log.
+        let mut wide = out[i..].chunks_exact_mut(16);
+        for chunk in &mut wide {
+            let blocks = self.block_output_wide::<4>(self.block);
+            self.block = self.block.wrapping_add(4);
+            for (j, v) in blocks.iter().enumerate() {
+                chunk[4 * j..4 * j + 4].copy_from_slice(v);
+            }
+        }
+        let rem16 = wide.into_remainder();
+        let mut chunks = rem16.chunks_exact_mut(4);
+        for chunk in &mut chunks {
+            chunk.copy_from_slice(&self.block_output(self.block));
+            self.block = self.block.wrapping_add(1);
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            self.cache = self.block_output(self.block);
+            rem.copy_from_slice(&self.cache[..rem.len()]);
+            self.phase = rem.len() as u8;
+        }
+    }
+
+    fn skip_ahead(&mut self, n: u64) {
+        let pos = self.position().wrapping_add(n);
+        self.seek(pos);
+    }
+
+    fn clone_box(&self) -> Box<dyn Engine> {
+        Box::new(self.clone())
+    }
+
+    fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        self.fill_uniform_f32_fused(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Random123 kat_vectors, philox4x32x10.
+    #[test]
+    fn known_answer_vectors() {
+        assert_eq!(
+            philox4x32_10([0, 0, 0, 0], [0, 0]),
+            [0x6627_E8D5, 0xE169_C58D, 0xBC57_AC4C, 0x9B00_DBD8]
+        );
+        assert_eq!(
+            philox4x32_10([u32::MAX; 4], [u32::MAX; 2]),
+            [0x408F_276D, 0x41C8_3B0E, 0xA20B_C7C6, 0x6D54_51FD]
+        );
+        assert_eq!(
+            philox4x32_10(
+                [0x243F_6A88, 0x85A3_08D3, 0x1319_8A2E, 0x0370_7344],
+                [0xA409_3822, 0x299F_31D0]
+            ),
+            [0xD16C_FE09, 0x94FD_CCEB, 0x5001_E420, 0x2412_6EA1]
+        );
+    }
+
+    #[test]
+    fn counter_layout_matches_contract() {
+        // Draws 0..4 come from counter (0,0,0,0), 4..8 from (1,0,0,0).
+        let mut e = PhiloxEngine::new(0);
+        let mut out = [0u32; 8];
+        e.fill_u32(&mut out);
+        assert_eq!(&out[..4], &philox4x32_10([0, 0, 0, 0], [0, 0]));
+        assert_eq!(&out[4..], &philox4x32_10([1, 0, 0, 0], [0, 0]));
+    }
+
+    #[test]
+    fn seed_maps_to_key_words() {
+        let seed = 0x1234_5678_9ABC_DEF0u64;
+        let mut e = PhiloxEngine::new(seed);
+        let mut out = [0u32; 4];
+        e.fill_u32(&mut out);
+        assert_eq!(
+            out,
+            philox4x32_10([0, 0, 0, 0], [0x9ABC_DEF0, 0x1234_5678])
+        );
+    }
+
+    #[test]
+    fn unaligned_fills_are_stream_exact() {
+        let mut a = PhiloxEngine::new(42);
+        let mut whole = vec![0u32; 64];
+        a.fill_u32(&mut whole);
+
+        let mut b = PhiloxEngine::new(42);
+        let mut parts = Vec::new();
+        for len in [1usize, 3, 5, 7, 11, 13, 24] {
+            let mut chunk = vec![0u32; len];
+            b.fill_u32(&mut chunk);
+            parts.extend_from_slice(&chunk);
+        }
+        assert_eq!(&whole[..parts.len()], &parts[..]);
+    }
+
+    #[test]
+    fn o1_skip_ahead_arbitrary_offsets() {
+        for off in [1u64, 2, 3, 4, 5, 1000, 123_456_789] {
+            let mut a = PhiloxEngine::new(9);
+            let mut burn = vec![0u32; off as usize % 10_000];
+            // seek via skip from a partially drawn state
+            a.fill_u32(&mut burn);
+            a.skip_ahead(off);
+            let mut b = PhiloxEngine::with_offset(9, burn.len() as u64 + off);
+            let (mut xa, mut xb) = ([0u32; 8], [0u32; 8]);
+            a.fill_u32(&mut xa);
+            b.fill_u32(&mut xb);
+            assert_eq!(xa, xb, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn block_counter_crosses_u32_boundary() {
+        // Block index > u32::MAX exercises the (lo, hi) counter split.
+        let mut e = PhiloxEngine::with_offset(1, (u32::MAX as u64 + 2) * 4);
+        let mut out = [0u32; 4];
+        e.fill_u32(&mut out);
+        assert_eq!(out, philox4x32_10([1, 1, 0, 0], [1, 0]));
+    }
+
+    #[test]
+    fn fused_uniform_matches_unfused() {
+        let mut a = PhiloxEngine::new(77);
+        let mut fused = vec![0f32; 1001];
+        a.fill_uniform_f32_fused(&mut fused);
+
+        let mut b = PhiloxEngine::new(77);
+        let mut raw = vec![0u32; 1001];
+        b.fill_u32(&mut raw);
+        let unfused: Vec<f32> =
+            raw.iter().map(|&x| crate::rng::u32_to_uniform_f32(x)).collect();
+        assert_eq!(fused, unfused);
+        // And the streams remain aligned afterwards.
+        assert_eq!(a.position(), b.position());
+    }
+}

@@ -1,0 +1,143 @@
+//! Sobol32 — quasirandom low-discrepancy sequence (cuRAND
+//! `CURAND_RNG_QUASI_SOBOL32`, oneMKL `sobol`).
+//!
+//! Gray-code construction with Joe–Kuo direction numbers for the first few
+//! dimensions. In cuRAND/hipRAND these engines are the only ones with ICDF
+//! generation methods (paper §4.1) — the distribution layer enforces that
+//! asymmetry. Skip-ahead is O(32) via the Gray-code closed form.
+
+use super::{Engine, EngineKind};
+
+const BITS: usize = 32;
+/// Primitive-polynomial parameters (dimension, degree s, coefficient a,
+/// initial direction numbers m_i) — Joe–Kuo table, dimensions 2..=4.
+/// Dimension 1 is the van der Corput sequence (m_i = 1).
+const JOE_KUO: [(u32, u32, &[u32]); 3] =
+    [(1, 0, &[1]), (2, 1, &[1, 3]), (3, 1, &[1, 3, 1])];
+
+fn direction_numbers(dim: u32) -> [u32; BITS] {
+    let mut v = [0u32; BITS];
+    if dim == 0 {
+        // van der Corput: v_j = 2^(31-j)
+        for (j, vj) in v.iter_mut().enumerate() {
+            *vj = 1 << (31 - j);
+        }
+        return v;
+    }
+    let (s, a, m) = JOE_KUO[(dim as usize - 1) % JOE_KUO.len()];
+    let s = s as usize;
+    for j in 0..s.min(BITS) {
+        v[j] = m[j] << (31 - j);
+    }
+    for j in s..BITS {
+        let mut vj = v[j - s] ^ (v[j - s] >> s);
+        for k in 1..s {
+            if (a >> (s - 1 - k)) & 1 == 1 {
+                vj ^= v[j - k];
+            }
+        }
+        v[j] = vj;
+    }
+    v
+}
+
+/// 32-bit Sobol sequence engine for a single dimension.
+#[derive(Debug, Clone)]
+pub struct Sobol32Engine {
+    v: [u32; BITS],
+    /// Current point value (x_index).
+    x: u32,
+    /// Zero-based index of the *next* point to emit.
+    index: u64,
+}
+
+impl Sobol32Engine {
+    /// New Sobol stream for `dimension` (1-based, wraps over the table).
+    pub fn new(dimension: u32) -> Self {
+        Sobol32Engine {
+            v: direction_numbers(dimension.saturating_sub(1)),
+            x: 0,
+            index: 0,
+        }
+    }
+
+    /// Closed-form value of point `n`: XOR of v_j over set bits of gray(n).
+    fn point(&self, n: u64) -> u32 {
+        let gray = n ^ (n >> 1);
+        let mut x = 0u32;
+        for (j, &vj) in self.v.iter().enumerate() {
+            if (gray >> j) & 1 == 1 {
+                x ^= vj;
+            }
+        }
+        x
+    }
+}
+
+impl Engine for Sobol32Engine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sobol32
+    }
+
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        for dst in out.iter_mut() {
+            *dst = self.x;
+            // Gray-code increment: flip direction number of ctz(index+1).
+            let c = (self.index + 1).trailing_zeros() as usize;
+            self.x ^= self.v[c % BITS];
+            self.index += 1;
+        }
+    }
+
+    fn skip_ahead(&mut self, n: u64) {
+        self.index += n;
+        self.x = self.point(self.index);
+    }
+
+    fn clone_box(&self) -> Box<dyn Engine> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim1_is_van_der_corput() {
+        let mut e = Sobol32Engine::new(1);
+        let mut out = [0u32; 8];
+        e.fill_u32(&mut out);
+        // Bit-reversed integers: 0, 1/2, 1/4, 3/4, ... scaled to 2^32.
+        assert_eq!(out[0], 0);
+        assert_eq!(out[1], 0x8000_0000);
+        assert_eq!(out[2], 0xC000_0000);
+        assert_eq!(out[3], 0x4000_0000);
+        assert_eq!(out[4], 0x6000_0000);
+    }
+
+    #[test]
+    fn closed_form_matches_iteration() {
+        let mut e = Sobol32Engine::new(2);
+        let mut out = vec![0u32; 100];
+        e.fill_u32(&mut out);
+        let fresh = Sobol32Engine::new(2);
+        for (n, &x) in out.iter().enumerate() {
+            assert_eq!(fresh.point(n as u64), x, "point {n}");
+        }
+    }
+
+    #[test]
+    fn low_discrepancy_beats_random_spacing() {
+        // First 2^k points of dim 1 hit every length-2^-k dyadic interval
+        // exactly once.
+        let mut e = Sobol32Engine::new(1);
+        let mut out = vec![0u32; 256];
+        e.fill_u32(&mut out);
+        let mut buckets = [0u32; 256];
+        for &x in &out {
+            buckets[(x >> 24) as usize] += 1;
+        }
+        assert!(buckets.iter().all(|&b| b == 1));
+    }
+}

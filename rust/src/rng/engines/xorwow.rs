@@ -1,0 +1,113 @@
+//! XORWOW — Marsaglia's xorshift variant with a Weyl sequence
+//! (cuRAND's default engine, `CURAND_RNG_PSEUDO_XORWOW`).
+
+use super::{Engine, EngineKind};
+
+const WEYL: u32 = 362_437;
+
+/// Marsaglia XORWOW engine (period ~2^192 - 2^32).
+#[derive(Debug, Clone)]
+pub struct XorwowEngine {
+    x: [u32; 5],
+    d: u32,
+}
+
+impl XorwowEngine {
+    /// Seed the five xorshift words + Weyl counter via splitmix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = move || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let mut x = [0u32; 5];
+        for v in x.iter_mut() {
+            *v = next() as u32;
+        }
+        if x.iter().all(|&v| v == 0) {
+            x[0] = 1; // the all-zero xorshift state is absorbing
+        }
+        XorwowEngine { x, d: next() as u32 }
+    }
+
+    #[inline(always)]
+    fn step(&mut self) -> u32 {
+        let t = self.x[0] ^ (self.x[0] >> 2);
+        self.x[0] = self.x[1];
+        self.x[1] = self.x[2];
+        self.x[2] = self.x[3];
+        self.x[3] = self.x[4];
+        self.x[4] = (self.x[4] ^ (self.x[4] << 4)) ^ (t ^ (t << 1));
+        self.d = self.d.wrapping_add(WEYL);
+        self.d.wrapping_add(self.x[4])
+    }
+}
+
+impl Engine for XorwowEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Xorwow
+    }
+
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        for dst in out.iter_mut() {
+            *dst = self.step();
+        }
+    }
+
+    fn skip_ahead(&mut self, n: u64) {
+        // xorshift jump polynomials exist but the paper only ever uses
+        // Philox for skip-ahead streams; sequential skip is adequate here.
+        for _ in 0..n {
+            self.step();
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Engine> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Marsaglia's paper (Xorshift RNGs, JSS 2003) example trace for the
+    /// xorwow state update: verify the recurrence directly.
+    #[test]
+    fn recurrence_matches_definition() {
+        let mut e = XorwowEngine { x: [1, 2, 3, 4, 5], d: 6 };
+        let x0 = e.x;
+        let d0 = e.d;
+        let out = e.step();
+        let t = x0[0] ^ (x0[0] >> 2);
+        let v = (x0[4] ^ (x0[4] << 4)) ^ (t ^ (t << 1));
+        assert_eq!(e.x, [x0[1], x0[2], x0[3], x0[4], v]);
+        assert_eq!(e.d, d0.wrapping_add(WEYL));
+        assert_eq!(out, d0.wrapping_add(WEYL).wrapping_add(v));
+    }
+
+    #[test]
+    fn no_short_cycle() {
+        let mut e = XorwowEngine::new(1);
+        let first = e.step();
+        for _ in 0..100_000 {
+            assert_ne!(e.x, [0, 0, 0, 0, 0]);
+        }
+        let _ = first;
+    }
+
+    #[test]
+    fn equidistribution_rough() {
+        let mut e = XorwowEngine::new(123);
+        let mut buckets = [0usize; 16];
+        for _ in 0..160_000 {
+            buckets[(e.step() >> 28) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((b as f64 - 10_000.0).abs() < 600.0, "bucket {b}");
+        }
+    }
+}

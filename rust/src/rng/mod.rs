@@ -1,0 +1,55 @@
+//! The oneMKL-like RNG front-end: engines, distributions, generate API.
+//!
+//! This is the portable interface of the paper's contribution: a single
+//! vendor-agnostic API whose entry points dispatch to vendor-native
+//! backends ([`crate::backends`]), plus the range-transformation kernel the
+//! native libraries lack (paper §4.3, Listing 1.2).
+
+pub mod distributions;
+pub mod engines;
+pub mod generate;
+pub mod range_transform;
+
+pub use distributions::{Distribution, GaussianMethod, UniformMethod};
+pub use engines::{Engine, EngineKind, PhiloxEngine};
+pub use generate::{generate_buffer, generate_usm, GenerateApi};
+pub use range_transform::range_transform_inplace;
+
+/// Canonical u32 -> f32 `[0, 1)` conversion (DESIGN.md §4): keep the top 24
+/// bits so the result is exactly representable and strictly below 1.
+#[inline(always)]
+pub fn u32_to_uniform_f32(x: u32) -> f32 {
+    const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
+    (x >> 8) as f32 * SCALE
+}
+
+/// Canonical u32-pair -> f64 `[0, 1)` conversion (top 53 bits).
+#[inline(always)]
+pub fn u32x2_to_uniform_f64(hi: u32, lo: u32) -> f64 {
+    const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+    let bits = ((hi as u64) << 32 | lo as u64) >> 11;
+    bits as f64 * SCALE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u01_range_and_resolution() {
+        assert_eq!(u32_to_uniform_f32(0), 0.0);
+        let max = u32_to_uniform_f32(u32::MAX);
+        assert!(max < 1.0);
+        assert_eq!(max, (0xFF_FFFF as f32) / (1 << 24) as f32);
+        // Exactly representable: consecutive 24-bit payloads differ.
+        assert_ne!(u32_to_uniform_f32(0x100), u32_to_uniform_f32(0x200));
+        // Bottom 8 bits are discarded.
+        assert_eq!(u32_to_uniform_f32(0x1FF), u32_to_uniform_f32(0x100));
+    }
+
+    #[test]
+    fn u01_f64_range() {
+        assert_eq!(u32x2_to_uniform_f64(0, 0), 0.0);
+        assert!(u32x2_to_uniform_f64(u32::MAX, u32::MAX) < 1.0);
+    }
+}

@@ -1,0 +1,66 @@
+//! The range-transformation kernel (paper §4.3, Listing 1.2).
+//!
+//! cuRAND and hipRAND emit only the canonical [0,1) / N(0,1) sequences;
+//! oneMKL's API promises arbitrary ranges, so the paper adds a second
+//! kernel that post-processes the generated buffer. This module is the
+//! host-side implementation used by the simulated vendor backends and CPU
+//! paths; the device path uses the standalone Pallas kernel
+//! (`python/compile/kernels/range_transform.py`) or the fused variant.
+
+/// In-place `[0,1) -> [a,b)` (or `N(0,1) -> N(a, b)` with `a`=mean,
+/// `b`=stddev when `scale_stddev` semantics are applied by the caller).
+#[inline]
+pub fn range_transform_inplace(out: &mut [f32], a: f32, b: f32) {
+    let w = b - a;
+    for x in out.iter_mut() {
+        *x = a + *x * w;
+    }
+}
+
+/// Gaussian variant: `z -> mean + stddev * z`.
+#[inline]
+pub fn scale_gaussian_inplace(out: &mut [f32], mean: f32, stddev: f32) {
+    for x in out.iter_mut() {
+        *x = mean + stddev * *x;
+    }
+}
+
+/// Bytes touched by the standalone transform kernel (read + write), used by
+/// the platform performance model for the Fig. 4 per-kernel breakdown.
+pub fn transform_kernel_bytes(n: usize) -> u64 {
+    (n as u64) * 4 * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_transform_is_noop() {
+        let mut v = vec![0.25f32, 0.5, 0.75];
+        let orig = v.clone();
+        range_transform_inplace(&mut v, 0.0, 1.0);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn affine_map_endpoints() {
+        let mut v = vec![0.0f32, 0.5, 0.999999];
+        range_transform_inplace(&mut v, -4.0, 4.0);
+        assert_eq!(v[0], -4.0);
+        assert_eq!(v[1], 0.0);
+        assert!(v[2] < 4.0);
+    }
+
+    #[test]
+    fn gaussian_scale() {
+        let mut v = vec![-1.0f32, 0.0, 2.0];
+        scale_gaussian_inplace(&mut v, 10.0, 0.5);
+        assert_eq!(v, vec![9.5, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn kernel_bytes_model() {
+        assert_eq!(transform_kernel_bytes(1000), 8000);
+    }
+}

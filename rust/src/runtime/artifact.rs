@@ -1,0 +1,176 @@
+//! Artifact manifest: the Rust mirror of `python/compile/model.ARTIFACTS`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::jsonlite::Value;
+
+/// Dtype+shape of one parameter or result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// numpy dtype name ("float32", "uint32", ...).
+    pub dtype: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let dtype = v
+            .get("dtype")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Artifact("missing dtype".into()))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Artifact("missing shape".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Artifact("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One compiled-graph artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Registry name (e.g. "burner_uniform_65536").
+    pub name: String,
+    /// HLO text file relative to the artifact dir.
+    pub file: PathBuf,
+    /// Parameter signature.
+    pub inputs: Vec<TensorSpec>,
+    /// Result signature (flattened tuple leaves).
+    pub outputs: Vec<TensorSpec>,
+    /// Content hash from the AOT step.
+    pub sha256: String,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// name -> artifact.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let format = v.get("format").and_then(Value::as_str).unwrap_or("");
+        if format != "hlo-text-v1" {
+            return Err(Error::Artifact(format!("unsupported manifest format `{format}`")));
+        }
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_object)
+            .ok_or_else(|| Error::Artifact("missing artifacts".into()))?;
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?;
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing {key}")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: PathBuf::from(file),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                    sha256: a
+                        .get("sha256")
+                        .and_then(Value::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Look up by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact `{name}`")))
+    }
+
+    /// Names of burner-uniform artifacts sorted ascending by size — the
+    /// padding ladder for arbitrary batch sizes.
+    pub fn burner_sizes(&self) -> Vec<(usize, String)> {
+        let mut v: Vec<(usize, String)> = self
+            .artifacts
+            .keys()
+            .filter_map(|name| {
+                let n: usize = name.strip_prefix("burner_uniform_")?.parse().ok()?;
+                Some((n, name.clone()))
+            })
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"format":"hlo-text-v1","artifacts":{
+      "burner_uniform_4096":{"file":"burner_uniform_4096.hlo.txt",
+        "inputs":[{"dtype":"uint32","shape":[2]},{"dtype":"uint32","shape":[2]},
+                  {"dtype":"float32","shape":[2]}],
+        "outputs":[{"dtype":"float32","shape":[4096]}],"sha256":"x"},
+      "burner_uniform_65536":{"file":"burner_uniform_65536.hlo.txt",
+        "inputs":[],"outputs":[],"sha256":"y"}}}"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.get("burner_uniform_4096").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.outputs[0].shape, vec![4096]);
+        assert_eq!(a.outputs[0].elements(), 4096);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn burner_ladder_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let sizes = m.burner_sizes();
+        assert_eq!(sizes.len(), 2);
+        assert_eq!(sizes[0].0, 4096);
+        assert_eq!(sizes[1].0, 65536);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(r#"{"format":"v2","artifacts":{}}"#).is_err());
+    }
+}

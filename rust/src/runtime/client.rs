@@ -1,0 +1,158 @@
+//! PJRT client wrapper with a compiled-executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactSpec, Manifest};
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// A PJRT CPU client plus the artifact registry. Compilation happens once
+/// per artifact (at first use or via [`PjrtRuntime::warmup`]); execution is
+/// the request-path hot call.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create from an artifact directory (reads `manifest.json`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Locate the artifact dir by walking up from the current directory —
+    /// lets tests/examples run from any workspace subdirectory.
+    pub fn discover() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join(DEFAULT_ARTIFACT_DIR);
+            if cand.join("manifest.json").exists() {
+                return PjrtRuntime::new(cand);
+            }
+            if !dir.pop() {
+                return Err(Error::Artifact(
+                    "artifacts/manifest.json not found in any parent directory; \
+                     run `make artifacts`"
+                        .into(),
+                ));
+            }
+        }
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact spec lookup.
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (and cache) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (or all).
+    pub fn warmup(&self, names: Option<&[&str]>) -> Result<()> {
+        match names {
+            Some(list) => {
+                for n in list {
+                    self.load(n)?;
+                }
+            }
+            None => {
+                let all: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+                for n in all {
+                    self.load(&n)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the flattened tuple leaves.
+    ///
+    /// All our graphs are lowered with `return_tuple=True`, so the single
+    /// result literal is decomposed into its tuple elements.
+    pub fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.get(name)?;
+        if args.len() != spec.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: expected {} args, got {}",
+                spec.inputs.len(),
+                args.len()
+            )));
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Convenience: run a burner artifact.
+    /// `key`/`off` are the Philox seed/counter words, `p0`/`p1` the range
+    /// (or mean/std) parameters. Returns the generated f32 batch.
+    pub fn run_burner(
+        &self,
+        name: &str,
+        key: [u32; 2],
+        off: [u32; 2],
+        p0: f32,
+        p1: f32,
+    ) -> Result<Vec<f32>> {
+        let args = [
+            xla::Literal::vec1(&key[..]),
+            xla::Literal::vec1(&off[..]),
+            xla::Literal::vec1(&[p0, p1][..]),
+        ];
+        let out = self.run(name, &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Convenience: run the FastCaloSim hit-deposit artifact. Returns
+    /// (per-cell deposits, total energy).
+    pub fn run_calosim(
+        &self,
+        name: &str,
+        key: [u32; 2],
+        off: [u32; 2],
+        params: [f32; 5],
+    ) -> Result<(Vec<f32>, f32)> {
+        let args = [
+            xla::Literal::vec1(&key[..]),
+            xla::Literal::vec1(&off[..]),
+            xla::Literal::vec1(&params[..]),
+        ];
+        let out = self.run(name, &args)?;
+        let deposits = out[0].to_vec::<f32>()?;
+        let total = out[1].get_first_element::<f32>()?;
+        Ok((deposits, total))
+    }
+}

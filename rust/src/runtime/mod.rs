@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the "device" of the three-layer stack: the Pallas Philox kernel,
+//! fused with its range transform, lowered to HLO and run from Rust with
+//! Python nowhere on the request path. Pattern follows
+//! /opt/xla-example/load_hlo (HLO *text* interchange — see aot.py for why
+//! serialized protos are rejected by xla_extension 0.5.1).
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{PjrtRuntime, DEFAULT_ARTIFACT_DIR};

@@ -1,0 +1,133 @@
+//! Buffer API: encapsulating objects with runtime-tracked dependencies.
+//!
+//! "Buffers ... provide a simple yet powerful way for the SYCL runtime to
+//! handle data dependencies between kernels" (paper §4.1). A [`Buffer`]
+//! owns its storage; command groups declare accessors with an
+//! [`AccessMode`] and the queue derives RAW/WAR/WAW edges automatically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::event::Event;
+
+static NEXT_BUFFER_ID: AtomicU64 = AtomicU64::new(1);
+
+/// SYCL access modes (the subset the paper's listings use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessMode {
+    /// `access::mode::read`
+    Read,
+    /// `access::mode::write`
+    Write,
+    /// `access::mode::read_write`
+    ReadWrite,
+}
+
+impl AccessMode {
+    /// Does this access observe prior writes?
+    pub fn reads(self) -> bool {
+        matches!(self, AccessMode::Read | AccessMode::ReadWrite)
+    }
+
+    /// Does this access mutate the buffer?
+    pub fn writes(self) -> bool {
+        matches!(self, AccessMode::Write | AccessMode::ReadWrite)
+    }
+}
+
+#[derive(Debug, Default)]
+pub(crate) struct BufferDeps {
+    /// Last command that wrote the buffer.
+    pub last_write: Option<Event>,
+    /// Readers since the last write (WAR hazards).
+    pub readers_since_write: Vec<Event>,
+    /// Whether a device-resident copy exists (non-UMA devices insert an
+    /// implicit H2D transfer on first device use).
+    pub device_resident: bool,
+}
+
+#[derive(Debug)]
+pub(crate) struct BufferInner<T> {
+    pub id: u64,
+    pub data: Mutex<Vec<T>>,
+    /// Shared separately from the typed payload so the queue can track
+    /// dependencies for heterogeneous buffers uniformly.
+    pub deps: Arc<Mutex<BufferDeps>>,
+}
+
+/// A 1-D SYCL buffer of `T`.
+#[derive(Debug, Clone)]
+pub struct Buffer<T> {
+    pub(crate) inner: Arc<BufferInner<T>>,
+}
+
+impl<T: Clone + Default + Send + 'static> Buffer<T> {
+    /// Uninitialised (default-filled) buffer of length `n`.
+    pub fn new(n: usize) -> Self {
+        Buffer::from_vec(vec![T::default(); n])
+    }
+
+    /// Buffer taking ownership of host data.
+    pub fn from_vec(data: Vec<T>) -> Self {
+        Buffer {
+            inner: Arc::new(BufferInner {
+                id: NEXT_BUFFER_ID.fetch_add(1, Ordering::Relaxed),
+                data: Mutex::new(data),
+                deps: Arc::new(Mutex::new(BufferDeps::default())),
+            }),
+        }
+    }
+
+    /// Unique buffer id.
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// Length in elements.
+    pub fn len(&self) -> usize {
+        self.inner.data.lock().unwrap().len()
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Direct host snapshot WITHOUT timeline accounting — for tests and
+    /// assertions only. Production reads go through
+    /// [`crate::sycl::Queue::host_read`], which models the D2H transfer.
+    pub fn snapshot(&self) -> Vec<T> {
+        self.inner.data.lock().unwrap().clone()
+    }
+
+    /// Lock the backing store (used by accessors inside command closures).
+    pub fn lock(&self) -> MutexGuard<'_, Vec<T>> {
+        self.inner.data.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes() {
+        assert!(AccessMode::Read.reads() && !AccessMode::Read.writes());
+        assert!(!AccessMode::Write.reads() && AccessMode::Write.writes());
+        assert!(AccessMode::ReadWrite.reads() && AccessMode::ReadWrite.writes());
+    }
+
+    #[test]
+    fn unique_ids() {
+        let a = Buffer::<f32>::new(4);
+        let b = Buffer::<f32>::new(4);
+        assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn snapshot_reflects_mutation() {
+        let buf = Buffer::from_vec(vec![1u32, 2, 3]);
+        buf.lock()[1] = 99;
+        assert_eq!(buf.snapshot(), vec![1, 99, 3]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Dependency-DAG introspection over executed command records.
+//!
+//! The queue executes eagerly but records the full dependency structure;
+//! this module reconstructs the DAG for validation (the invariants the
+//! SYCL runtime guarantees — §3: "the correct ordering of kernel execution
+//! ... is guaranteed by SYCL runtime via a set of rules defined for
+//! dependency checking") and for timeline analytics (critical path,
+//! makespan, overlap).
+
+use std::collections::HashMap;
+
+use super::event::CommandRecord;
+
+/// Reconstructed DAG over a queue's command records.
+#[derive(Debug)]
+pub struct Dag<'a> {
+    records: &'a [CommandRecord],
+    by_id: HashMap<u64, &'a CommandRecord>,
+}
+
+/// Aggregate DAG statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DagStats {
+    /// Number of commands.
+    pub nodes: usize,
+    /// Number of dependency edges.
+    pub edges: usize,
+    /// Virtual makespan: max end - min start.
+    pub makespan_ns: u64,
+    /// Length of the longest dependency chain in virtual ns.
+    pub critical_path_ns: u64,
+    /// Sum of all command durations (serial time).
+    pub total_work_ns: u64,
+}
+
+impl<'a> Dag<'a> {
+    /// Build from records (as returned by `Queue::records`).
+    pub fn new(records: &'a [CommandRecord]) -> Self {
+        let by_id = records.iter().map(|r| (r.id, r)).collect();
+        Dag { records, by_id }
+    }
+
+    /// Every dependency must point to an earlier-submitted command
+    /// (the runtime can only depend on already-known nodes) and must be
+    /// temporally respected: dep.end <= node.start.
+    pub fn validate(&self) -> Result<(), String> {
+        for r in self.records {
+            for d in &r.dep_ids {
+                let dep = self
+                    .by_id
+                    .get(d)
+                    .ok_or_else(|| format!("cmd {} depends on unknown {}", r.id, d))?;
+                if dep.id >= r.id {
+                    return Err(format!("cmd {} depends on later cmd {}", r.id, dep.id));
+                }
+                if dep.virt_end_ns > r.virt_start_ns {
+                    return Err(format!(
+                        "cmd {} starts at {} before dep {} ends at {}",
+                        r.id, r.virt_start_ns, dep.id, dep.virt_end_ns
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// True if any two commands overlap on the virtual timeline.
+    pub fn has_overlap(&self) -> bool {
+        for (i, a) in self.records.iter().enumerate() {
+            for b in &self.records[i + 1..] {
+                if a.virt_start_ns < b.virt_end_ns && b.virt_start_ns < a.virt_end_ns {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Aggregate statistics.
+    pub fn stats(&self) -> DagStats {
+        let edges = self.records.iter().map(|r| r.dep_ids.len()).sum();
+        let min_start = self.records.iter().map(|r| r.virt_start_ns).min().unwrap_or(0);
+        let max_end = self.records.iter().map(|r| r.virt_end_ns).max().unwrap_or(0);
+        let total_work_ns =
+            self.records.iter().map(|r| r.virt_end_ns - r.virt_start_ns).sum();
+
+        // Longest path by DP over ids (deps always point backwards).
+        let mut longest: HashMap<u64, u64> = HashMap::new();
+        let mut critical = 0u64;
+        for r in self.records {
+            let dur = r.virt_end_ns - r.virt_start_ns;
+            let base = r
+                .dep_ids
+                .iter()
+                .filter_map(|d| longest.get(d).copied())
+                .max()
+                .unwrap_or(0);
+            let path = base + dur;
+            longest.insert(r.id, path);
+            critical = critical.max(path);
+        }
+
+        DagStats {
+            nodes: self.records.len(),
+            edges,
+            makespan_ns: max_end - min_start,
+            critical_path_ns: critical,
+            total_work_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{CommandCost, PlatformId};
+    use crate::sycl::{AccessMode, Buffer, CommandClass, Queue, SyclRuntimeProfile};
+
+    fn kernel(items: u64) -> CommandCost {
+        CommandCost::Kernel { bytes_read: 0, bytes_written: items * 4, items, tpb: 0 }
+    }
+
+    fn chain_queue(n: usize) -> Queue {
+        let q = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let buf = Buffer::<f32>::new(1 << 16);
+        for i in 0..n {
+            q.submit(|cgh| {
+                let acc = cgh.require(&buf, AccessMode::ReadWrite);
+                cgh.host_task(format!("k{i}"), CommandClass::Generate, kernel(1 << 16), move |_| {
+                    let _ = acc;
+                });
+            });
+        }
+        q
+    }
+
+    #[test]
+    fn chain_validates_and_has_no_overlap() {
+        let q = chain_queue(5);
+        let records = q.records();
+        let dag = Dag::new(&records);
+        dag.validate().unwrap();
+        assert!(!dag.has_overlap());
+        let stats = dag.stats();
+        // 5 kernels + the implicit first-use H2D upload.
+        assert_eq!(stats.nodes, 6);
+        assert_eq!(stats.edges, 5);
+        // A pure chain: critical path == total work.
+        assert_eq!(stats.critical_path_ns, stats.total_work_ns);
+    }
+
+    #[test]
+    fn fan_out_overlaps_and_critical_path_shorter_than_work() {
+        // Independent commands on different channels (compute vs copy)
+        // overlap on an out-of-order queue.
+        let q = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        for i in 0..4 {
+            let buf = Buffer::<f32>::new(1 << 20);
+            let class = if i % 2 == 0 { CommandClass::Generate } else { CommandClass::TransferD2H };
+            let cost = if i % 2 == 0 {
+                kernel(1 << 20)
+            } else {
+                crate::platform::CommandCost::Transfer {
+                    bytes: 4 << 20,
+                    dir: crate::platform::TransferDir::D2H,
+                }
+            };
+            q.submit(|cgh| {
+                let acc = cgh.require(&buf, AccessMode::Write);
+                cgh.host_task(format!("k{i}"), class, cost, move |_| {
+                    let _ = acc;
+                });
+            });
+        }
+        let records = q.records();
+        let dag = Dag::new(&records);
+        dag.validate().unwrap();
+        assert!(dag.has_overlap());
+        let stats = dag.stats();
+        assert!(stats.critical_path_ns < stats.total_work_ns);
+        assert!(stats.makespan_ns < stats.total_work_ns);
+    }
+}

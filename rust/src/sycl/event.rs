@@ -1,0 +1,117 @@
+//! Events and command records: the profiling layer of the runtime.
+
+use std::sync::Arc;
+
+/// Classification of commands for the Fig. 4 per-kernel breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommandClass {
+    /// Generator construction + seeding.
+    Setup,
+    /// The vendor-native generation kernel.
+    Generate,
+    /// The oneMKL-side range-transformation kernel.
+    Transform,
+    /// Implicit or explicit host-to-device copy.
+    TransferH2D,
+    /// Device-to-host copy.
+    TransferD2H,
+    /// Device memory allocation.
+    Malloc,
+    /// Anything else (host tasks, app logic).
+    Other,
+}
+
+impl CommandClass {
+    /// Stable token for CSV output.
+    pub fn token(self) -> &'static str {
+        match self {
+            CommandClass::Setup => "setup",
+            CommandClass::Generate => "generate",
+            CommandClass::Transform => "transform",
+            CommandClass::TransferH2D => "h2d",
+            CommandClass::TransferD2H => "d2h",
+            CommandClass::Malloc => "malloc",
+            CommandClass::Other => "other",
+        }
+    }
+}
+
+#[derive(Debug)]
+pub(crate) struct EventInner {
+    pub id: u64,
+    pub name: String,
+    pub class: CommandClass,
+    /// Virtual-timeline start (ns since queue creation).
+    pub virt_start_ns: u64,
+    /// Virtual-timeline end.
+    pub virt_end_ns: u64,
+    /// Real wall time the host spent executing the command's closure.
+    pub wall_ns: u64,
+}
+
+/// A completed command's handle — the SYCL `event` with
+/// `info::event_profiling` semantics (command_start / command_end on the
+/// virtual timeline).
+#[derive(Debug, Clone)]
+pub struct Event(pub(crate) Arc<EventInner>);
+
+impl Event {
+    /// Unique command id (submission order).
+    pub fn id(&self) -> u64 {
+        self.0.id
+    }
+
+    /// Command label.
+    pub fn name(&self) -> &str {
+        &self.0.name
+    }
+
+    /// Command classification.
+    pub fn class(&self) -> CommandClass {
+        self.0.class
+    }
+
+    /// Virtual `command_start` (ns).
+    pub fn profiling_command_start(&self) -> u64 {
+        self.0.virt_start_ns
+    }
+
+    /// Virtual `command_end` (ns).
+    pub fn profiling_command_end(&self) -> u64 {
+        self.0.virt_end_ns
+    }
+
+    /// Virtual duration (ns).
+    pub fn virtual_duration_ns(&self) -> u64 {
+        self.0.virt_end_ns - self.0.virt_start_ns
+    }
+
+    /// Real host wall time spent in the command closure (ns).
+    pub fn wall_ns(&self) -> u64 {
+        self.0.wall_ns
+    }
+}
+
+/// Immutable record of an executed command, kept by the queue for DAG
+/// introspection and the experiment drivers.
+#[derive(Debug, Clone)]
+pub struct CommandRecord {
+    /// Command id (== submission index).
+    pub id: u64,
+    /// Label.
+    pub name: String,
+    /// Classification.
+    pub class: CommandClass,
+    /// Ids of commands this one waited on (derived + explicit).
+    pub dep_ids: Vec<u64>,
+    /// Virtual start ns.
+    pub virt_start_ns: u64,
+    /// Virtual end ns.
+    pub virt_end_ns: u64,
+    /// Host wall ns for the closure.
+    pub wall_ns: u64,
+    /// Threads-per-block in effect (kernels only).
+    pub tpb: Option<u32>,
+    /// Achieved occupancy (kernels only).
+    pub occupancy: Option<f64>,
+}

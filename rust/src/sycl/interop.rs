@@ -1,0 +1,66 @@
+//! Interoperability handles (SYCL 2020 `interop_handle`).
+//!
+//! Inside a host task, the paper's code does
+//! `ih.get_native_mem<backend::cuda>(acc)` to reinterpret a SYCL accessor
+//! as a raw device pointer for cuRAND. Our equivalent hands back the locked
+//! backing store of the accessor's buffer plus the native-backend identity
+//! of the queue's device.
+
+use crate::platform::{PlatformKind, PlatformSpec};
+
+use super::queue::Accessor;
+
+/// Handle passed to host-task closures.
+#[derive(Debug, Clone)]
+pub struct InteropHandle {
+    spec: PlatformSpec,
+}
+
+impl InteropHandle {
+    pub(crate) fn new(spec: PlatformSpec) -> Self {
+        InteropHandle { spec }
+    }
+
+    /// The native backend this device maps to (`backend::cuda`,
+    /// `backend::hip`, ...).
+    pub fn native_backend(&self) -> &'static str {
+        match (self.spec.kind, self.spec.rng_library) {
+            (_, lib) if lib.starts_with("cuRAND") => "cuda",
+            (_, lib) if lib.starts_with("hipRAND") => "hip",
+            (PlatformKind::Cpu, _) => "host",
+            _ => "level_zero",
+        }
+    }
+
+    /// `interop_handle::get_native_mem`: raw access to an accessor's
+    /// storage for native API calls.
+    pub fn get_native_mem<'a, T: Clone + Default + Send + 'static>(
+        &self,
+        acc: &'a Accessor<T>,
+    ) -> std::sync::MutexGuard<'a, Vec<T>> {
+        acc.lock()
+    }
+
+    /// Device spec (native device queries).
+    pub fn device_spec(&self) -> &PlatformSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+
+    #[test]
+    fn backend_mapping() {
+        let ih = InteropHandle::new(PlatformId::A100.spec());
+        assert_eq!(ih.native_backend(), "cuda");
+        let ih = InteropHandle::new(PlatformId::Vega56.spec());
+        assert_eq!(ih.native_backend(), "hip");
+        let ih = InteropHandle::new(PlatformId::Rome7742.spec());
+        assert_eq!(ih.native_backend(), "host");
+        let ih = InteropHandle::new(PlatformId::Uhd630.spec());
+        assert_eq!(ih.native_backend(), "level_zero");
+    }
+}

@@ -1,0 +1,39 @@
+//! Mini-SYCL runtime substrate (DESIGN.md S1).
+//!
+//! A faithful reduction of the SYCL execution model the paper's
+//! measurements depend on:
+//!
+//! * **Queues** own a device + a runtime profile (DPC++ or hipSYCL) and
+//!   execute *command groups*.
+//! * **Buffers** are encapsulating objects; command groups declare
+//!   [`AccessMode`] accessors and the runtime derives the dependency DAG
+//!   (RAW/WAR/WAW) automatically, including implicit H2D/D2H transfer
+//!   commands on non-UMA devices.
+//! * **USM** allocations take the pointer-based path: no accessors, the
+//!   *user* supplies explicit event dependency lists (paper §4.1).
+//! * **Host tasks** are the interoperability mechanism (the paper's
+//!   `codeplay_host_task`): closures that run on the host, receive an
+//!   [`InteropHandle`], and produce side effects attributed to the device
+//!   timeline — exactly how the cuRAND/hipRAND calls are wired in.
+//!
+//! Execution is eager (commands run at submit), but *virtual time* is
+//! computed from the dependency structure: an out-of-order queue lets
+//! independent commands overlap on the virtual timeline, an in-order queue
+//! serialises them. Profiling info on [`Event`]s mirrors
+//! `info::event_profiling`.
+
+mod buffer;
+mod dag;
+mod event;
+mod interop;
+mod profile;
+mod queue;
+mod usm;
+
+pub use buffer::{AccessMode, Buffer};
+pub use dag::{Dag, DagStats};
+pub use event::{CommandClass, CommandRecord, Event};
+pub use interop::InteropHandle;
+pub use profile::SyclRuntimeProfile;
+pub use queue::{CommandGroupHandler, Queue};
+pub use usm::UsmBuffer;

@@ -1,0 +1,69 @@
+//! Unified shared memory allocations (paper §4.1 USM API).
+//!
+//! Pointer-style allocations: the runtime cannot derive dependencies from
+//! them, so USM command submissions carry explicit event lists
+//! ([`crate::sycl::Queue::submit_usm`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static NEXT_USM_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A `malloc_device`/`malloc_shared`-style allocation of `T`.
+#[derive(Debug, Clone)]
+pub struct UsmBuffer<T> {
+    id: u64,
+    data: Arc<Mutex<Vec<T>>>,
+}
+
+impl<T: Clone + Default + Send + 'static> UsmBuffer<T> {
+    /// Allocate `n` default-initialised elements (the queue models the
+    /// malloc latency — see [`crate::sycl::Queue::malloc_device`]).
+    pub(crate) fn new(n: usize) -> Self {
+        UsmBuffer {
+            id: NEXT_USM_ID.fetch_add(1, Ordering::Relaxed),
+            data: Arc::new(Mutex::new(vec![T::default(); n])),
+        }
+    }
+
+    /// Allocation id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Length in elements.
+    pub fn len(&self) -> usize {
+        self.data.lock().unwrap().len()
+    }
+
+    /// Whether empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw pointer-style access (what the interop kernel hands to
+    /// `curandGenerate`).
+    pub fn lock(&self) -> MutexGuard<'_, Vec<T>> {
+        self.data.lock().unwrap()
+    }
+
+    /// Host copy without timeline accounting (tests / assertions).
+    pub fn snapshot(&self) -> Vec<T> {
+        self.data.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_ids_and_storage() {
+        let a: UsmBuffer<f32> = UsmBuffer::new(8);
+        let b: UsmBuffer<f32> = UsmBuffer::new(8);
+        assert_ne!(a.id(), b.id());
+        a.lock()[0] = 3.5;
+        assert_eq!(a.snapshot()[0], 3.5);
+        assert_eq!(b.snapshot()[0], 0.0);
+    }
+}

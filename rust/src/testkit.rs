@@ -1,0 +1,131 @@
+//! Mini property-testing kit (substrate — proptest is unavailable offline).
+//!
+//! Deterministic randomized testing driven by our own Philox engine: a
+//! [`Gen`] produces structured random inputs from a seed; [`forall`] runs a
+//! property over many cases and reports the failing seed + case for exact
+//! reproduction (`PORTARNG_PROPTEST_SEED=<n>` to re-run a failure).
+
+use crate::rng::engines::{Engine, PhiloxEngine};
+
+/// Deterministic input generator for property tests.
+pub struct Gen {
+    engine: PhiloxEngine,
+}
+
+impl Gen {
+    /// New generator from a case seed.
+    pub fn new(seed: u64) -> Self {
+        Gen { engine: PhiloxEngine::new(seed) }
+    }
+
+    /// Uniform u32.
+    pub fn u32(&mut self) -> u32 {
+        self.engine.next_u32()
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        (self.engine.next_u32() as u64) << 32 | self.engine.next_u32() as u64
+    }
+
+    /// Uniform in [lo, hi] (inclusive).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.u64() % (hi - lo + 1)
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// f32 in [0, 1).
+    pub fn unit_f32(&mut self) -> f32 {
+        crate::rng::u32_to_uniform_f32(self.u32())
+    }
+
+    /// f32 in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.unit_f32() * (hi - lo)
+    }
+
+    /// Bool with probability `p`.
+    pub fn bool_with(&mut self, p: f32) -> bool {
+        self.unit_f32() < p
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Vector of n draws.
+    pub fn vec_u32(&mut self, n: usize) -> Vec<u32> {
+        let mut v = vec![0u32; n];
+        self.engine.fill_u32(&mut v);
+        v
+    }
+}
+
+/// Run `cases` random property checks. The property returns `Err(msg)` to
+/// fail; the panic message includes the exact case seed.
+pub fn forall(name: &str, cases: usize, property: impl Fn(&mut Gen) -> Result<(), String>) {
+    let base = std::env::var("PORTARNG_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    let case_seeds: Vec<u64> = match base {
+        Some(s) => vec![s],
+        None => (0..cases as u64).map(|i| 0x9E37_79B9u64.wrapping_mul(i + 1)).collect(),
+    };
+    for seed in case_seeds {
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = property(&mut gen) {
+            panic!(
+                "property `{name}` failed for seed {seed}: {msg}\n\
+                 reproduce with PORTARNG_PROPTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u32-in-range", 50, |g| {
+            let x = g.range(10, 20);
+            if (10..=20).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        assert_eq!(a.vec_u32(16), b.vec_u32(16));
+        assert_eq!(a.f32_in(-1.0, 1.0), b.f32_in(-1.0, 1.0));
+    }
+
+    #[test]
+    fn choose_covers_all_elements() {
+        let mut g = Gen::new(1);
+        let xs = [0usize, 1, 2, 3];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[*g.choose(&xs)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

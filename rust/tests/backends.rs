@@ -1,0 +1,206 @@
+//! Backend-layer integration: the generate API over every backend,
+//! engine parity across vendors, and property tests on stream slicing.
+
+use portarng::backends::{
+    CurandBackend, HiprandBackend, MklCpuBackend, OneMklIntelGpuBackend, RngBackend,
+};
+use portarng::platform::PlatformId;
+use portarng::rng::{
+    generate_buffer, generate_usm, Distribution, Engine, EngineKind, GaussianMethod,
+    PhiloxEngine,
+};
+use portarng::sycl::{Buffer, Queue, SyclRuntimeProfile};
+use portarng::testkit;
+
+fn backends() -> Vec<(Box<dyn RngBackend>, PlatformId)> {
+    vec![
+        (Box::new(CurandBackend::new()) as Box<dyn RngBackend>, PlatformId::A100),
+        (Box::new(HiprandBackend::new()), PlatformId::Vega56),
+        (Box::new(MklCpuBackend::new(PlatformId::Rome7742)), PlatformId::Rome7742),
+        (Box::new(OneMklIntelGpuBackend::new()), PlatformId::Uhd630),
+    ]
+}
+
+#[test]
+fn generate_buffer_parity_across_all_backends() {
+    let n = 2048;
+    let distr = Distribution::uniform(-4.0, 4.0);
+    let mut reference: Option<Vec<f32>> = None;
+    for (backend, platform) in backends() {
+        let queue = Queue::new(platform, SyclRuntimeProfile::for_platform(&platform.spec()));
+        let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 99).unwrap();
+        let buf = Buffer::<f32>::new(n);
+        generate_buffer(&queue, &mut gen, distr, n, &buf).unwrap();
+        let out = queue.host_read(&buf);
+        match &reference {
+            None => reference = Some(out),
+            Some(r) => assert_eq!(&out, r, "backend {}", backend.name()),
+        }
+    }
+}
+
+#[test]
+fn prop_buffer_usm_equivalence_any_seed_any_engine() {
+    testkit::forall("buffer-usm-equiv", 20, |g| {
+        let seed = g.u64();
+        let n = g.usize_in(4, 3000);
+        let kind = *g.choose(&[
+            EngineKind::Philox4x32x10,
+            EngineKind::Mrg32k3a,
+            EngineKind::Xorwow,
+            EngineKind::Mt19937,
+        ]);
+        let a = g.f32_in(-100.0, 100.0);
+        let b = a + g.f32_in(0.1, 100.0);
+        let distr = Distribution::Uniform { a, b, method: Default::default() };
+
+        let backend = HiprandBackend::new();
+        let qb = Queue::new(PlatformId::Vega56, SyclRuntimeProfile::HipSycl);
+        let mut g1 = backend.create_generator(kind, seed).unwrap();
+        let buf = Buffer::<f32>::new(n);
+        generate_buffer(&qb, &mut g1, distr, n, &buf).unwrap();
+
+        let qu = Queue::new(PlatformId::Vega56, SyclRuntimeProfile::HipSycl);
+        let mut g2 = backend.create_generator(kind, seed).unwrap();
+        let usm = qu.malloc_device::<f32>(n);
+        let ev = generate_usm(&qu, &mut g2, distr, n, &usm, &[]).unwrap();
+        let out_usm = qu.usm_to_host(&usm, std::slice::from_ref(&ev));
+
+        if qb.host_read(&buf) != out_usm {
+            return Err(format!("buffer != usm for {kind:?} seed {seed}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_values_respect_range() {
+    testkit::forall("range-respected", 25, |g| {
+        let a = g.f32_in(-1000.0, 1000.0);
+        let b = a + g.f32_in(0.001, 1000.0);
+        let n = g.usize_in(1, 4000);
+        let backend = CurandBackend::new();
+        let mut gen = backend
+            .create_generator(EngineKind::Philox4x32x10, g.u64())
+            .unwrap();
+        let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let buf = Buffer::<f32>::new(n);
+        generate_buffer(
+            &queue,
+            &mut gen,
+            Distribution::Uniform { a, b, method: Default::default() },
+            n,
+            &buf,
+        )
+        .unwrap();
+        let out = queue.host_read(&buf);
+        let tol = (b - a).abs() * f32::EPSILON * 4.0 + 1e-6;
+        for &x in &out {
+            if x < a - tol || x > b + tol {
+                return Err(format!("{x} outside [{a}, {b})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn vendor_backends_reject_what_the_paper_says() {
+    // §4.1/§4.3: no ICDF for pseudorandom engines, no exponential/poisson
+    // native entry points on cuRAND/hipRAND.
+    for backend in [
+        Box::new(CurandBackend::new()) as Box<dyn RngBackend>,
+        Box::new(HiprandBackend::new()),
+    ] {
+        let icdf = Distribution::Gaussian {
+            mean: 0.0,
+            stddev: 1.0,
+            method: GaussianMethod::Icdf,
+        };
+        assert!(!backend.supports(EngineKind::Philox4x32x10, &icdf));
+        assert!(!backend
+            .supports(EngineKind::Philox4x32x10, &Distribution::Exponential { lambda: 1.0 }));
+        // Quasirandom engines do get ICDF.
+        assert!(backend.supports(EngineKind::Sobol32, &icdf));
+
+        let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 1).unwrap();
+        let mut out = vec![0f32; 8];
+        assert!(gen.generate_canonical(&icdf, &mut out).is_err());
+    }
+}
+
+#[test]
+fn onemkl_native_backends_support_everything() {
+    let mkl = MklCpuBackend::new(PlatformId::CoreI7_10875H);
+    for kind in EngineKind::ALL {
+        for distr in [
+            Distribution::uniform(0.0, 2.0),
+            Distribution::Gaussian { mean: 0.0, stddev: 1.0, method: GaussianMethod::Icdf },
+            Distribution::Exponential { lambda: 0.5 },
+            Distribution::Bits,
+        ] {
+            assert!(mkl.supports(kind, &distr), "{kind:?}/{distr:?}");
+        }
+    }
+}
+
+#[test]
+fn generator_lifecycle_state_machine() {
+    testkit::forall("generator-lifecycle", 15, |g| {
+        let backend = CurandBackend::new();
+        let mut gen = backend
+            .create_generator(EngineKind::Philox4x32x10, g.u64())
+            .unwrap();
+        // Random op sequence; after destroy everything must fail.
+        let mut destroyed = false;
+        for _ in 0..g.usize_in(1, 10) {
+            let op = g.usize_in(0, 3);
+            let r = match op {
+                0 => gen.set_seed(g.u64()),
+                1 => gen.set_offset(g.u64() % 1_000_000),
+                2 => {
+                    let mut out = vec![0f32; 16];
+                    gen.generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out)
+                }
+                _ => {
+                    let r = gen.destroy();
+                    if r.is_ok() {
+                        destroyed = true;
+                    }
+                    r
+                }
+            };
+            if destroyed && op != 3 && r.is_ok() {
+                return Err("operation succeeded on destroyed handle".into());
+            }
+            if destroyed {
+                break;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn seed_offset_reproduces_subsequences() {
+    testkit::forall("offset-subsequence", 15, |g| {
+        let seed = g.u64();
+        let skip = g.range(0, 100_000);
+        let n = g.usize_in(1, 2000);
+
+        let backend = CurandBackend::new();
+        let mut gen = backend.create_generator(EngineKind::Philox4x32x10, seed).unwrap();
+        gen.set_offset(skip).unwrap();
+        let mut out = vec![0f32; n];
+        gen.generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out).unwrap();
+
+        let mut e = PhiloxEngine::new(seed);
+        e.skip_ahead(skip);
+        let mut want = vec![0f32; n];
+        e.fill_uniform_f32(&mut want);
+        if out != want {
+            return Err(format!("subsequence mismatch at skip {skip}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,132 @@
+//! Burner application integration: paper-shape assertions over the
+//! platform fleet (the qualitative claims of Figs. 2-4 must hold for any
+//! calibration of the models — see DESIGN.md §3 "expected shapes").
+
+use portarng::burner::{
+    run_burner, run_burner_auto, run_burner_virtual, BurnerApi, BurnerConfig,
+};
+use portarng::platform::PlatformId;
+use portarng::testkit;
+
+fn cfg(p: PlatformId, api: BurnerApi, batch: usize) -> BurnerConfig {
+    let mut c = BurnerConfig::paper_default(p, api, batch);
+    c.iterations = 8;
+    c
+}
+
+fn mean_ms(p: PlatformId, api: BurnerApi, batch: usize) -> f64 {
+    run_burner_auto(&cfg(p, api, batch)).unwrap().mean_total_ns() / 1e6
+}
+
+#[test]
+fn shape1_latency_floor_then_linear_growth() {
+    // Fig 2/3: flat in the overhead-dominated region, ~linear past 10^6.
+    for p in [PlatformId::A100, PlatformId::Vega56, PlatformId::Rome7742] {
+        let t1 = mean_ms(p, BurnerApi::SyclBuffer, 1);
+        let t1k = mean_ms(p, BurnerApi::SyclBuffer, 1_000);
+        assert!(t1k < t1 * 2.0, "{p:?}: no latency floor ({t1} vs {t1k})");
+        let t1e7 = mean_ms(p, BurnerApi::SyclBuffer, 10_000_000);
+        let t1e8 = mean_ms(p, BurnerApi::SyclBuffer, 100_000_000);
+        let slope = t1e8 / t1e7;
+        assert!((5.0..15.0).contains(&slope), "{p:?}: slope {slope}");
+    }
+}
+
+#[test]
+fn shape2_buffer_usm_equal_on_cpus_and_igpu() {
+    // Fig 2: "little overhead is introduced when using the USM API versus
+    // buffers" on the x86 CPUs and the iGPU.
+    for p in [PlatformId::Rome7742, PlatformId::CoreI7_10875H, PlatformId::Uhd630] {
+        for batch in [100usize, 100_000, 100_000_000] {
+            let b = mean_ms(p, BurnerApi::SyclBuffer, batch);
+            let u = mean_ms(p, BurnerApi::SyclUsm, batch);
+            let ratio = u / b;
+            assert!((0.8..1.25).contains(&ratio), "{p:?}@{batch}: usm/buffer {ratio}");
+        }
+    }
+}
+
+#[test]
+fn shape3_hipsycl_usm_beats_native_at_small_batch() {
+    // Fig 3a / Table 2 {Vega56}: the hipSYCL port is at par, USM slightly
+    // ahead of the native app at small batches.
+    let native = mean_ms(PlatformId::Vega56, BurnerApi::Native, 100);
+    let usm = mean_ms(PlatformId::Vega56, BurnerApi::SyclUsm, 100);
+    assert!(usm < native, "usm {usm} !< native {native}");
+    // And converges at 10^8.
+    let n8 = mean_ms(PlatformId::Vega56, BurnerApi::Native, 100_000_000);
+    let u8_ = mean_ms(PlatformId::Vega56, BurnerApi::SyclUsm, 100_000_000);
+    assert!((u8_ / n8 - 1.0).abs() < 0.1, "no convergence: {u8_} vs {n8}");
+}
+
+#[test]
+fn shape4_dpcpp_usm_penalty_on_a100() {
+    // Fig 3b / Table 2 {A100}: DPC++ USM trails native markedly at small
+    // batch; buffer stays at par or better.
+    let native = mean_ms(PlatformId::A100, BurnerApi::Native, 1_000);
+    let buffer = mean_ms(PlatformId::A100, BurnerApi::SyclBuffer, 1_000);
+    let usm = mean_ms(PlatformId::A100, BurnerApi::SyclUsm, 1_000);
+    assert!(buffer <= native * 1.05, "buffer {buffer} vs native {native}");
+    assert!(usm > native * 2.0, "usm {usm} not penalised vs {native}");
+    // "Slight overhead at large batch sizes DPC++ USM" (Fig 3b).
+    let n8 = mean_ms(PlatformId::A100, BurnerApi::Native, 100_000_000);
+    let u8_ = mean_ms(PlatformId::A100, BurnerApi::SyclUsm, 100_000_000);
+    let rel = u8_ / n8 - 1.0;
+    assert!((-0.05..0.25).contains(&rel), "large-batch usm rel overhead {rel}");
+}
+
+#[test]
+fn shape5_kernel_durations_equal_occupancy_differs() {
+    // Fig 4: generate-kernel duration statistically equal native vs SYCL,
+    // occupancy diverging in the 10^2-10^4 region (tpb 1024 vs 256).
+    let batch = 10_000usize;
+    let nat = run_burner(&cfg(PlatformId::A100, BurnerApi::Native, batch)).unwrap();
+    let syc = run_burner(&cfg(PlatformId::A100, BurnerApi::SyclBuffer, batch)).unwrap();
+    let d_nat = nat.breakdown.generate_ns as f64;
+    let d_syc = syc.breakdown.generate_ns as f64;
+    assert!((d_syc / d_nat - 1.0).abs() < 0.35, "durations diverge: {d_nat} vs {d_syc}");
+    assert_eq!(nat.breakdown.tpb, 256);
+    assert_eq!(syc.breakdown.tpb, 1024);
+    assert!(
+        syc.breakdown.generate_occupancy > nat.breakdown.generate_occupancy,
+        "sycl occupancy {} !> native {}",
+        syc.breakdown.generate_occupancy,
+        nat.breakdown.generate_occupancy
+    );
+}
+
+#[test]
+fn uma_igpu_has_zero_transfer_cost() {
+    let r = run_burner(&cfg(PlatformId::Uhd630, BurnerApi::SyclBuffer, 1 << 20)).unwrap();
+    // Zero-copy: D2H recorded but ~free relative to the generate kernel.
+    assert!(r.breakdown.d2h_ns < r.breakdown.generate_ns / 10);
+}
+
+#[test]
+fn prop_virtual_real_consistency() {
+    // The virtual path must track the real path for any config under the
+    // cap (same structure, same costs).
+    testkit::forall("virtual-real", 10, |g| {
+        let p = *g.choose(&[PlatformId::A100, PlatformId::Vega56, PlatformId::Rome7742]);
+        let api = *g.choose(&[BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm]);
+        let batch = g.usize_in(1, 1 << 18);
+        let mut c = cfg(p, api, batch);
+        c.iterations = 3;
+        let real = run_burner(&c).map_err(|e| e.to_string())?.mean_total_ns();
+        let virt = run_burner_virtual(&c).map_err(|e| e.to_string())?.mean_total_ns();
+        let ratio = real / virt;
+        if !(0.7..1.4).contains(&ratio) {
+            return Err(format!("{p:?}/{api:?}@{batch}: real/virtual {ratio}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn samples_are_valid_uniforms() {
+    for api in [BurnerApi::Native, BurnerApi::SyclBuffer, BurnerApi::SyclUsm] {
+        let r = run_burner(&cfg(PlatformId::A100, api, 4096)).unwrap();
+        assert!(!r.sample.is_empty(), "{api:?}");
+        assert!(r.sample.iter().all(|&x| (0.0..1.0).contains(&x)), "{api:?}");
+    }
+}

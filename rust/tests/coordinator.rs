@@ -1,0 +1,97 @@
+//! Coordinator integration: service batching invariants, registry
+//! dispatch, heuristic selection.
+
+use portarng::coordinator::{BackendHeuristic, BackendRegistry, RngService};
+use portarng::platform::PlatformId;
+use portarng::rng::{Engine, PhiloxEngine};
+use portarng::testkit;
+
+#[test]
+fn prop_batched_service_equals_dedicated_stream() {
+    // The fundamental batching invariant: any sequence of requests, any
+    // batching thresholds — concatenated replies equal one dedicated
+    // Philox stream.
+    testkit::forall("service-stream-exact", 12, |g| {
+        let seed = g.u64();
+        let max_batch = g.usize_in(64, 4096);
+        let max_requests = g.usize_in(1, 8);
+        let svc = RngService::spawn(PlatformId::A100, seed, max_batch, max_requests);
+        let n_req = g.usize_in(1, 12);
+        let sizes: Vec<usize> = (0..n_req).map(|_| g.usize_in(1, 700)).collect();
+        // Sizes multiples of 4 keep the padded launch == payload so the
+        // dedicated stream lines up exactly.
+        let sizes: Vec<usize> = sizes.iter().map(|s| s.div_ceil(4) * 4).collect();
+        let rxs: Vec<_> = sizes.iter().map(|&n| svc.generate(n, (0.0, 1.0))).collect();
+        svc.flush();
+        let mut got = Vec::new();
+        for rx in rxs {
+            got.extend(rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?);
+        }
+        let mut want = vec![0f32; got.len()];
+        PhiloxEngine::new(seed).fill_uniform_f32(&mut want);
+        if got != want {
+            return Err(format!("stream mismatch ({} numbers)", got.len()));
+        }
+        svc.shutdown().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn service_counts_launches_not_requests() {
+    let svc = RngService::spawn(PlatformId::Vega56, 1, 1 << 20, 4);
+    for _ in 0..8 {
+        let _ = svc.generate(100, (0.0, 1.0));
+    }
+    svc.flush();
+    let stats = svc.shutdown().unwrap();
+    assert_eq!(stats.requests, 8);
+    assert_eq!(stats.launches, 2); // 8 requests / max_requests=4
+}
+
+#[test]
+fn registry_round_trip_all_platforms() {
+    let reg = BackendRegistry::new();
+    for p in PlatformId::ALL {
+        let backend = reg.native_for(p);
+        let mut gen = backend
+            .create_generator(portarng::rng::EngineKind::Philox4x32x10, 3)
+            .unwrap();
+        let mut out = vec![0f32; 64];
+        gen.generate_canonical(&portarng::rng::Distribution::uniform(0.0, 1.0), &mut out)
+            .unwrap();
+        assert!(out.iter().all(|&x| (0.0..1.0).contains(&x)), "{p:?}");
+    }
+}
+
+#[test]
+fn heuristic_crossovers_ordered_by_device_overheads() {
+    let a100 = BackendHeuristic::calibrate(PlatformId::A100, PlatformId::Rome7742);
+    let vega = BackendHeuristic::calibrate(PlatformId::Vega56, PlatformId::XeonGold5220);
+    // Both GPUs need enough work to amortise launch+runtime overheads.
+    for h in [&a100, &vega] {
+        assert!(h.crossover > 1_000, "crossover {}", h.crossover);
+        assert!(h.crossover < 100_000_000, "crossover {}", h.crossover);
+    }
+}
+
+#[test]
+fn heuristic_never_worse_than_worst_fixed_choice() {
+    use portarng::burner::{run_burner_virtual, BurnerApi, BurnerConfig};
+    let h = BackendHeuristic::calibrate(PlatformId::A100, PlatformId::Rome7742);
+    for batch in [10usize, 10_000, 1_000_000, 100_000_000] {
+        let t = |p: PlatformId| {
+            let mut c = BurnerConfig::paper_default(p, BurnerApi::SyclBuffer, batch);
+            c.iterations = 3;
+            let r = run_burner_virtual(&c).unwrap();
+            r.mean_total_ns() - r.breakdown.d2h_ns as f64
+        };
+        let host = t(PlatformId::Rome7742);
+        let device = t(PlatformId::A100);
+        let picked = t(h.select(batch));
+        assert!(
+            picked <= host.max(device) * 1.05,
+            "batch {batch}: picked {picked} vs {host}/{device}"
+        );
+    }
+}

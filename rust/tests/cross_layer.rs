@@ -1,0 +1,155 @@
+//! THE core correctness signal (DESIGN.md §4): the three implementations of
+//! the numerics contract — Rust engines, the AOT-compiled Pallas kernel
+//! (via PJRT), and (transitively, via pytest) the jnp oracle — agree on the
+//! Philox4x32x10 stream.
+//!
+//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`.
+
+use portarng::rng::{Engine, PhiloxEngine};
+use portarng::runtime::PjrtRuntime;
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::discover().expect("run `make artifacts` first")
+}
+
+fn rust_uniform(seed_lo: u32, seed_hi: u32, block_off: u64, n: usize) -> Vec<f32> {
+    let seed = (seed_hi as u64) << 32 | seed_lo as u64;
+    let mut e = PhiloxEngine::with_offset(seed, block_off * 4);
+    let mut out = vec![0f32; n];
+    e.fill_uniform_f32(&mut out);
+    out
+}
+
+/// FMA contraction bound: XLA may fuse a + u*(b-a); the Rust path doesn't.
+fn assert_close(got: &[f32], want: &[f32], span: f32) {
+    assert_eq!(got.len(), want.len());
+    let tol = span * f32::EPSILON * 2.0;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= tol, "idx {i}: {g} vs {w} (tol {tol})");
+    }
+}
+
+#[test]
+fn pallas_artifact_is_bit_exact_on_unit_range() {
+    let rt = runtime();
+    // [0,1): a=0, b=1 makes the transform a*1+0 -> bit-exact across layers.
+    let out = rt
+        .run_burner("burner_uniform_4096", [77, 88], [0, 0], 0.0, 1.0)
+        .unwrap();
+    let want = rust_uniform(77, 88, 0, 4096);
+    assert_eq!(out, want, "u01 stream must be bit-exact");
+}
+
+#[test]
+fn pallas_artifact_matches_rust_with_range() {
+    let rt = runtime();
+    let out = rt
+        .run_burner("burner_uniform_4096", [1234, 5678], [0, 0], -2.0, 3.0)
+        .unwrap();
+    let want: Vec<f32> =
+        rust_uniform(1234, 5678, 0, 4096).iter().map(|u| -2.0 + u * 5.0).collect();
+    assert_close(&out, &want, 5.0);
+}
+
+#[test]
+fn counter_offset_matches_skip_ahead() {
+    let rt = runtime();
+    // Offset by 1000 counter blocks == Rust skip-ahead of 4000 draws.
+    let out = rt
+        .run_burner("burner_uniform_4096", [9, 0], [1000, 0], 0.0, 1.0)
+        .unwrap();
+    let want = rust_uniform(9, 0, 1000, 4096);
+    assert_eq!(out, want);
+}
+
+#[test]
+fn high_offset_word_is_honoured() {
+    let rt = runtime();
+    // off_hi = 2 -> blocks start at 2^33.
+    let out = rt
+        .run_burner("burner_uniform_4096", [5, 6], [0, 2], 0.0, 1.0)
+        .unwrap();
+    let want = rust_uniform(5, 6, 2u64 << 32, 4096);
+    assert_eq!(out, want);
+}
+
+#[test]
+fn all_burner_sizes_agree() {
+    let rt = runtime();
+    for (n, name) in rt.manifest().burner_sizes() {
+        let out = rt.run_burner(&name, [42, 0], [0, 0], 0.0, 1.0).unwrap();
+        let want = rust_uniform(42, 0, 0, n);
+        assert_eq!(out, want, "artifact {name}");
+    }
+}
+
+#[test]
+fn two_kernel_variant_matches_fused() {
+    let rt = runtime();
+    let fused = rt
+        .run_burner("burner_uniform_65536", [3, 4], [0, 0], 10.0, 20.0)
+        .unwrap();
+    let twok = rt
+        .run_burner("burner_uniform_2k_65536", [3, 4], [0, 0], 10.0, 20.0)
+        .unwrap();
+    assert_close(&twok, &fused, 20.0);
+}
+
+#[test]
+fn gaussian_artifact_moments_and_reference() {
+    let rt = runtime();
+    let out = rt
+        .run_burner("burner_gaussian_65536", [7, 7], [0, 0], 1.0, 2.0)
+        .unwrap();
+    let n = out.len() as f64;
+    let mean: f64 = out.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var: f64 =
+        out.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n;
+    assert!((mean - 1.0).abs() < 0.03, "mean={mean}");
+    assert!((var.sqrt() - 2.0).abs() < 0.03, "std={}", var.sqrt());
+
+    // Box-Muller over the same uniforms in Rust.
+    let u = rust_uniform(7, 7, 0, 65536);
+    let mut want = Vec::with_capacity(65536);
+    for pair in u.chunks(2) {
+        let (z0, z1) = portarng::rng::distributions::box_muller_pair(pair[0], pair[1]);
+        want.push(1.0 + 2.0 * z0);
+        want.push(1.0 + 2.0 * z1);
+    }
+    for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn calosim_artifact_conserves_energy_and_matches_scale() {
+    let rt = runtime();
+    let n_hits = 16384f32;
+    let e_scale = 65.0 / n_hits;
+    let (deposits, total) = rt
+        .run_calosim("calosim_hits_16384", [11, 13], [0, 0], [0.5, 1.0, e_scale, 0.05, 0.05])
+        .unwrap();
+    let dep_sum: f64 = deposits.iter().map(|&x| x as f64).sum();
+    assert!((dep_sum - f64::from(total)).abs() / f64::from(total) < 1e-3);
+    assert!((50.0..80.0).contains(&total), "total={total}");
+    assert_eq!(deposits.len(), 190_000);
+}
+
+#[test]
+fn pjrt_backend_generator_is_stream_exact() {
+    use portarng::backends::{PjrtBackend, RngBackend};
+    use portarng::rng::{Distribution, EngineKind};
+    use std::sync::Arc;
+
+    let rt = Arc::new(runtime());
+    let backend = PjrtBackend::new(rt).unwrap();
+    let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 42).unwrap();
+    let mut out = vec![0f32; 3000];
+    gen.generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out).unwrap();
+    assert_eq!(out, rust_uniform(42, 0, 0, 3000));
+
+    // Second call continues at the padded block offset (4096 numbers).
+    let mut out2 = vec![0f32; 100];
+    gen.generate_canonical(&Distribution::uniform(0.0, 1.0), &mut out2).unwrap();
+    assert_eq!(out2, rust_uniform(42, 0, 1024, 100));
+}

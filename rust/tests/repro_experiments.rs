@@ -1,0 +1,143 @@
+//! Experiment drivers (quick mode): every table/figure regenerates and its
+//! headline shape matches the paper (the quantitative check behind
+//! EXPERIMENTS.md).
+
+use portarng::repro::{fig2, fig3, fig4, fig5, table1, table2, ResultTable};
+
+fn get_f(t: &ResultTable, filters: &[(&str, &str)], col: &str) -> f64 {
+    let idx: Vec<usize> = filters
+        .iter()
+        .map(|(c, _)| t.headers.iter().position(|h| h == c).unwrap())
+        .collect();
+    let gi = t.headers.iter().position(|h| h == col).unwrap_or_else(|| panic!("col {col}"));
+    let row = t
+        .rows
+        .iter()
+        .find(|r| idx.iter().zip(filters).all(|(&i, (_, v))| r[i] == *v))
+        .unwrap_or_else(|| panic!("row {filters:?}"));
+    row[gi].parse().unwrap()
+}
+
+#[test]
+fn table1_has_six_platforms_and_versions() {
+    let t = table1();
+    assert_eq!(t.rows.len(), 6);
+    let md = t.to_markdown();
+    for needle in ["cuRAND", "hipRAND", "oneMKL", "hipSYCL", "DPC++"] {
+        assert!(md.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn fig2_buffer_usm_parity_and_monotone_growth() {
+    let tables = fig2(true).unwrap();
+    let t = &tables[0];
+    assert_eq!(t.rows.len(), 3 * 2 * 9);
+    // Parity at every point on CPUs/iGPU.
+    for p in ["rome7742", "i7-10875h", "uhd630"] {
+        for batch in ["1", "10000", "100000000"] {
+            let b = get_f(t, &[("platform", p), ("api", "sycl-buffer"), ("batch", batch)], "mean_ms");
+            let u = get_f(t, &[("platform", p), ("api", "sycl-usm"), ("batch", batch)], "mean_ms");
+            assert!((u / b - 1.0).abs() < 0.3, "{p}@{batch}: {b} vs {u}");
+        }
+        // Growth from 1 to 1e8.
+        let small = get_f(t, &[("platform", p), ("api", "sycl-buffer"), ("batch", "1")], "mean_ms");
+        let large = get_f(
+            t,
+            &[("platform", p), ("api", "sycl-buffer"), ("batch", "100000000")],
+            "mean_ms",
+        );
+        assert!(large > small * 20.0, "{p}: {small} -> {large}");
+    }
+}
+
+#[test]
+fn fig3_native_vs_sycl_shapes() {
+    let tables = fig3(true).unwrap();
+    let t = &tables[0];
+    // Vega: SYCL USM at/below native at small batch; converged at 1e8.
+    let nat = get_f(t, &[("platform", "vega56"), ("api", "native"), ("batch", "100")], "mean_ms");
+    let usm = get_f(t, &[("platform", "vega56"), ("api", "sycl-usm"), ("batch", "100")], "mean_ms");
+    assert!(usm < nat * 1.02, "vega small: usm {usm} vs native {nat}");
+    // A100: USM penalty at small batch.
+    let nat = get_f(t, &[("platform", "a100"), ("api", "native"), ("batch", "100")], "mean_ms");
+    let usm = get_f(t, &[("platform", "a100"), ("api", "sycl-usm"), ("batch", "100")], "mean_ms");
+    assert!(usm > nat * 2.0, "a100 small: usm {usm} vs native {nat}");
+    // Everything converges at 1e8 (within 25%).
+    for p in ["vega56", "a100"] {
+        let nat = get_f(t, &[("platform", p), ("api", "native"), ("batch", "100000000")], "mean_ms");
+        for api in ["sycl-buffer", "sycl-usm"] {
+            let s = get_f(t, &[("platform", p), ("api", api), ("batch", "100000000")], "mean_ms");
+            assert!((s / nat - 1.0).abs() < 0.25, "{p}/{api}@1e8: {s} vs {nat}");
+        }
+    }
+}
+
+#[test]
+fn fig4_durations_equal_occupancy_diverges() {
+    let tables = fig4(true).unwrap();
+    let (dur, occ) = (&tables[0], &tables[1]);
+    // Generate-kernel duration native vs sycl-buffer statistically equal.
+    for batch in ["10000", "100000000"] {
+        let n = get_f(dur, &[("api", "native"), ("batch", batch)], "generate_ms");
+        let s = get_f(dur, &[("api", "sycl-buffer"), ("batch", batch)], "generate_ms");
+        assert!((s / n - 1.0).abs() < 0.35, "batch {batch}: {n} vs {s}");
+    }
+    // Occupancy: tpb 256 vs 1024 and the 10^2-10^4 divergence.
+    let tn = get_f(occ, &[("api", "native"), ("batch", "10000")], "tpb");
+    let ts = get_f(occ, &[("api", "sycl-buffer"), ("batch", "10000")], "tpb");
+    assert_eq!(tn as u32, 256);
+    assert_eq!(ts as u32, 1024);
+    let on = get_f(occ, &[("api", "native"), ("batch", "10000")], "generate_occupancy");
+    let os = get_f(occ, &[("api", "sycl-buffer"), ("batch", "10000")], "generate_occupancy");
+    assert!(os > on, "occupancy {os} !> {on}");
+    // Saturated at 1e8 for both.
+    let on8 = get_f(occ, &[("api", "native"), ("batch", "100000000")], "generate_occupancy");
+    assert!(on8 > 0.95);
+}
+
+#[test]
+fn table2_matches_paper_within_tolerance() {
+    let tables = table2(true).unwrap();
+    let t = &tables[0];
+    let check = |h: &str, col: &str, want: f64, tol: f64| {
+        let got = get_f(t, &[("H", h)], col);
+        assert!(
+            (got - want).abs() <= tol,
+            "{h}/{col}: got {got}, paper {want} (tol {tol})"
+        );
+    };
+    // Paper Table 2 values with calibration tolerance.
+    check("{Vega 56}", "P_buffer", 0.974, 0.05);
+    check("{Vega 56}", "P_usm", 1.076, 0.08);
+    check("{A100}", "P_buffer", 1.186, 0.08);
+    check("{A100}", "P_usm", 0.240, 0.06);
+    check("{Vega 56, A100}", "P_buffer", 1.070, 0.06);
+    check("{Vega 56, A100}", "P_usm", 0.393, 0.06);
+}
+
+#[test]
+fn fig5_gpu_cpu_and_workload_shapes() {
+    let tables = fig5(true).unwrap();
+    let t = &tables[0];
+    // No native row for the Radeon.
+    assert!(t
+        .rows
+        .iter()
+        .all(|r| !(r[1] == "vega56" && r[2] == "native")));
+    // single-e: ~80% reduction GPU vs CPU (sycl rows).
+    let cpu = get_f(t, &[("workload", "single-e"), ("platform", "rome7742"), ("api", "sycl")], "mean_s");
+    let gpu = get_f(t, &[("workload", "single-e"), ("platform", "a100"), ("api", "sycl")], "mean_s");
+    let reduction = 1.0 - gpu / cpu;
+    assert!((0.55..0.95).contains(&reduction), "reduction {reduction}");
+    // ttbar slower per event than single-e on every platform.
+    let se = get_f(t, &[("workload", "single-e"), ("platform", "a100"), ("api", "sycl")], "mean_s");
+    let tt = get_f(t, &[("workload", "ttbar"), ("platform", "a100"), ("api", "sycl")], "mean_s");
+    assert!(tt > se, "ttbar {tt} !> single-e {se} (different event counts still hold)");
+    // SYCL ≈ native on A100 for both workloads.
+    for w in ["single-e", "ttbar"] {
+        let n = get_f(t, &[("workload", w), ("platform", "a100"), ("api", "native")], "mean_s");
+        let s = get_f(t, &[("workload", w), ("platform", "a100"), ("api", "sycl")], "mean_s");
+        assert!((s / n - 1.0).abs() < 0.3, "{w}: sycl {s} vs native {n}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Property-based integration tests over the mini-SYCL runtime: random
+//! command graphs must always produce valid, dependency-respecting
+//! virtual timelines (the §3 runtime guarantee).
+
+use portarng::platform::{CommandCost, PlatformId};
+use portarng::sycl::{
+    AccessMode, Buffer, CommandClass, Dag, Queue, SyclRuntimeProfile,
+};
+use portarng::testkit;
+
+fn kernel(items: u64) -> CommandCost {
+    CommandCost::Kernel { bytes_read: 0, bytes_written: items * 4, items, tpb: 0 }
+}
+
+fn random_platform(g: &mut testkit::Gen) -> PlatformId {
+    *g.choose(&PlatformId::ALL)
+}
+
+fn random_profile(g: &mut testkit::Gen) -> SyclRuntimeProfile {
+    *g.choose(&[SyclRuntimeProfile::Dpcpp, SyclRuntimeProfile::HipSycl])
+}
+
+#[test]
+fn prop_random_buffer_graphs_always_valid() {
+    testkit::forall("random-buffer-graphs", 40, |g| {
+        let queue = Queue::new(random_platform(g), random_profile(g));
+        let n_buffers = g.usize_in(1, 4);
+        let buffers: Vec<Buffer<f32>> =
+            (0..n_buffers).map(|_| Buffer::new(g.usize_in(16, 4096))).collect();
+        let n_cmds = g.usize_in(1, 25);
+        for i in 0..n_cmds {
+            let buf = buffers[g.usize_in(0, n_buffers - 1)].clone();
+            let mode = *g.choose(&[AccessMode::Read, AccessMode::Write, AccessMode::ReadWrite]);
+            let items = g.range(1, 1 << 20);
+            queue.submit(move |cgh| {
+                let acc = cgh.require(&buf, mode);
+                cgh.host_task(format!("k{i}"), CommandClass::Other, kernel(items), move |_| {
+                    let _ = acc;
+                });
+            });
+        }
+        let records = queue.records();
+        let dag = Dag::new(&records);
+        dag.validate().map_err(|e| format!("invalid DAG: {e}"))?;
+        let stats = dag.stats();
+        if stats.critical_path_ns > stats.makespan_ns {
+            return Err(format!(
+                "critical path {} exceeds makespan {}",
+                stats.critical_path_ns, stats.makespan_ns
+            ));
+        }
+        if queue.wait() < stats.makespan_ns {
+            return Err("wait() ended before the last command".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_in_order_queue_never_overlaps() {
+    testkit::forall("in-order-no-overlap", 25, |g| {
+        let queue = Queue::in_order(random_platform(g), random_profile(g));
+        let buffers: Vec<Buffer<f32>> = (0..3).map(|_| Buffer::new(64)).collect();
+        for i in 0..g.usize_in(2, 15) {
+            let buf = buffers[g.usize_in(0, 2)].clone();
+            let items = g.range(1, 1 << 16);
+            queue.submit(move |cgh| {
+                let acc = cgh.require(&buf, AccessMode::Write);
+                cgh.host_task(format!("k{i}"), CommandClass::Other, kernel(items), move |_| {
+                    let _ = acc;
+                });
+            });
+        }
+        let records = queue.records();
+        if Dag::new(&records).has_overlap() {
+            return Err("in-order queue produced overlapping commands".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_same_buffer_chain_is_fully_ordered() {
+    testkit::forall("same-buffer-chain", 25, |g| {
+        let queue = Queue::new(random_platform(g), random_profile(g));
+        let buf = Buffer::<f32>::new(256);
+        let n = g.usize_in(2, 12);
+        let mut last_end = 0u64;
+        for i in 0..n {
+            let b = buf.clone();
+            let ev = queue.submit(move |cgh| {
+                let acc = cgh.require(&b, AccessMode::ReadWrite);
+                cgh.host_task(format!("k{i}"), CommandClass::Other, kernel(100), move |_| {
+                    let _ = acc;
+                });
+            });
+            if ev.profiling_command_start() < last_end {
+                return Err(format!("cmd {i} started before predecessor ended"));
+            }
+            last_end = ev.profiling_command_end();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_usm_dependency_chains_respected() {
+    testkit::forall("usm-chains", 25, |g| {
+        let queue = Queue::new(random_platform(g), random_profile(g));
+        let mut events = Vec::new();
+        for i in 0..g.usize_in(2, 15) {
+            // Depend on a random subset of earlier events.
+            let deps: Vec<_> = events
+                .iter()
+                .filter(|_| g.bool_with(0.4))
+                .cloned()
+                .collect();
+            let ev = queue.submit_usm(
+                format!("u{i}"),
+                CommandClass::Other,
+                kernel(g.range(1, 1 << 18)),
+                &deps,
+                |_| {},
+            );
+            for d in &deps {
+                if ev.profiling_command_start() < d.profiling_command_end() {
+                    return Err(format!("usm cmd {i} ignored its dependency"));
+                }
+            }
+            events.push(ev);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_host_read_sees_last_write() {
+    testkit::forall("host-read-raw", 20, |g| {
+        let queue = Queue::new(random_platform(g), random_profile(g));
+        let buf = Buffer::<f32>::new(32);
+        let val = g.f32_in(0.0, 100.0);
+        let b = buf.clone();
+        queue.submit(move |cgh| {
+            let acc = cgh.require(&b, AccessMode::Write);
+            cgh.host_task("w", CommandClass::Other, kernel(32), move |_| {
+                acc.lock().iter_mut().for_each(|x| *x = val);
+            });
+        });
+        let out = queue.host_read(&buf);
+        if out.iter().any(|&x| x != val) {
+            return Err("host_read returned stale data".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn noise_is_reproducible_across_runs() {
+    let run = || {
+        let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        queue.set_noise_salt(7);
+        let buf = Buffer::<f32>::new(64);
+        for i in 0..5 {
+            let b = buf.clone();
+            queue.submit(move |cgh| {
+                let acc = cgh.require(&b, AccessMode::ReadWrite);
+                cgh.host_task(format!("k{i}"), CommandClass::Other, kernel(1 << 16), move |_| {
+                    let _ = acc;
+                });
+            });
+        }
+        queue.wait()
+    };
+    assert_eq!(run(), run());
+}
