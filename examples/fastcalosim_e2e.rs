@@ -22,44 +22,53 @@ use portarng::platform::PlatformId;
 use portarng::rng::{Engine, PhiloxEngine};
 use portarng::runtime::PjrtRuntime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t0 = std::time::Instant::now();
     println!("== fastcalosim e2e: three-layer stack ==\n");
 
     // --- Layer 1/2: load + verify the compiled Pallas kernels. ---------
-    let rt = Arc::new(PjrtRuntime::discover()?);
-    rt.warmup(Some(&["burner_uniform_65536", "calosim_hits_16384"]))?;
-    let out = rt.run_burner("burner_uniform_65536", [2024, 0], [0, 0], 0.0, 1.0)?;
-    let mut want = vec![0f32; 65536];
-    PhiloxEngine::new(2024).fill_uniform_f32(&mut want);
-    assert_eq!(out, want, "device stream != host stream");
-    println!("[1] PJRT Philox kernel bit-exact vs Rust engine (65536 draws)");
+    // Offline builds gate the PJRT client (see src/xla.rs): skip the
+    // device layers and still run the fleet-wide virtual comparison.
+    match PjrtRuntime::discover() {
+        Err(e) => {
+            println!("[1-2] skipped (PJRT/artifacts unavailable): {e}\n");
+        }
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            rt.warmup(Some(&["burner_uniform_65536", "calosim_hits_16384"]))?;
+            let out = rt.run_burner("burner_uniform_65536", [2024, 0], [0, 0], 0.0, 1.0)?;
+            let mut want = vec![0f32; 65536];
+            PhiloxEngine::new(2024).fill_uniform_f32(&mut want);
+            assert_eq!(out, want, "device stream != host stream");
+            println!("[1] PJRT Philox kernel bit-exact vs Rust engine (65536 draws)");
 
-    // --- Real device compute per event: the calosim artifact. ----------
-    let n_events = 25;
-    let mut total_dep = 0f64;
-    let mut block_off = 0u64;
-    let exec_t0 = std::time::Instant::now();
-    for ev in 0..n_events {
-        let (deposits, total) = rt.run_calosim(
-            "calosim_hits_16384",
-            [2024, ev],
-            [block_off as u32, (block_off >> 32) as u32],
-            [0.22, 1.02, 65.0 / 16384.0, 0.05, 0.05],
-        )?;
-        let dep_sum: f64 = deposits.iter().map(|&x| x as f64).sum();
-        assert!((dep_sum - f64::from(total)).abs() / f64::from(total) < 1e-3);
-        total_dep += total as f64;
-        block_off += (3 * 16384) / 4;
+            // --- Real device compute per event: the calosim artifact. ---
+            let n_events = 25;
+            let mut total_dep = 0f64;
+            let mut block_off = 0u64;
+            let exec_t0 = std::time::Instant::now();
+            for ev in 0..n_events {
+                let (deposits, total) = rt.run_calosim(
+                    "calosim_hits_16384",
+                    [2024, ev],
+                    [block_off as u32, (block_off >> 32) as u32],
+                    [0.22, 1.02, 65.0 / 16384.0, 0.05, 0.05],
+                )?;
+                let dep_sum: f64 = deposits.iter().map(|&x| x as f64).sum();
+                assert!((dep_sum - f64::from(total)).abs() / f64::from(total) < 1e-3);
+                total_dep += total as f64;
+                block_off += (3 * 16384) / 4;
+            }
+            let exec_ms = exec_t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "[2] {n_events} events of 16384 hits each simulated ON DEVICE: \
+                 {:.1} GeV total, {:.2} ms/event real wall ({:.1} Mhit/s)",
+                total_dep,
+                exec_ms / n_events as f64,
+                n_events as f64 * 16384.0 / exec_ms / 1e3
+            );
+        }
     }
-    let exec_ms = exec_t0.elapsed().as_secs_f64() * 1e3;
-    println!(
-        "[2] {n_events} events of 16384 hits each simulated ON DEVICE: \
-         {:.1} GeV total, {:.2} ms/event real wall ({:.1} Mhit/s)",
-        total_dep,
-        exec_ms / n_events as f64,
-        n_events as f64 * 16384.0 / exec_ms / 1e3
-    );
 
     // --- The paper's Fig. 5 across the fleet (virtual clock). -----------
     println!("\n[3] Fig. 5 rows (virtual platform clock, small workloads):");

@@ -1,21 +1,26 @@
 //! The paper's §8 future-work extension, implemented: heuristic
-//! host-vs-device backend selection by problem size, plus the batching
-//! RNG service that keeps small requests off the device entirely.
+//! host-vs-device backend selection by problem size, plus the sharded
+//! batching service pool that keeps small requests off the device
+//! entirely and gives large ones a dedicated overflow lane.
 //!
 //! ```bash
 //! cargo run --release --example heuristic_dispatch
 //! ```
 
-use portarng::coordinator::{BackendHeuristic, RngService};
+use portarng::coordinator::{BackendHeuristic, DispatchPolicy, PoolConfig, ServicePool};
 use portarng::platform::PlatformId;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== §8 heuristic backend selection ==\n");
+    let mut a100_crossover = 100_000;
     for (device, host) in [
         (PlatformId::A100, PlatformId::Rome7742),
         (PlatformId::Vega56, PlatformId::XeonGold5220),
     ] {
         let h = BackendHeuristic::calibrate(device, host);
+        if device == PlatformId::A100 {
+            a100_crossover = h.crossover;
+        }
         println!(
             "{:<10} vs {:<10}: crossover at {:>9} numbers",
             device.token(),
@@ -27,21 +32,37 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\n== batching service (coalesces small requests) ==\n");
-    let svc = RngService::spawn(PlatformId::A100, 0x5EED, 1 << 16, 8);
-    let receivers: Vec<_> = (0..24).map(|i| svc.generate(500 + i * 16, (0.0, 1.0))).collect();
-    svc.flush();
+    println!("\n== sharded service pool (coalesces small, overflows large) ==\n");
+    let mut cfg = PoolConfig::new(PlatformId::A100, 0x5EED, 4);
+    cfg.max_batch = 1 << 16;
+    cfg.max_requests = 8;
+    cfg.policy = DispatchPolicy::fixed(a100_crossover.min(1 << 16));
+    let pool = ServicePool::spawn(cfg);
+
+    let mut receivers = Vec::new();
+    for i in 0..24 {
+        receivers.push(pool.generate(500 + i * 16, (0.0, 1.0))); // batched lanes
+    }
+    receivers.push(pool.generate(1 << 20, (0.0, 1.0))); // overflow lane
+    pool.flush();
     let mut total = 0;
     for rx in receivers {
         total += rx.recv()??.len();
     }
-    let stats = svc.shutdown()?;
+    let stats = pool.shutdown()?;
+    let t = stats.total();
     println!(
-        "{} requests ({} numbers) served by {} kernel launches — {:.1} requests/launch",
-        stats.requests,
+        "{} requests ({} numbers) served by {} kernel launches across {} shards — \
+         {:.1} requests/launch",
+        t.requests,
         total,
-        stats.launches,
-        stats.requests as f64 / stats.launches as f64
+        t.launches,
+        stats.shards.len(),
+        t.requests as f64 / t.launches as f64
     );
+    for (i, s) in stats.shards.iter().enumerate() {
+        let role = if i + 1 == stats.shards.len() { "overflow" } else { "batched" };
+        println!("  shard {i} ({role}): {} requests in {} launches", s.requests, s.launches);
+    }
     Ok(())
 }

@@ -7,7 +7,7 @@
 
 use portarng::repro::{table2, ExperimentId};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let quick = !std::env::args().any(|a| a == "--full");
     if quick {
         println!("(quick mode: 10 iterations/point; pass --full for the paper's 100)\n");

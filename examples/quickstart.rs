@@ -14,7 +14,7 @@ use portarng::platform::PlatformId;
 use portarng::rng::{generate_buffer, Distribution, EngineKind};
 use portarng::sycl::{Buffer, Queue, SyclRuntimeProfile};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 10_000;
     let distr = Distribution::uniform(-1.0, 1.0);
 

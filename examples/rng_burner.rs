@@ -11,7 +11,7 @@ use portarng::burner::{run_burner_auto, run_burner_with_runtime, BurnerApi, Burn
 use portarng::platform::PlatformId;
 use portarng::runtime::PjrtRuntime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let batch: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(65_536);
     println!("RNG burner, Philox4x32x10 uniforms, batch {batch}, 20 iterations\n");
     println!(

@@ -1,0 +1,83 @@
+//! Bench: sharded service-pool throughput scaling on the burner workload.
+//!
+//! Drives R requests of B numbers each through the pool at shard counts
+//! {1, 2, 4, 8} and reports delivered wall-clock throughput. The 1-shard
+//! row IS the legacy single-worker `RngService` (the facade wraps a
+//! one-shard pool), so the scaling factor reads directly off the table.
+//!
+//! Acceptance gates (checked when the machine has >= 4 CPUs):
+//!   * 4-shard throughput >= 2x the single-worker service;
+//!   * every shard count produces bit-identical per-request streams
+//!     (equal request-stream checksums).
+
+use portarng::benchkit::{BenchConfig, BenchGroup};
+use portarng::burner::{run_burner_pooled, BurnerApi, BurnerConfig, PoolBurnerReport};
+use portarng::platform::PlatformId;
+
+const BATCH: usize = 1 << 16;
+const REQUESTS: usize = 192;
+
+fn run(shards: usize) -> PoolBurnerReport {
+    let cfg = BurnerConfig::paper_default(PlatformId::A100, BurnerApi::SyclBuffer, BATCH);
+    run_burner_pooled(&cfg, shards, REQUESTS).unwrap()
+}
+
+fn main() {
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "pool throughput: {REQUESTS} requests x {BATCH} numbers ({} M total), {cpus} CPUs\n",
+        REQUESTS * BATCH / 1_000_000
+    );
+
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut g = BenchGroup::new("pool").config(BenchConfig { warmup: 1, samples: 5 });
+    let mut checksums: Vec<(usize, u64)> = Vec::new();
+    for &shards in &shard_counts {
+        let mut last: Option<PoolBurnerReport> = None;
+        g.bench_items(&format!("{shards}-shard/{REQUESTS}x{BATCH}"), (REQUESTS * BATCH) as u64, || {
+            last = Some(run(shards));
+        });
+        let r = last.unwrap();
+        println!(
+            "    -> {} launches | checksum {:016x}",
+            r.stats.total().launches,
+            r.checksum
+        );
+        checksums.push((shards, r.checksum));
+    }
+
+    // Gate 1: bit-identical per-request streams at every shard count.
+    let checksum0 = checksums[0].1;
+    for &(shards, checksum) in &checksums {
+        assert_eq!(
+            checksum, checksum0,
+            "{shards}-shard pool diverged from the single-worker stream"
+        );
+    }
+    println!("\nstreams bit-identical across shard counts: OK (checksum {checksum0:016x})");
+
+    // Gate 2: 4-shard pool >= 2x the single-worker service, judged on the
+    // benchkit *medians* over all samples (outlier-robust), not on any
+    // single run.
+    let median_tput: Vec<(usize, f64)> = shard_counts
+        .iter()
+        .copied()
+        .zip(g.results().iter().map(|r| r.throughput_m_per_s().unwrap_or(0.0)))
+        .collect();
+    let single = median_tput[0].1;
+    let four = median_tput.iter().find(|t| t.0 == 4).unwrap().1;
+    let speedup = four / single;
+    println!("4-shard vs single-worker speedup: {speedup:.2}x");
+    if cpus >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "4-shard pool only {speedup:.2}x the single-worker service (need >= 2x)"
+        );
+        println!("scaling gate (>= 2x): OK");
+    } else {
+        println!("scaling gate skipped: {cpus} CPUs < 4 (cannot host 4 busy shards)");
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_pool_throughput.csv", g.to_csv()).unwrap();
+}

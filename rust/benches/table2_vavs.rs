@@ -10,7 +10,8 @@ fn main() {
     g.bench("vavs-driver-quick", || {
         out = Some(table2(true).unwrap());
     });
-    let t = &out.unwrap()[0];
+    let tables = out.unwrap();
+    let t = &tables[0];
     println!("\n{}", t.to_markdown());
     println!("paper: {{Vega56,A100}} buffer 1.070 / usm 0.393; {{Vega56}} 0.974/1.076; {{A100}} 1.186/0.240");
     std::fs::create_dir_all("results").ok();

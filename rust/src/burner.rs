@@ -19,6 +19,7 @@ use crate::backends::{
     CurandBackend, HiprandBackend, MklCpuBackend, NativeTimeline, OneMklIntelGpuBackend,
     PjrtBackend, RngBackend,
 };
+use crate::coordinator::{PoolConfig, PoolStats, ServicePool};
 use crate::error::{Error, Result};
 use crate::platform::{CommandCost, PlatformId, PlatformKind, TransferDir};
 use crate::rng::engines::EngineKind;
@@ -482,6 +483,107 @@ pub fn run_burner_auto(cfg: &BurnerConfig) -> Result<BurnerReport> {
     }
 }
 
+/// Result of driving the burner workload through the service pool.
+#[derive(Debug, Clone)]
+pub struct PoolBurnerReport {
+    /// Batched shard count used.
+    pub shards: usize,
+    /// Requests submitted.
+    pub requests: usize,
+    /// Numbers delivered to requesters (excludes launch padding).
+    pub numbers: u64,
+    /// Real wall time from first submission to last reply, ns.
+    pub wall_ns: u64,
+    /// Per-shard service counters.
+    pub stats: PoolStats,
+    /// Order-stable checksum over every reply's bit pattern — equal
+    /// checksums across shard counts certify bit-identical per-request
+    /// streams.
+    pub checksum: u64,
+}
+
+impl PoolBurnerReport {
+    /// Delivered throughput in millions of numbers per second of wall
+    /// time.
+    pub fn throughput_m_per_s(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.numbers as f64 / self.wall_ns as f64 * 1e3
+    }
+}
+
+/// Fold one reply into the running request-stream checksum (FNV over the
+/// f32 bit patterns, chained in submission order).
+fn checksum_fold(mut h: u64, xs: &[f32]) -> u64 {
+    for x in xs {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Drive the burner workload through a [`ServicePool`]: `requests`
+/// generate requests of `cfg.batch` numbers each, submitted up front and
+/// drained in order — the serving-layer counterpart of [`run_burner`].
+///
+/// Only uniform distributions are meaningful here (the pool's request API
+/// is range-based) and only the sycl-buffer application variant is pooled
+/// (the pool's coalesced launches are the buffer path); anything else is
+/// rejected rather than silently substituted.
+pub fn run_burner_pooled(
+    cfg: &BurnerConfig,
+    shards: usize,
+    requests: usize,
+) -> Result<PoolBurnerReport> {
+    if cfg.api != BurnerApi::SyclBuffer {
+        return Err(Error::InvalidArgument(format!(
+            "pooled burner drives the sycl-buffer path; --api {} is not pooled \
+             (drop --pool or use --api sycl-buffer)",
+            cfg.api.token()
+        )));
+    }
+    let range = match cfg.distr {
+        Distribution::Uniform { a, b, .. } => (a, b),
+        ref other => {
+            return Err(Error::InvalidArgument(format!(
+                "pooled burner serves uniform requests only, got {}",
+                other.name()
+            )))
+        }
+    };
+    let mut pool_cfg = PoolConfig::new(cfg.platform, cfg.seed, shards);
+    // Coalesce a handful of requests per launch; identical thresholds for
+    // every shard count so scaling comparisons are apples-to-apples.
+    pool_cfg.max_batch = cfg.batch.saturating_mul(4).max(1);
+    pool_cfg.max_requests = 4;
+    let pool = ServicePool::spawn(pool_cfg);
+
+    let wall_start = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests).map(|_| pool.generate(cfg.batch, range)).collect();
+    pool.flush();
+    let mut numbers = 0u64;
+    let mut checksum = 0xcbf2_9ce4_8422_2325u64;
+    for rx in rxs {
+        let reply = rx
+            .recv()
+            .map_err(|_| Error::Coordinator("pool worker dropped reply".into()))??;
+        numbers += reply.len() as u64;
+        checksum = checksum_fold(checksum, &reply);
+    }
+    let wall_ns = wall_start.elapsed().as_nanos() as u64;
+
+    let stats = pool.shutdown()?;
+    Ok(PoolBurnerReport {
+        shards,
+        requests,
+        numbers,
+        wall_ns,
+        stats,
+        checksum,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -550,5 +652,39 @@ mod tests {
         c.distr = Distribution::gaussian(5.0, 2.0);
         let r = run_burner(&c).unwrap();
         assert!(r.breakdown.transform_ns > 0); // mean/std transform kernel
+    }
+
+    #[test]
+    fn pooled_burner_streams_are_shard_count_invariant() {
+        use crate::rng::Engine;
+        let c = cfg(PlatformId::A100, BurnerApi::SyclBuffer, 1000);
+        let one = run_burner_pooled(&c, 1, 12).unwrap();
+        let four = run_burner_pooled(&c, 4, 12).unwrap();
+        assert_eq!(one.checksum, four.checksum);
+        assert_eq!(one.numbers, 12_000);
+        assert_eq!(four.numbers, 12_000);
+        assert_eq!(four.stats.total().requests, 12);
+
+        // And the checksum is the dedicated-stream checksum.
+        let mut want = vec![0f32; 12_000];
+        crate::rng::PhiloxEngine::new(c.seed).fill_uniform_f32(&mut want);
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for chunk in want.chunks(1000) {
+            h = checksum_fold(h, chunk);
+        }
+        assert_eq!(one.checksum, h);
+    }
+
+    #[test]
+    fn pooled_burner_applies_ranges_and_rejects_non_uniform() {
+        let mut c = cfg(PlatformId::Vega56, BurnerApi::SyclBuffer, 64);
+        c.distr = Distribution::uniform(-2.0, 2.0);
+        let r = run_burner_pooled(&c, 2, 4).unwrap();
+        assert_eq!(r.numbers, 256);
+        c.distr = Distribution::gaussian(0.0, 1.0);
+        assert!(run_burner_pooled(&c, 2, 4).is_err());
+        // Non-buffer APIs are rejected, not silently substituted.
+        let native = cfg(PlatformId::A100, BurnerApi::Native, 64);
+        assert!(run_burner_pooled(&native, 2, 4).is_err());
     }
 }

@@ -1,16 +1,34 @@
 //! Request batching: coalesce small generate requests into one kernel.
 //!
 //! Because Philox is counter-based, a batch of requests can be served by a
-//! single generation over the concatenated counter range and sliced back —
-//! each requester observes exactly the stream it would have gotten from a
-//! dedicated engine at its own offset (the invariant the property tests
-//! pin down).
+//! single launch whose members are generated at their own *global* stream
+//! offsets and sliced back — each requester observes exactly the stream it
+//! would have gotten from a dedicated engine at its own offset, no matter
+//! how the pool batches or shards the work (the invariant the property
+//! tests pin down).
 
 /// One queued request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PendingRequest {
-    /// Request id (caller-assigned).
+    /// Request id (caller-assigned, shard-local).
     pub id: u64,
+    /// Numbers wanted.
+    pub n: usize,
+    /// Absolute offset of this request in the global engine stream
+    /// (assigned by the pool dispatcher at submission time).
+    pub stream_offset: u64,
+}
+
+/// One member of a closed batch, with everything the launch needs to
+/// generate and slice its sub-stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchMember {
+    /// Request id (caller-assigned, shard-local).
+    pub id: u64,
+    /// Offset of the member's slice inside the launch buffer.
+    pub batch_offset: usize,
+    /// Absolute offset in the global engine stream.
+    pub stream_offset: u64,
     /// Numbers wanted.
     pub n: usize,
 }
@@ -20,8 +38,8 @@ pub struct PendingRequest {
 pub struct BatchOutcome {
     /// Kernel launch size (sum of member sizes, padded to `pad_to`).
     pub launch_n: usize,
-    /// (request id, offset-in-batch, n) for slicing results.
-    pub members: Vec<(u64, usize, usize)>,
+    /// Members with their slice/stream coordinates.
+    pub members: Vec<BatchMember>,
 }
 
 /// Size/occupancy-driven batcher.
@@ -78,7 +96,12 @@ impl RequestBatcher {
         let mut members = Vec::with_capacity(self.queue.len());
         let mut offset = 0usize;
         for req in self.queue.drain(..) {
-            members.push((req.id, offset, req.n));
+            members.push(BatchMember {
+                id: req.id,
+                batch_offset: offset,
+                stream_offset: req.stream_offset,
+                n: req.n,
+            });
             offset += req.n;
         }
         self.queued_items = 0;
@@ -92,15 +115,29 @@ mod tests {
     use super::*;
     use crate::testkit;
 
+    fn req(id: u64, n: usize) -> PendingRequest {
+        PendingRequest { id, n, stream_offset: 1000 * id }
+    }
+
     #[test]
     fn batches_close_on_item_threshold() {
         let mut b = RequestBatcher::new(1000, 100, 4);
-        assert!(b.push(PendingRequest { id: 1, n: 400 }).is_none());
-        assert!(b.push(PendingRequest { id: 2, n: 400 }).is_none());
-        let out = b.push(PendingRequest { id: 3, n: 400 }).unwrap();
+        assert!(b.push(req(1, 400)).is_none());
+        assert!(b.push(req(2, 400)).is_none());
+        let out = b.push(req(3, 400)).unwrap();
         assert_eq!(out.members.len(), 3);
         assert_eq!(out.launch_n, 1200);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn members_preserve_stream_offsets() {
+        let mut b = RequestBatcher::new(usize::MAX, 2, 4);
+        b.push(PendingRequest { id: 0, n: 8, stream_offset: 777 });
+        let out = b.push(PendingRequest { id: 1, n: 4, stream_offset: 31 }).unwrap();
+        assert_eq!(out.members[0].stream_offset, 777);
+        assert_eq!(out.members[1].stream_offset, 31);
+        assert_eq!(out.members[1].batch_offset, 8);
     }
 
     #[test]
@@ -109,18 +146,25 @@ mod tests {
             let mut b = RequestBatcher::new(usize::MAX, usize::MAX, g.usize_in(1, 64));
             let k = g.usize_in(1, 20);
             for id in 0..k as u64 {
-                b.push(PendingRequest { id, n: g.usize_in(1, 5000) });
+                b.push(PendingRequest {
+                    id,
+                    n: g.usize_in(1, 5000),
+                    stream_offset: g.u64() >> 16,
+                });
             }
             let out = b.flush().unwrap();
             let mut expect_offset = 0usize;
-            for (i, &(id, off, n)) in out.members.iter().enumerate() {
-                if id != i as u64 {
+            for (i, m) in out.members.iter().enumerate() {
+                if m.id != i as u64 {
                     return Err(format!("order broken at {i}"));
                 }
-                if off != expect_offset {
-                    return Err(format!("gap/overlap at {i}: {off} != {expect_offset}"));
+                if m.batch_offset != expect_offset {
+                    return Err(format!(
+                        "gap/overlap at {i}: {} != {expect_offset}",
+                        m.batch_offset
+                    ));
                 }
-                expect_offset += n;
+                expect_offset += m.n;
             }
             if out.launch_n < expect_offset {
                 return Err("launch smaller than payload".into());

@@ -1,10 +1,65 @@
 //! Heuristic backend selection (paper §8 future work, implemented here):
 //! "Integrating a heuristic approach to select the best backend for the
 //! problem size — e.g., using the host for small workloads and GPU for
-//! larger ones".
+//! larger ones". [`DispatchPolicy`] applies the same size-awareness at the
+//! service-pool layer: small requests coalesce through the batched
+//! round-robin shards, large ones overflow to a dedicated unbatched lane.
 
 use crate::burner::{run_burner_virtual, BurnerApi, BurnerConfig};
 use crate::platform::{PlatformId, PlatformKind};
+
+/// Routing decision for one request in the service pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Coalesce with other small requests on a round-robin shard.
+    Batched,
+    /// Large enough to saturate a launch alone: dedicated overflow lane.
+    Overflow,
+}
+
+/// Size-aware dispatch policy for [`super::ServicePool`].
+///
+/// The threshold doubles as the pool-layer reading of the §8 heuristic: a
+/// request at/above the host-vs-device crossover already amortises its own
+/// launch, so batching it with small requests only adds latency for both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DispatchPolicy {
+    /// Requests with `n >= threshold` take the overflow lane.
+    pub threshold: usize,
+}
+
+impl DispatchPolicy {
+    /// Fixed threshold.
+    pub fn fixed(threshold: usize) -> DispatchPolicy {
+        DispatchPolicy { threshold }
+    }
+
+    /// Derive the threshold from a calibrated [`BackendHeuristic`]
+    /// crossover.
+    pub fn from_heuristic(h: &BackendHeuristic) -> DispatchPolicy {
+        DispatchPolicy { threshold: h.crossover }
+    }
+
+    /// No overflow lane: everything round-robins through the batched
+    /// shards.
+    pub fn disabled() -> DispatchPolicy {
+        DispatchPolicy { threshold: usize::MAX }
+    }
+
+    /// Whether the policy can ever route to the overflow lane.
+    pub fn is_enabled(&self) -> bool {
+        self.threshold != usize::MAX
+    }
+
+    /// Route a request of `n` numbers.
+    pub fn route(&self, n: usize) -> Route {
+        if n >= self.threshold {
+            Route::Overflow
+        } else {
+            Route::Batched
+        }
+    }
+}
 
 /// Size-based host-vs-device selector.
 #[derive(Debug, Clone)]
@@ -89,6 +144,26 @@ mod tests {
         assert!(h.crossover < 1 << 30, "crossover={}", h.crossover);
         assert_eq!(h.select(1), PlatformId::Rome7742);
         assert_eq!(h.select(1 << 30), PlatformId::A100);
+    }
+
+    #[test]
+    fn dispatch_policy_routes_by_size() {
+        let p = DispatchPolicy::fixed(1000);
+        assert!(p.is_enabled());
+        assert_eq!(p.route(999), Route::Batched);
+        assert_eq!(p.route(1000), Route::Overflow);
+        let off = DispatchPolicy::disabled();
+        assert!(!off.is_enabled());
+        assert_eq!(off.route(usize::MAX - 1), Route::Batched);
+    }
+
+    #[test]
+    fn dispatch_policy_follows_calibrated_crossover() {
+        let h = BackendHeuristic::fixed(PlatformId::A100, PlatformId::Rome7742, 50_000);
+        let p = DispatchPolicy::from_heuristic(&h);
+        assert_eq!(p.threshold, 50_000);
+        assert_eq!(p.route(49_999), Route::Batched);
+        assert_eq!(p.route(50_000), Route::Overflow);
     }
 
     #[test]

@@ -1,19 +1,23 @@
 //! Layer-3 coordinator: backend registry, dispatch heuristic, request
-//! batching, and a threaded RNG service (DESIGN.md S10).
+//! batching, and the sharded RNG service pool (DESIGN.md S10).
 //!
-//! The paper's contribution is a library, so the coordinator stays thin:
-//! it owns process lifecycle, routes generate requests to the right
-//! backend for the configured platform/API, and implements the paper's §8
-//! future-work extension — heuristic host-vs-device backend selection by
-//! problem size ("using the host for small workloads and GPU for larger
-//! ones").
+//! The paper's contribution is a library; the coordinator turns it into a
+//! serving layer: it owns process lifecycle, routes generate requests to
+//! the right backend for the configured platform/API, implements the
+//! paper's §8 future-work extension — heuristic host-vs-device backend
+//! selection by problem size — and scales the request path across N
+//! worker shards ([`ServicePool`]) while preserving bit-exact stream
+//! semantics through counter-based partitioning (see the crate-level docs
+//! in `lib.rs` for the architecture diagram).
 
 mod batcher;
 mod heuristic;
+mod pool;
 mod registry;
 mod service;
 
-pub use batcher::{BatchOutcome, RequestBatcher};
-pub use heuristic::BackendHeuristic;
-pub use registry::BackendRegistry;
-pub use service::{RngService, ServiceRequest, ServiceStats};
+pub use batcher::{BatchMember, BatchOutcome, PendingRequest, RequestBatcher};
+pub use heuristic::{BackendHeuristic, DispatchPolicy, Route};
+pub use pool::{PoolConfig, PoolStats, ServicePool, ServiceRequest, ServiceStats};
+pub use registry::{BackendRegistry, ShardBackendSet};
+pub use service::RngService;

@@ -1,0 +1,472 @@
+//! Sharded RNG service pool: N worker shards behind a round-robin
+//! dispatcher with a size-aware overflow lane (DESIGN.md S10, paper §8).
+//!
+//! Each shard is a worker thread owning its own (non-`Send`) backend set
+//! (built through [`super::BackendRegistry::shard_set`]) and its own
+//! [`RequestBatcher`]. The dispatcher assigns every request an absolute
+//! offset in the *global* engine stream from an atomic cursor before
+//! routing it, so the stream a requester observes is a pure function of
+//! submission order — independent of shard count, batching decisions and
+//! worker interleaving. Workers realise the sub-streams with counter-based
+//! skip-ahead (`VendorGenerator::set_offset`, i.e. `Engine::skip_ahead`),
+//! O(1) for Philox.
+//!
+//! Requests at or above the [`DispatchPolicy`] threshold bypass the
+//! batched shards and go to a dedicated unbatched overflow shard: a large
+//! request already saturates a launch on its own, and coalescing it would
+//! only add latency for the small requests sharing its batch. The lane
+//! also picks the generating half of the shard's backend set — batched
+//! lanes run on the host backend, the overflow lane on the device-native
+//! backend (§8: "host for small workloads, GPU for larger ones") — which
+//! is observationally free because every backend is bit-exact Philox.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::platform::PlatformId;
+use crate::rng::engines::EngineKind;
+use crate::rng::Distribution;
+
+use super::batcher::{BatchOutcome, PendingRequest, RequestBatcher};
+use super::heuristic::{DispatchPolicy, Route};
+use super::registry::BackendRegistry;
+
+/// A generate request, as delivered to a shard worker.
+pub struct ServiceRequest {
+    /// Numbers wanted.
+    pub n: usize,
+    /// Range [a, b).
+    pub range: (f32, f32),
+    /// Absolute offset of this request in the global engine stream.
+    pub offset: u64,
+    /// Reply channel.
+    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Generate(ServiceRequest),
+    Flush,
+    Shutdown(mpsc::Sender<ServiceStats>),
+}
+
+/// Aggregate per-shard (and pool-total) service counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests served.
+    pub requests: u64,
+    /// Kernel launches issued (batches).
+    pub launches: u64,
+    /// Numbers generated (padded launch totals).
+    pub numbers: u64,
+}
+
+impl ServiceStats {
+    /// Component-wise sum (pool aggregation).
+    pub fn merged(self, other: ServiceStats) -> ServiceStats {
+        ServiceStats {
+            requests: self.requests + other.requests,
+            launches: self.launches + other.launches,
+            numbers: self.numbers + other.numbers,
+        }
+    }
+}
+
+/// Per-shard and aggregate counters returned by [`ServicePool::shutdown`].
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    /// One entry per shard, dispatch order (batched shards first, then the
+    /// overflow lane if configured).
+    pub shards: Vec<ServiceStats>,
+}
+
+impl PoolStats {
+    /// Pool-wide totals.
+    pub fn total(&self) -> ServiceStats {
+        self.shards
+            .iter()
+            .copied()
+            .fold(ServiceStats::default(), ServiceStats::merged)
+    }
+}
+
+/// Pool construction parameters.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Platform whose backend set each shard builds.
+    pub platform: PlatformId,
+    /// Seed of the single global engine stream the pool partitions.
+    pub seed: u64,
+    /// Batched round-robin shards (>= 1).
+    pub shards: usize,
+    /// Per-shard batcher: close a batch at this many queued items.
+    pub max_batch: usize,
+    /// Per-shard batcher: close a batch at this many queued requests.
+    pub max_requests: usize,
+    /// Size-aware routing; an enabled policy adds an unbatched overflow
+    /// shard for requests at/above its threshold.
+    pub policy: DispatchPolicy,
+}
+
+impl PoolConfig {
+    /// Defaults: 1 MiB-numbers batches, 16 requests per batch, no
+    /// overflow lane.
+    pub fn new(platform: PlatformId, seed: u64, shards: usize) -> PoolConfig {
+        PoolConfig {
+            platform,
+            seed,
+            shards: shards.max(1),
+            max_batch: 1 << 20,
+            max_requests: 16,
+            policy: DispatchPolicy::disabled(),
+        }
+    }
+}
+
+struct ShardHandle {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl ShardHandle {
+    /// Spawn one worker shard. The worker builds its own engine/backends
+    /// (they are not `Send`). `lane` picks which half of the shard's
+    /// backend set generates: batched (small-request) lanes run on the
+    /// host backend, the overflow lane on the device-native backend — the
+    /// paper's §8 "host for small workloads, GPU for larger ones" applied
+    /// at the service layer. Both halves are bit-exact Philox, so the
+    /// stream invariant is unaffected by the lane choice.
+    fn spawn(
+        platform: PlatformId,
+        seed: u64,
+        max_batch: usize,
+        max_requests: usize,
+        lane: Route,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            let set = BackendRegistry::new().shard_set(platform);
+            let backend = match lane {
+                Route::Batched => set.host,
+                Route::Overflow => set.native,
+            };
+            let mut gen = match backend.create_generator(EngineKind::Philox4x32x10, seed) {
+                Ok(g) => g,
+                Err(e) => {
+                    // Degraded mode: the backend refused a generator; fail
+                    // every request with a coordinator error. Requests are
+                    // still counted so submitted-vs-served reconciles.
+                    let why = e.to_string();
+                    let mut stats = ServiceStats::default();
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            Msg::Generate(req) => {
+                                stats.requests += 1;
+                                let _ = req.reply.send(Err(Error::Coordinator(format!(
+                                    "shard backend unavailable: {why}"
+                                ))));
+                            }
+                            Msg::Flush => {}
+                            Msg::Shutdown(ack) => {
+                                let _ = ack.send(stats);
+                                break;
+                            }
+                        }
+                    }
+                    return;
+                }
+            };
+            let mut batcher = RequestBatcher::new(max_batch, max_requests, 4);
+            let mut waiting: Vec<ServiceRequest> = Vec::new();
+            let mut stats = ServiceStats::default();
+
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Generate(req) => {
+                        let pending = PendingRequest {
+                            id: waiting.len() as u64,
+                            n: req.n,
+                            stream_offset: req.offset,
+                        };
+                        waiting.push(req);
+                        stats.requests += 1;
+                        if let Some(batch) = batcher.push(pending) {
+                            launch(gen.as_mut(), &batch, &mut waiting, &mut stats);
+                        }
+                    }
+                    Msg::Flush => {
+                        if let Some(batch) = batcher.flush() {
+                            launch(gen.as_mut(), &batch, &mut waiting, &mut stats);
+                        }
+                    }
+                    Msg::Shutdown(ack) => {
+                        if let Some(batch) = batcher.flush() {
+                            launch(gen.as_mut(), &batch, &mut waiting, &mut stats);
+                        }
+                        let _ = ack.send(stats);
+                        break;
+                    }
+                }
+            }
+        });
+        ShardHandle { tx, worker: Some(worker) }
+    }
+
+    fn shutdown(&mut self) -> Result<ServiceStats> {
+        let (ack, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Shutdown(ack))
+            .map_err(|_| Error::Coordinator("shard worker gone".into()))?;
+        let stats = rx
+            .recv()
+            .map_err(|_| Error::Coordinator("shard worker dropped ack".into()))?;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(stats)
+    }
+}
+
+impl Drop for ShardHandle {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let (ack, _rx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(ack));
+            let _ = w.join();
+        }
+    }
+}
+
+/// One coalesced kernel launch over a closed batch: every member's
+/// payload is generated at the member's *global* stream offset via
+/// counter-based skip-ahead, so responses are independent of batching and
+/// sharding. Generation goes straight into each member's reply buffer —
+/// the padded `launch_n` exists only in the launch accounting (kernel
+/// block granularity), not as allocated scratch.
+fn launch(
+    gen: &mut dyn crate::backends::VendorGenerator,
+    batch: &BatchOutcome,
+    waiting: &mut Vec<ServiceRequest>,
+    stats: &mut ServiceStats,
+) {
+    stats.launches += 1;
+    stats.numbers += batch.launch_n as u64;
+    let canonical = Distribution::uniform(0.0, 1.0);
+    for m in &batch.members {
+        let req = &waiting[m.id as usize];
+        let mut payload = vec![0f32; m.n];
+        let generated = gen
+            .set_offset(m.stream_offset)
+            .and_then(|()| gen.generate_canonical(&canonical, &mut payload));
+        let reply = match generated {
+            Ok(()) => {
+                let (a, b) = req.range;
+                if a != 0.0 || b != 1.0 {
+                    crate::rng::range_transform::range_transform_inplace(&mut payload, a, b);
+                }
+                Ok(payload)
+            }
+            Err(e) => Err(e),
+        };
+        let _ = req.reply.send(reply);
+    }
+    waiting.clear();
+}
+
+/// Handle to a running sharded RNG service pool.
+pub struct ServicePool {
+    shards: Vec<ShardHandle>,
+    n_batched: usize,
+    overflow: Option<usize>,
+    policy: DispatchPolicy,
+    next: AtomicUsize,
+    cursor: AtomicU64,
+}
+
+impl ServicePool {
+    /// Spawn the pool: `cfg.shards` batched round-robin workers plus (when
+    /// the policy is enabled) one unbatched overflow worker.
+    pub fn spawn(cfg: PoolConfig) -> ServicePool {
+        let n_batched = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(n_batched + 1);
+        for _ in 0..n_batched {
+            shards.push(ShardHandle::spawn(
+                cfg.platform,
+                cfg.seed,
+                cfg.max_batch,
+                cfg.max_requests,
+                Route::Batched,
+            ));
+        }
+        let overflow = if cfg.policy.is_enabled() {
+            // max_requests = 1: every overflow request launches immediately.
+            shards.push(ShardHandle::spawn(
+                cfg.platform,
+                cfg.seed,
+                cfg.max_batch,
+                1,
+                Route::Overflow,
+            ));
+            Some(shards.len() - 1)
+        } else {
+            None
+        };
+        ServicePool {
+            shards,
+            n_batched,
+            overflow,
+            policy: cfg.policy,
+            next: AtomicUsize::new(0),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Batched (round-robin) shard count, excluding the overflow lane.
+    pub fn shard_count(&self) -> usize {
+        self.n_batched
+    }
+
+    /// Whether an overflow lane is attached.
+    pub fn has_overflow_lane(&self) -> bool {
+        self.overflow.is_some()
+    }
+
+    /// Submit a request; returns the receiver for the reply. The reply is
+    /// exactly the sub-stream a dedicated engine skipped to this request's
+    /// global offset would produce.
+    pub fn generate(&self, n: usize, range: (f32, f32)) -> mpsc::Receiver<Result<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        let offset = self.cursor.fetch_add(n as u64, Ordering::Relaxed);
+        let idx = match (self.overflow, self.policy.route(n)) {
+            (Some(ov), Route::Overflow) => ov,
+            _ => self.next.fetch_add(1, Ordering::Relaxed) % self.n_batched,
+        };
+        let _ = self.shards[idx]
+            .tx
+            .send(Msg::Generate(ServiceRequest { n, range, offset, reply }));
+        rx
+    }
+
+    /// Force pending requests out of every shard.
+    pub fn flush(&self) {
+        for shard in &self.shards {
+            let _ = shard.tx.send(Msg::Flush);
+        }
+    }
+
+    /// Stop all workers, returning per-shard counters.
+    pub fn shutdown(mut self) -> Result<PoolStats> {
+        let mut per_shard = Vec::with_capacity(self.shards.len());
+        for shard in &mut self.shards {
+            per_shard.push(shard.shutdown()?);
+        }
+        Ok(PoolStats { shards: per_shard })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Engine, PhiloxEngine};
+
+    fn dedicated(seed: u64, offset: u64, n: usize) -> Vec<f32> {
+        let mut e = PhiloxEngine::with_offset(seed, offset);
+        let mut out = vec![0f32; n];
+        e.fill_uniform_f32(&mut out);
+        out
+    }
+
+    #[test]
+    fn single_shard_batched_matches_dedicated_stream() {
+        let pool = ServicePool::spawn(PoolConfig::new(PlatformId::A100, 42, 1));
+        let sizes = [100usize, 200, 44];
+        let rxs: Vec<_> = sizes.iter().map(|&n| pool.generate(n, (0.0, 1.0))).collect();
+        pool.flush();
+        let mut offset = 0u64;
+        for (rx, &n) in rxs.iter().zip(&sizes) {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got, dedicated(42, offset, n));
+            offset += n as u64;
+        }
+        let stats = pool.shutdown().unwrap().total();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.launches, 1);
+        assert_eq!(stats.numbers, 344);
+    }
+
+    #[test]
+    fn streams_are_invariant_under_shard_count_and_padding() {
+        // Sizes deliberately NOT multiples of 4: the pad tail must not
+        // shift anybody's sub-stream.
+        let sizes = [3usize, 5, 17, 1, 64, 7];
+        for shards in [1usize, 2, 4] {
+            let mut cfg = PoolConfig::new(PlatformId::Vega56, 7, shards);
+            cfg.max_requests = 2;
+            let pool = ServicePool::spawn(cfg);
+            let rxs: Vec<_> = sizes.iter().map(|&n| pool.generate(n, (0.0, 1.0))).collect();
+            pool.flush();
+            let mut offset = 0u64;
+            for (rx, &n) in rxs.iter().zip(&sizes) {
+                let got = rx.recv().unwrap().unwrap();
+                assert_eq!(got, dedicated(7, offset, n), "shards={shards} n={n}");
+                offset += n as u64;
+            }
+            pool.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 1, 4);
+        cfg.max_requests = 1000;
+        let pool = ServicePool::spawn(cfg);
+        let rxs: Vec<_> = (0..8).map(|_| pool.generate(16, (0.0, 1.0))).collect();
+        pool.flush();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.shards.len(), 4);
+        for s in &stats.shards {
+            assert_eq!(s.requests, 2);
+        }
+    }
+
+    #[test]
+    fn overflow_lane_takes_large_requests_unbatched() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 9, 2);
+        cfg.policy = DispatchPolicy::fixed(1000);
+        cfg.max_requests = 1000;
+        let pool = ServicePool::spawn(cfg);
+        assert!(pool.has_overflow_lane());
+
+        let small = pool.generate(10, (0.0, 1.0));
+        let large = pool.generate(5000, (0.0, 1.0)); // >= threshold: overflow
+        // The overflow lane launches immediately, without a flush.
+        let big = large.recv().unwrap().unwrap();
+        assert_eq!(big, dedicated(9, 10, 5000));
+        pool.flush();
+        assert_eq!(small.recv().unwrap().unwrap(), dedicated(9, 0, 10));
+
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.shards.len(), 3); // 2 batched + overflow
+        let overflow = stats.shards[2];
+        assert_eq!(overflow.requests, 1);
+        assert_eq!(overflow.launches, 1);
+        assert_eq!(stats.total().requests, 2);
+    }
+
+    #[test]
+    fn range_transform_applied_per_request() {
+        let pool = ServicePool::spawn(PoolConfig::new(PlatformId::Rome7742, 3, 2));
+        let rx = pool.generate(64, (2.0, 4.0));
+        pool.flush();
+        let got = rx.recv().unwrap().unwrap();
+        assert!(got.iter().all(|&x| (2.0..4.0).contains(&x)));
+        let mut want = dedicated(3, 0, 64);
+        crate::rng::range_transform::range_transform_inplace(&mut want, 2.0, 4.0);
+        assert_eq!(got, want);
+        pool.shutdown().unwrap();
+    }
+}

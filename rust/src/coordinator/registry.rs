@@ -63,6 +63,17 @@ impl BackendRegistry {
         Box::new(MklCpuBackend::new(host))
     }
 
+    /// The backend set one pool shard owns: the platform's native backend
+    /// plus its paired host fallback. Backends are not `Send`, so each
+    /// worker thread calls this from inside the thread (the coordinator
+    /// gives each worker its own set).
+    pub fn shard_set(&self, platform: PlatformId) -> ShardBackendSet {
+        ShardBackendSet {
+            native: self.native_for(platform),
+            host: self.host_for(platform),
+        }
+    }
+
     /// All platforms whose class matches `kind`.
     pub fn platforms(kind: Option<PlatformKind>) -> Vec<PlatformId> {
         PlatformId::ALL
@@ -76,6 +87,17 @@ impl Default for BackendRegistry {
     fn default() -> Self {
         Self::new()
     }
+}
+
+/// The per-worker backend set a pool shard owns (see
+/// [`BackendRegistry::shard_set`]). The pool's lane picks the generating
+/// half: batched small-request lanes use `host`, the overflow lane uses
+/// `native` — the §8 heuristic applied at the service layer.
+pub struct ShardBackendSet {
+    /// The platform's native vendor backend (overflow/device lane).
+    pub native: Box<dyn RngBackend>,
+    /// The paired host-CPU backend (batched small-request lanes).
+    pub host: Box<dyn RngBackend>,
 }
 
 #[cfg(test)]
@@ -105,6 +127,18 @@ mod tests {
         let reg = BackendRegistry::new();
         assert!(!reg.has_pjrt());
         assert!(reg.pjrt_backend().is_err());
+    }
+
+    #[test]
+    fn shard_set_pairs_native_with_host() {
+        let reg = BackendRegistry::new();
+        let set = reg.shard_set(PlatformId::A100);
+        assert_eq!(set.native.name(), "cuRAND");
+        assert_eq!(set.host.platform(), PlatformId::Rome7742);
+        // CPU platforms: native generation, host == itself.
+        let cpu = reg.shard_set(PlatformId::Rome7742);
+        assert!(!cpu.native.is_device());
+        assert_eq!(cpu.host.platform(), PlatformId::Rome7742);
     }
 
     #[test]

@@ -1,163 +1,60 @@
-//! Threaded RNG service: the coordinator's request loop.
+//! Single-shard RNG service: the legacy facade over the sharded pool.
 //!
-//! A worker thread owns the (non-`Send`) backend set and serves generate
-//! requests from an mpsc channel, batching small requests per
-//! [`super::RequestBatcher`]. Each request is answered with exactly the
-//! sub-stream it would have received from a dedicated engine at its
-//! assigned offset — counter-based slicing keeps responses independent of
-//! batching decisions.
+//! [`RngService`] keeps the original one-worker API (spawn / generate /
+//! flush / shutdown) but is now a thin wrapper over a one-shard
+//! [`ServicePool`], so both paths share the worker, batching and
+//! stream-partitioning machinery — and the batching invariant: each
+//! request is answered with exactly the sub-stream a dedicated engine at
+//! its assigned global offset would produce, independent of batching
+//! decisions.
 
 use std::sync::mpsc;
-use std::thread::JoinHandle;
 
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::platform::PlatformId;
-use crate::rng::engines::PhiloxEngine;
-use crate::rng::Engine;
 
-use super::batcher::{PendingRequest, RequestBatcher};
+use super::pool::{PoolConfig, ServicePool, ServiceStats};
 
-/// A generate request.
-pub struct ServiceRequest {
-    /// Numbers wanted.
-    pub n: usize,
-    /// Range [a, b).
-    pub range: (f32, f32),
-    /// Reply channel.
-    pub reply: mpsc::Sender<Result<Vec<f32>>>,
-}
-
-enum Msg {
-    Generate(ServiceRequest),
-    Flush,
-    Shutdown(mpsc::Sender<ServiceStats>),
-}
-
-/// Aggregate service counters.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ServiceStats {
-    /// Requests served.
-    pub requests: u64,
-    /// Kernel launches issued (batches).
-    pub launches: u64,
-    /// Numbers generated (padded launch totals).
-    pub numbers: u64,
-}
-
-/// Handle to a running RNG service.
+/// Handle to a running single-shard RNG service.
 pub struct RngService {
-    tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    pool: ServicePool,
 }
 
 impl RngService {
     /// Spawn a service for `platform` with the given batching policy.
     /// The worker builds its own engine/backends (they are not `Send`).
     pub fn spawn(platform: PlatformId, seed: u64, max_batch: usize, max_requests: usize) -> Self {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || {
-            let _ = platform; // reserved for timing-model integration
-            let mut engine = PhiloxEngine::new(seed);
-            let mut batcher = RequestBatcher::new(max_batch, max_requests, 4);
-            let mut waiting: Vec<ServiceRequest> = Vec::new();
-            let mut stats = ServiceStats::default();
-
-            let serve = |engine: &mut PhiloxEngine,
-                         batcher: &mut RequestBatcher,
-                         waiting: &mut Vec<ServiceRequest>,
-                         stats: &mut ServiceStats| {
-                if let Some(batch) = batcher.flush() {
-                    launch(engine, batch.launch_n, &batch.members, waiting, stats);
-                }
-            };
-
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Generate(req) => {
-                        let id = waiting.len() as u64;
-                        let n = req.n;
-                        waiting.push(req);
-                        stats.requests += 1;
-                        if let Some(batch) = batcher.push(PendingRequest { id, n }) {
-                            launch(&mut engine, batch.launch_n, &batch.members, &mut waiting, &mut stats);
-                        }
-                    }
-                    Msg::Flush => serve(&mut engine, &mut batcher, &mut waiting, &mut stats),
-                    Msg::Shutdown(ack) => {
-                        serve(&mut engine, &mut batcher, &mut waiting, &mut stats);
-                        let _ = ack.send(stats);
-                        break;
-                    }
-                }
-            }
-        });
-        RngService { tx, worker: Some(worker) }
+        let mut cfg = PoolConfig::new(platform, seed, 1);
+        cfg.max_batch = max_batch;
+        cfg.max_requests = max_requests;
+        RngService { pool: ServicePool::spawn(cfg) }
     }
 
     /// Submit a request; returns the receiver for the reply.
     pub fn generate(&self, n: usize, range: (f32, f32)) -> mpsc::Receiver<Result<Vec<f32>>> {
-        let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Msg::Generate(ServiceRequest { n, range, reply }));
-        rx
+        self.pool.generate(n, range)
     }
 
     /// Force pending requests out.
     pub fn flush(&self) {
-        let _ = self.tx.send(Msg::Flush);
+        self.pool.flush()
     }
 
     /// Stop the worker, returning counters.
-    pub fn shutdown(mut self) -> Result<ServiceStats> {
-        let (ack, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Shutdown(ack))
-            .map_err(|_| Error::Coordinator("worker gone".into()))?;
-        let stats = rx
-            .recv()
-            .map_err(|_| Error::Coordinator("worker dropped ack".into()))?;
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        Ok(stats)
+    pub fn shutdown(self) -> Result<ServiceStats> {
+        Ok(self.pool.shutdown()?.total())
     }
-}
 
-impl Drop for RngService {
-    fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let (ack, _rx) = mpsc::channel();
-            let _ = self.tx.send(Msg::Shutdown(ack));
-            let _ = w.join();
-        }
+    /// The underlying one-shard pool.
+    pub fn pool(&self) -> &ServicePool {
+        &self.pool
     }
-}
-
-fn launch(
-    engine: &mut PhiloxEngine,
-    launch_n: usize,
-    members: &[(u64, usize, usize)],
-    waiting: &mut Vec<ServiceRequest>,
-    stats: &mut ServiceStats,
-) {
-    let mut out = vec![0f32; launch_n];
-    engine.fill_uniform_f32(&mut out);
-    stats.launches += 1;
-    stats.numbers += launch_n as u64;
-    for &(id, offset, n) in members {
-        let req = &waiting[id as usize];
-        let (a, b) = req.range;
-        let mut slice = out[offset..offset + n].to_vec();
-        if a != 0.0 || b != 1.0 {
-            crate::rng::range_transform::range_transform_inplace(&mut slice, a, b);
-        }
-        let _ = req.reply.send(Ok(slice));
-    }
-    waiting.clear();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::{Engine, PhiloxEngine};
 
     #[test]
     fn batched_responses_match_dedicated_stream() {
@@ -199,5 +96,13 @@ mod tests {
         let stats = svc.shutdown().unwrap();
         assert!(r1.recv().unwrap().is_ok());
         assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn facade_is_a_one_shard_pool() {
+        let svc = RngService::spawn(PlatformId::A100, 1, 1 << 20, 16);
+        assert_eq!(svc.pool().shard_count(), 1);
+        assert!(!svc.pool().has_overflow_lane());
+        svc.shutdown().unwrap();
     }
 }

@@ -1,45 +1,84 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — `thiserror` is unavailable
+//! offline, like the other external-crate roles listed in `lib.rs`).
 
-use thiserror::Error;
+use std::fmt;
+
+use crate::xla;
 
 /// Errors surfaced by the portarng library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A generate entry point was called with a (engine, distribution,
     /// method) combination the selected backend does not implement —
     /// mirroring the paper's "20 of the 36 generate functions are supported
     /// by our cuRAND backend as the remaining 16 use ICDF methods".
-    #[error("backend `{backend}` does not support {what}")]
-    Unsupported { backend: &'static str, what: String },
+    Unsupported {
+        /// Backend that rejected the request.
+        backend: &'static str,
+        /// Human-readable description of what was requested.
+        what: String,
+    },
 
     /// Invalid argument (sizes, ranges, seeds).
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// A SYCL-runtime usage error (double accessor conflict, queue misuse,
     /// use-after-destroy of a generator...).
-    #[error("sycl runtime error: {0}")]
     Sycl(String),
 
     /// Artifact registry / manifest problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Underlying XLA/PJRT failure.
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// JSON parsing failure (manifest.json).
-    #[error("json error: {0}")]
     Json(String),
 
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Coordinator/service errors (channel closed, worker panicked).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unsupported { backend, what } => {
+                write!(f, "backend `{backend}` does not support {what}")
+            }
+            Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            Error::Sycl(msg) => write!(f, "sycl runtime error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Json(msg) => write!(f, "json error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -49,5 +88,32 @@ impl Error {
     /// Helper for unsupported-feature errors.
     pub fn unsupported(backend: &'static str, what: impl Into<String>) -> Self {
         Error::Unsupported { backend, what: what.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_legacy_derive() {
+        assert_eq!(
+            Error::unsupported("cuRAND", "icdf").to_string(),
+            "backend `cuRAND` does not support icdf"
+        );
+        assert_eq!(
+            Error::InvalidArgument("n".into()).to_string(),
+            "invalid argument: n"
+        );
+        assert!(Error::from(crate::xla::Error("x".into()))
+            .to_string()
+            .starts_with("xla error"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -19,18 +19,57 @@
 //!   executing the AOT-compiled Pallas Philox kernel.
 //! * [`platform`] — platform descriptors and calibrated performance models
 //!   (virtual clock) for the paper's six test machines.
-//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`.
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt` (gated
+//!   through the in-tree [`xla`] binding substrate when the real
+//!   xla_extension bindings are not linked).
 //! * [`fastcalosim`] — the real-world benchmark substrate: ATLAS-like
 //!   calorimeter geometry, parameterization store, event generation and hit
 //!   simulation.
-//! * [`burner`] — the paper's §5.1 RNG-burner benchmark application.
+//! * [`burner`] — the paper's §5.1 RNG-burner benchmark application, plus
+//!   the pooled variant that drives it through the service pool.
 //! * [`metrics`] — VAVS efficiency and the Pennycook performance-portability
 //!   metric (paper eq. 1).
-//! * [`coordinator`] — backend registry/dispatch, request batcher, and the
-//!   §8 "heuristic backend selection" extension.
+//! * [`coordinator`] — backend registry/dispatch, request batcher, the
+//!   §8 "heuristic backend selection" extension, and the sharded RNG
+//!   service pool (below).
 //! * [`repro`] — drivers that regenerate every table and figure.
-//! * [`benchkit`] / [`testkit`] / [`jsonlite`] — in-tree substrates for the
-//!   criterion / proptest / serde_json roles (unavailable offline).
+//! * [`benchkit`] / [`testkit`] / [`jsonlite`] / [`xla`] — in-tree
+//!   substrates for the criterion / proptest / serde_json / xla_extension
+//!   roles (unavailable offline).
+//!
+//! ## The sharded service pool
+//!
+//! The §8 extension point — backend coordination under sustained,
+//! concurrent load — is served by [`coordinator::ServicePool`]:
+//!
+//! ```text
+//!                       ServicePool::generate(n, range)
+//!                                   |
+//!                 global stream cursor (AtomicU64): offset = cursor += n
+//!                                   |
+//!              DispatchPolicy (coordinator::heuristic): n >= threshold?
+//!                    |                                     |
+//!              round-robin                             overflow lane
+//!             /     |     \                                 |
+//!        shard 0  shard 1  ...  shard N-1              shard N (unbatched)
+//!        [worker thread: own backend set (BackendRegistry::shard_set) —
+//!         batched lanes generate on the host backend, the overflow lane
+//!         on the device-native backend (§8: host for small, GPU for
+//!         large); own RequestBatcher; each batch member is generated at
+//!         its *global* stream offset via counter-based skip-ahead]
+//! ```
+//!
+//! The pool-wide invariant (pinned by the `testkit` property tests in
+//! `tests/coordinator.rs`): **every requester observes exactly the
+//! sub-stream a dedicated engine at its assigned global offset would
+//! produce** — bit-identical for any shard count, any batching thresholds
+//! and any interleaving, because Philox is counter-based and
+//! `Engine::skip_ahead` / `VendorGenerator::set_offset` are O(1). Requests
+//! at or above the dispatch policy's size threshold take the overflow lane
+//! (a dedicated unbatched shard), modelling the paper's "host for small
+//! workloads, GPU for larger ones" heuristic at the service layer.
+//! [`coordinator::RngService`] remains as the single-shard facade over the
+//! same machinery.
 
 pub mod backends;
 pub mod benchkit;
@@ -46,5 +85,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sycl;
 pub mod testkit;
+pub mod xla;
 
 pub use error::{Error, Result};

@@ -16,7 +16,7 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use portarng::burner::{run_burner_auto, run_burner_with_runtime, BurnerApi, BurnerConfig};
-use portarng::coordinator::RngService;
+use portarng::coordinator::{DispatchPolicy, PoolConfig, ServicePool};
 use portarng::fastcalosim::{run_fastcalosim, FcsApi, Workload};
 use portarng::platform::PlatformId;
 use portarng::repro::ExperimentId;
@@ -57,13 +57,17 @@ USAGE:
   portarng platforms
   portarng burner --platform <p> --api <native|sycl-buffer|sycl-usm|pjrt>
                   --batch <n> [--iters <n>] [--range a,b]
+                  [--distr <name> --params a,b,..] [--pool <shards>]
   portarng fastcalosim --platform <p> --api <native|sycl>
                   --workload <single-e|ttbar> [--events <n>]
   portarng repro --experiment <table1|fig2|fig3|fig4|table2|fig5|ablation-heuristic|all>
                   [--quick] [--outdir <dir>]
-  portarng serve [--batch-max <n>] [--demo-requests <n>]
+  portarng serve [--batch-max <n>] [--demo-requests <n>] [--shards <n>]
+                 [--overflow-at <n>]
   portarng check-artifacts
 
+Distributions: uniform a b | gaussian mean stddev | lognormal m s |
+               exponential lambda | poisson lambda | bits
 Platforms: rome7742, i7-10875h, xeon5220, uhd630, vega56, a100";
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
@@ -104,9 +108,45 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
 
     let mut cfg = BurnerConfig::paper_default(platform, api, batch);
     cfg.iterations = iters;
+    if opts.contains_key("range") && opts.contains_key("distr") {
+        return Err("--range and --distr conflict; pass the range as --distr uniform a,b".into());
+    }
+    if opts.contains_key("params") && !opts.contains_key("distr") {
+        return Err("--params requires --distr <name>".into());
+    }
     if let Some(range) = opts.get("range") {
         let (a, b) = range.split_once(',').ok_or("bad --range, want a,b")?;
         cfg.distr = portarng::rng::Distribution::uniform(a.parse()?, b.parse()?);
+    }
+    if let Some(name) = opts.get("distr") {
+        let params: Vec<f32> = match opts.get("params") {
+            None => Vec::new(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(str::parse)
+                .collect::<Result<_, _>>()?,
+        };
+        cfg.distr = portarng::rng::parse_distribution(name, &params)?;
+    }
+
+    // Pooled mode: drive the workload through the sharded service pool.
+    if let Some(shards) = opts.get("pool") {
+        let shards: usize = shards.parse()?;
+        let r = portarng::burner::run_burner_pooled(&cfg, shards, iters)?;
+        println!(
+            "pooled burner {} shards={} requests={} batch={}\n  \
+             {:.1} M numbers/s wall ({:.2} ms total), {} launches, checksum {:016x}",
+            platform.token(),
+            r.shards,
+            r.requests,
+            batch,
+            r.throughput_m_per_s(),
+            r.wall_ns as f64 / 1e6,
+            r.stats.total().launches,
+            r.checksum
+        );
+        return Ok(());
     }
 
     let report = if api == BurnerApi::Pjrt {
@@ -202,21 +242,40 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
         opts.get("batch-max").map(|s| s.parse()).transpose()?.unwrap_or(1 << 20);
     let n_req: usize =
         opts.get("demo-requests").map(|s| s.parse()).transpose()?.unwrap_or(32);
-    let svc = RngService::spawn(PlatformId::A100, 0x5EED, batch_max, 16);
+    let shards: usize = opts.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let overflow_at: Option<usize> =
+        opts.get("overflow-at").map(|s| s.parse()).transpose()?;
+
+    let mut cfg = PoolConfig::new(PlatformId::A100, 0x5EED, shards);
+    cfg.max_batch = batch_max;
+    if let Some(t) = overflow_at {
+        cfg.policy = DispatchPolicy::fixed(t);
+    }
+    let pool = ServicePool::spawn(cfg);
     let mut receivers = Vec::new();
     for i in 0..n_req {
-        receivers.push(svc.generate(1000 + 137 * i, (0.0, 1.0)));
+        receivers.push(pool.generate(1000 + 137 * i, (0.0, 1.0)));
     }
-    svc.flush();
+    pool.flush();
     let mut total = 0usize;
     for rx in receivers {
         total += rx.recv()??.len();
     }
-    let stats = svc.shutdown()?;
+    let stats = pool.shutdown()?;
+    let t = stats.total();
     println!(
-        "served {} requests / {} numbers in {} launches (batched)",
-        stats.requests, total, stats.launches
+        "served {} requests / {} numbers in {} launches across {} shard(s)",
+        t.requests,
+        total,
+        t.launches,
+        stats.shards.len()
     );
+    for (i, s) in stats.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: {} requests, {} launches, {} numbers",
+            s.requests, s.launches, s.numbers
+        );
+    }
     Ok(())
 }
 

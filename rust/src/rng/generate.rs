@@ -278,19 +278,66 @@ impl GenerateApi {
     }
 }
 
-/// Construct the benchmark distribution from method tokens (CLI helper).
-pub fn parse_distribution(name: &str, a: f32, b: f32) -> Option<Distribution> {
+/// Construct the benchmark distribution from CLI tokens, with explicit
+/// per-family parameter arity:
+///
+/// * `uniform a b` — range `[a, b)`
+/// * `gaussian mean stddev`
+/// * `lognormal m s`
+/// * `exponential lambda` — lambda is the FIRST (and only) parameter;
+///   extra parameters are rejected rather than silently ignored
+/// * `poisson lambda`
+/// * `bits` — no parameters
+pub fn parse_distribution(name: &str, params: &[f32]) -> crate::error::Result<Distribution> {
+    use crate::error::Error;
+    let arity = |want: usize| -> crate::error::Result<()> {
+        if params.len() == want {
+            Ok(())
+        } else {
+            Err(Error::InvalidArgument(format!(
+                "distribution `{name}` takes {want} parameter(s), got {}",
+                params.len()
+            )))
+        }
+    };
     match name {
-        "uniform" => Some(Distribution::Uniform { a, b, method: UniformMethod::Standard }),
+        "uniform" => {
+            arity(2)?;
+            Ok(Distribution::Uniform {
+                a: params[0],
+                b: params[1],
+                method: UniformMethod::Standard,
+            })
+        }
         "gaussian" => {
-            Some(Distribution::Gaussian { mean: a, stddev: b, method: GaussianMethod::BoxMuller })
+            arity(2)?;
+            Ok(Distribution::Gaussian {
+                mean: params[0],
+                stddev: params[1],
+                method: GaussianMethod::BoxMuller,
+            })
         }
         "lognormal" => {
-            Some(Distribution::Lognormal { m: a, s: b, method: GaussianMethod::BoxMuller })
+            arity(2)?;
+            Ok(Distribution::Lognormal {
+                m: params[0],
+                s: params[1],
+                method: GaussianMethod::BoxMuller,
+            })
         }
-        "exponential" => Some(Distribution::Exponential { lambda: b }),
-        "bits" => Some(Distribution::Bits),
-        _ => None,
+        "exponential" => {
+            arity(1)?;
+            Ok(Distribution::Exponential { lambda: params[0] })
+        }
+        "poisson" => {
+            arity(1)?;
+            Ok(Distribution::Poisson { lambda: params[0] as f64 })
+        }
+        "bits" => {
+            arity(0)?;
+            Ok(Distribution::Bits)
+        }
+        other => Err(Error::InvalidArgument(format!("unknown distribution `{other}`"))),
     }
 }
 
@@ -368,6 +415,31 @@ mod tests {
             .filter(|r| r.class == CommandClass::Transform)
             .count();
         assert_eq!(transforms, 0);
+    }
+
+    #[test]
+    fn parse_distribution_maps_exponential_lambda_from_first_param() {
+        // Regression: the old signature read lambda from the SECOND slot
+        // and silently ignored the first.
+        let d = parse_distribution("exponential", &[2.5]).unwrap();
+        assert_eq!(d, Distribution::Exponential { lambda: 2.5 });
+        // Extra parameter is an error, not silently dropped.
+        assert!(parse_distribution("exponential", &[2.5, 9.0]).is_err());
+        assert!(parse_distribution("exponential", &[]).is_err());
+    }
+
+    #[test]
+    fn parse_distribution_arity_checks() {
+        assert_eq!(
+            parse_distribution("uniform", &[-1.0, 1.0]).unwrap(),
+            Distribution::uniform(-1.0, 1.0)
+        );
+        assert!(parse_distribution("uniform", &[0.0]).is_err());
+        assert_eq!(parse_distribution("bits", &[]).unwrap(), Distribution::Bits);
+        assert!(parse_distribution("bits", &[1.0]).is_err());
+        assert!(parse_distribution("nope", &[]).is_err());
+        let g = parse_distribution("gaussian", &[3.0, 0.5]).unwrap();
+        assert_eq!(g, Distribution::gaussian(3.0, 0.5));
     }
 
     #[test]

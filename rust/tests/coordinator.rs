@@ -1,7 +1,9 @@
-//! Coordinator integration: service batching invariants, registry
-//! dispatch, heuristic selection.
+//! Coordinator integration: service batching invariants, pool stream
+//! equivalence, registry dispatch, heuristic selection.
 
-use portarng::coordinator::{BackendHeuristic, BackendRegistry, RngService};
+use portarng::coordinator::{
+    BackendHeuristic, BackendRegistry, DispatchPolicy, PoolConfig, RngService, ServicePool,
+};
 use portarng::platform::PlatformId;
 use portarng::rng::{Engine, PhiloxEngine};
 use portarng::testkit;
@@ -35,6 +37,81 @@ fn prop_batched_service_equals_dedicated_stream() {
         svc.shutdown().map_err(|e| e.to_string())?;
         Ok(())
     });
+}
+
+#[test]
+fn prop_pooled_batched_output_is_bit_identical_to_dedicated_engines() {
+    // The pool-wide invariant for shard counts {1, 2, 8} and mixed request
+    // sizes: every reply equals a dedicated engine skipped to the
+    // request's global offset, and the in-order concatenation equals one
+    // contiguous stream — independent of batching thresholds, padding and
+    // the size-aware overflow lane.
+    testkit::forall("pool-stream-exact", 6, |g| {
+        let seed = g.u64();
+        let n_req = g.usize_in(3, 14);
+        // Mixed sizes: mostly small, occasionally large enough to trip the
+        // overflow threshold; deliberately not multiples of 4.
+        let sizes: Vec<usize> = (0..n_req)
+            .map(|_| {
+                if g.bool_with(0.25) {
+                    g.usize_in(800, 3000)
+                } else {
+                    g.usize_in(1, 500)
+                }
+            })
+            .collect();
+        let max_batch = g.usize_in(64, 4096);
+        let max_requests = g.usize_in(1, 6);
+        for shards in [1usize, 2, 8] {
+            let mut cfg = PoolConfig::new(PlatformId::A100, seed, shards);
+            cfg.max_batch = max_batch;
+            cfg.max_requests = max_requests;
+            cfg.policy = DispatchPolicy::fixed(800);
+            let pool = ServicePool::spawn(cfg);
+            let rxs: Vec<_> = sizes.iter().map(|&n| pool.generate(n, (0.0, 1.0))).collect();
+            pool.flush();
+            let mut offset = 0u64;
+            let mut concat = Vec::new();
+            for (rx, &n) in rxs.iter().zip(&sizes) {
+                let got = rx
+                    .recv()
+                    .map_err(|e| e.to_string())?
+                    .map_err(|e| e.to_string())?;
+                let mut want = vec![0f32; n];
+                PhiloxEngine::with_offset(seed, offset).fill_uniform_f32(&mut want);
+                if got != want {
+                    return Err(format!(
+                        "shards={shards}: request at offset {offset} (n={n}) diverged"
+                    ));
+                }
+                offset += n as u64;
+                concat.extend(got);
+            }
+            let mut whole = vec![0f32; concat.len()];
+            PhiloxEngine::new(seed).fill_uniform_f32(&mut whole);
+            if concat != whole {
+                return Err(format!("shards={shards}: concatenation != dedicated stream"));
+            }
+            let stats = pool.shutdown().map_err(|e| e.to_string())?;
+            if stats.total().requests != sizes.len() as u64 {
+                return Err("request count mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_shutdown_flushes_pending_requests_on_every_shard() {
+    let mut cfg = PoolConfig::new(PlatformId::Vega56, 11, 3);
+    cfg.max_requests = 1000; // nothing closes a batch before shutdown
+    let pool = ServicePool::spawn(cfg);
+    let rxs: Vec<_> = (0..9).map(|_| pool.generate(33, (0.0, 1.0))).collect();
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.total().requests, 9);
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok());
+    }
 }
 
 #[test]
