@@ -1,0 +1,94 @@
+//! Bench gate: the online autotuner recovers a mis-specified dispatch
+//! threshold.
+//!
+//! Scenario (all on the deterministic virtual clock, so the gate is
+//! noise-free): a serving mix of log-uniform request sizes on a
+//! discrete-GPU platform spec, with the pool's threshold deliberately
+//! mis-specified — once far too high (nothing overflows: big requests
+//! grind through the host lanes) and once far too low (everything
+//! overflows: the device lane serializes launch-latency-dominated small
+//! requests). The [`AutoTuner`] only sees delivered-throughput
+//! observations, exactly what pool telemetry would hand it.
+//!
+//! Gates:
+//!   * from BOTH mis-specified starts, the converged knobs reach >= 90%
+//!     of the best fixed-threshold throughput (power-of-two scan oracle);
+//!   * telemetry's hot-path cost stays negligible: a histogram record is
+//!     sub-microsecond amortized (the 4-shard >= 2x wall-clock gate lives
+//!     in `pool_throughput`, which runs the full telemetry-instrumented
+//!     pool).
+
+use portarng::autotune::{
+    best_fixed_threshold, virtual_pool_throughput, AutoTuner, ProbeWorkload,
+};
+use portarng::coordinator::TuningParams;
+use portarng::platform::PlatformId;
+use portarng::telemetry::Log2Histogram;
+
+const SHARDS: usize = 4;
+const WINDOWS: usize = 80;
+
+fn converge(platform: PlatformId, wl: &ProbeWorkload, start: TuningParams) -> (TuningParams, f64) {
+    let mut tuner = AutoTuner::new(start);
+    let mut params = tuner.params();
+    for _ in 0..WINDOWS {
+        let tput = virtual_pool_throughput(platform, SHARDS, &params, wl);
+        params = tuner.observe(tput);
+    }
+    assert!(tuner.converged(), "tuner still exploring after {WINDOWS} windows");
+    let (best, _) = tuner.best();
+    // Judge the held point by re-measuring it, not by trusting the
+    // tuner's bookkeeping.
+    (best, virtual_pool_throughput(platform, SHARDS, &best, wl))
+}
+
+fn main() {
+    let platform = PlatformId::A100;
+    let wl = ProbeWorkload::serving_mix(0xBE9C4, 192);
+    let defaults = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+    let (oracle_t, oracle_tput) = best_fixed_threshold(platform, SHARDS, &defaults, &wl);
+    println!(
+        "oracle: best fixed threshold {} -> {:.1} M numbers/s (virtual)",
+        oracle_t,
+        oracle_tput / 1e6
+    );
+
+    for (label, start) in [
+        ("too-high (1<<26: nothing overflows)", TuningParams { threshold: 1 << 26, ..defaults }),
+        ("too-low  (16: everything overflows)", TuningParams { threshold: 16, ..defaults }),
+    ] {
+        let start_tput = virtual_pool_throughput(platform, SHARDS, &start, &wl);
+        let (best, tput) = converge(platform, &wl, start);
+        let recovered = tput / oracle_tput;
+        println!(
+            "start {label}: {:.1} -> {:.1} M/s at threshold {}, flush {} ({:.0}% of oracle)",
+            start_tput / 1e6,
+            tput / 1e6,
+            best.threshold,
+            best.flush_requests,
+            recovered * 100.0
+        );
+        assert!(
+            recovered >= 0.9,
+            "autotuner recovered only {:.0}% of the best fixed threshold from {label}",
+            recovered * 100.0
+        );
+    }
+    println!("convergence gate (>= 90% of best fixed threshold, both starts): OK");
+
+    // Telemetry hot-path overhead smoke: one histogram record per launch
+    // is the most frequent telemetry write on the request path.
+    let h = Log2Histogram::new();
+    let reps = 1_000_000u64;
+    let t0 = std::time::Instant::now();
+    for v in 0..reps {
+        h.record(v);
+    }
+    let per_record = t0.elapsed().as_nanos() as f64 / reps as f64;
+    println!("telemetry record: {per_record:.1} ns amortized");
+    assert!(
+        per_record < 1_000.0,
+        "telemetry record costs {per_record:.0} ns — would perturb the pool hot path"
+    );
+    println!("telemetry overhead gate (< 1 us/record): OK");
+}

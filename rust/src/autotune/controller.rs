@@ -1,0 +1,342 @@
+//! Online tuning controller: a log₂ coordinate hill-climber.
+//!
+//! [`AutoTuner`] is measurement-agnostic: feed it one delivered-throughput
+//! observation per window ([`AutoTuner::observe`]) and it answers with the
+//! knobs to try next — threshold and flush size move by factors of two,
+//! one knob at a time, continuing while a direction keeps improving and
+//! flipping/switching when it stops. Plateaus (flat regions around a
+//! disabled-like threshold) are walked through up to a budget instead of
+//! being mistaken for optima; clamped candidates count as rejections so
+//! bounds never trap the walk. After both directions of both knobs
+//! reject, the tuner holds the best point — and re-opens exploration if
+//! the observed throughput later drifts well below it (load shift).
+//!
+//! [`PoolAutoTuner`] binds the controller to a live
+//! [`ServicePool`](crate::coordinator::ServicePool): each
+//! [`step`](PoolAutoTuner::step) turns telemetry-snapshot deltas into the
+//! observation and publishes the proposal through the pool's lock-free
+//! [`TuningHandle`](crate::coordinator::TuningHandle).
+
+use crate::coordinator::{ServicePool, TuningParams};
+use crate::telemetry::TelemetrySnapshot;
+
+/// Upper bound for the threshold knob (everything realistic overflows
+/// below this; `usize::MAX` positions step back into the grid from here).
+pub const MAX_THRESHOLD: usize = 1 << 28;
+
+/// Upper bound for the flush-requests knob.
+pub const MAX_FLUSH: usize = 256;
+
+/// Consecutive rejected candidates before the tuner holds its best point
+/// (covers both directions of both knobs).
+const STALL_LIMIT: u32 = 4;
+
+/// Plateau moves tolerated before the walk is abandoned as flat.
+const PLATEAU_LIMIT: u32 = 16;
+
+/// Fractional throughput drop (at the held optimum) that re-opens
+/// exploration.
+const DRIFT: f64 = 0.3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Knob {
+    Threshold,
+    Flush,
+}
+
+impl Knob {
+    fn next(self) -> Knob {
+        match self {
+            Knob::Threshold => Knob::Flush,
+            Knob::Flush => Knob::Threshold,
+        }
+    }
+}
+
+fn step(p: TuningParams, knob: Knob, up: bool) -> TuningParams {
+    let mut c = p;
+    match knob {
+        Knob::Threshold => {
+            let base = p.threshold.min(MAX_THRESHOLD).max(1);
+            c.threshold = if up {
+                base.saturating_mul(2).min(MAX_THRESHOLD)
+            } else {
+                (base / 2).max(1)
+            };
+        }
+        Knob::Flush => {
+            let base = p.flush_requests.min(MAX_FLUSH).max(1);
+            c.flush_requests = if up { (base * 2).min(MAX_FLUSH) } else { (base / 2).max(1) };
+        }
+    }
+    c
+}
+
+/// Log₂ coordinate hill-climber over [`TuningParams`].
+#[derive(Debug, Clone)]
+pub struct AutoTuner {
+    /// Last proposal handed out (what the next observation measures).
+    trial: TuningParams,
+    /// Accepted position the next candidate steps from.
+    pos: TuningParams,
+    /// Throughput anchor at `pos` (0 until the first observation).
+    pos_tput: f64,
+    best: TuningParams,
+    best_tput: f64,
+    knob: Knob,
+    dir_up: bool,
+    stalls: u32,
+    plateau_run: u32,
+    /// Relative improvement threshold separating improve/plateau/worse.
+    eps: f64,
+}
+
+impl AutoTuner {
+    /// Tuner starting (and first measuring) at `initial`.
+    pub fn new(initial: TuningParams) -> AutoTuner {
+        AutoTuner {
+            trial: initial,
+            pos: initial,
+            pos_tput: 0.0,
+            best: initial,
+            best_tput: 0.0,
+            knob: Knob::Threshold,
+            dir_up: true,
+            stalls: 0,
+            plateau_run: 0,
+            eps: 0.001,
+        }
+    }
+
+    /// Override the improve/plateau tolerance (raise it for noisy real
+    /// wall-clock measurements; the default suits the virtual clock).
+    pub fn with_epsilon(mut self, eps: f64) -> AutoTuner {
+        self.eps = eps.max(0.0);
+        self
+    }
+
+    /// The knobs the caller should be running right now.
+    pub fn params(&self) -> TuningParams {
+        self.trial
+    }
+
+    /// Best point seen so far and its throughput.
+    pub fn best(&self) -> (TuningParams, f64) {
+        (self.best, self.best_tput)
+    }
+
+    /// Whether the tuner is holding its optimum (exploration exhausted).
+    pub fn converged(&self) -> bool {
+        self.stalls >= STALL_LIMIT
+    }
+
+    fn register_stall(&mut self) {
+        self.stalls += 1;
+        self.plateau_run = 0;
+        self.pos = self.best;
+        self.pos_tput = self.best_tput;
+        if self.dir_up {
+            self.dir_up = false;
+        } else {
+            self.dir_up = true;
+            self.knob = self.knob.next();
+        }
+    }
+
+    fn propose(&mut self) -> TuningParams {
+        // A clamped candidate that cannot move counts as a rejection; at
+        // most all four (knob, direction) pairs can be exhausted here.
+        for _ in 0..4 {
+            if self.converged() {
+                break;
+            }
+            let cand = step(self.pos, self.knob, self.dir_up);
+            if cand != self.pos {
+                self.trial = cand;
+                return cand;
+            }
+            self.register_stall();
+        }
+        self.trial = self.best;
+        self.best
+    }
+
+    /// Digest the throughput observed while running [`params`], and
+    /// return the knobs to run next. Observations of `<= 0` (idle window)
+    /// leave the state untouched.
+    ///
+    /// [`params`]: AutoTuner::params
+    pub fn observe(&mut self, throughput: f64) -> TuningParams {
+        if throughput <= 0.0 {
+            return self.trial;
+        }
+        if self.converged() {
+            // Holding the optimum: re-open exploration only on a real
+            // regression (load drift), re-anchoring to today's reality.
+            if throughput < self.best_tput * (1.0 - DRIFT) {
+                self.best_tput = throughput;
+                self.pos_tput = throughput;
+                self.stalls = 0;
+                self.plateau_run = 0;
+            } else {
+                return self.trial;
+            }
+        }
+        if self.pos_tput == 0.0 {
+            // First observation: anchors the starting point.
+            self.pos_tput = throughput;
+            self.best_tput = throughput;
+            return self.propose();
+        }
+        if throughput > self.pos_tput * (1.0 + self.eps) {
+            // Strict improvement: accept and keep going.
+            self.pos = self.trial;
+            self.pos_tput = throughput;
+            self.stalls = 0;
+            self.plateau_run = 0;
+            if throughput > self.best_tput {
+                self.best_tput = throughput;
+                self.best = self.trial;
+            }
+        } else if throughput >= self.pos_tput * (1.0 - self.eps) {
+            // Plateau: walk through it (bounded), keeping the anchor.
+            self.plateau_run += 1;
+            if self.plateau_run > PLATEAU_LIMIT {
+                self.register_stall();
+            } else {
+                self.pos = self.trial;
+                if throughput > self.best_tput {
+                    self.best_tput = throughput;
+                    self.best = self.trial;
+                }
+            }
+        } else {
+            // Worse: back to the best point, try the next direction/knob.
+            self.register_stall();
+        }
+        self.propose()
+    }
+}
+
+/// Binds an [`AutoTuner`] to a live pool: snapshot deltas in, lock-free
+/// retunes out.
+pub struct PoolAutoTuner {
+    tuner: AutoTuner,
+    last: TelemetrySnapshot,
+}
+
+impl PoolAutoTuner {
+    /// Controller for `pool`, starting from the pool's current knobs.
+    /// Real wall-clock windows are noisy, so the improvement tolerance is
+    /// widened to 5%.
+    pub fn new(pool: &ServicePool) -> PoolAutoTuner {
+        PoolAutoTuner {
+            tuner: AutoTuner::new(pool.tuning().params()).with_epsilon(0.05),
+            last: pool.telemetry().snapshot(),
+        }
+    }
+
+    /// Close one observation window: read the telemetry delta, feed the
+    /// tuner, publish its proposal to the pool. Returns the knobs now in
+    /// effect.
+    pub fn step(&mut self, pool: &ServicePool) -> TuningParams {
+        let snap = pool.telemetry().snapshot();
+        let tput = snap.delivered_per_s_since(&self.last);
+        self.last = snap;
+        let next = self.tuner.observe(tput);
+        if next != pool.tuning().params() {
+            pool.retune(next);
+        }
+        next
+    }
+
+    /// The underlying controller (for reporting).
+    pub fn tuner(&self) -> &AutoTuner {
+        &self.tuner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(threshold: usize, flush: usize) -> TuningParams {
+        TuningParams { threshold, flush_requests: flush, max_batch: 1 << 20 }
+    }
+
+    /// Smooth unimodal objective peaking at threshold 2^12, flat in flush.
+    fn objective(params: &TuningParams) -> f64 {
+        let l2 = (params.threshold.max(1) as f64).log2();
+        1e6 / (1.0 + (l2 - 12.0).abs())
+    }
+
+    #[test]
+    fn climbs_to_a_unimodal_peak_from_above() {
+        let mut tuner = AutoTuner::new(p(1 << 20, 16));
+        let mut params = tuner.params();
+        for _ in 0..60 {
+            params = tuner.observe(objective(&params));
+        }
+        assert!(tuner.converged());
+        assert_eq!(tuner.best().0.threshold, 1 << 12);
+        assert_eq!(params.threshold, 1 << 12, "holds the optimum");
+    }
+
+    #[test]
+    fn climbs_to_a_unimodal_peak_from_below() {
+        let mut tuner = AutoTuner::new(p(4, 16));
+        let mut params = tuner.params();
+        for _ in 0..60 {
+            params = tuner.observe(objective(&params));
+        }
+        assert!(tuner.converged());
+        assert_eq!(tuner.best().0.threshold, 1 << 12);
+    }
+
+    #[test]
+    fn disabled_start_steps_back_into_the_grid() {
+        let mut tuner = AutoTuner::new(p(usize::MAX, 16));
+        let mut params = tuner.params();
+        for _ in 0..80 {
+            params = tuner.observe(objective(&params));
+        }
+        assert_eq!(tuner.best().0.threshold, 1 << 12, "params={params:?}");
+    }
+
+    #[test]
+    fn idle_windows_do_not_move_the_tuner() {
+        let mut tuner = AutoTuner::new(p(1 << 12, 16));
+        let first = tuner.observe(1000.0);
+        let after_idle = tuner.observe(0.0);
+        assert_eq!(first, after_idle);
+    }
+
+    #[test]
+    fn drift_reopens_exploration() {
+        let mut tuner = AutoTuner::new(p(1 << 12, 16));
+        let mut params = tuner.params();
+        for _ in 0..60 {
+            params = tuner.observe(objective(&params));
+        }
+        assert!(tuner.converged());
+        // A mild wobble at the optimum does not re-open exploration...
+        params = tuner.observe(objective(&params) * 0.9);
+        assert!(tuner.converged());
+        // ...a real regression does.
+        tuner.observe(objective(&params) * 0.5);
+        assert!(!tuner.converged());
+    }
+
+    #[test]
+    fn clamps_never_trap_the_walk() {
+        // Objective strictly increasing in threshold: the tuner rides to
+        // the MAX_THRESHOLD clamp and converges there instead of looping.
+        let mut tuner = AutoTuner::new(p(1 << 26, 16));
+        let mut params = tuner.params();
+        for _ in 0..60 {
+            params = tuner.observe((params.threshold.min(MAX_THRESHOLD)) as f64);
+        }
+        assert!(tuner.converged());
+        assert_eq!(tuner.best().0.threshold, MAX_THRESHOLD);
+    }
+}

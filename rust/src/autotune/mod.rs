@@ -1,0 +1,37 @@
+//! Online autotuning for the dispatch heuristic (DESIGN.md S12).
+//!
+//! The paper's §8 future work — "a heuristic approach to select the best
+//! backend for the problem size" — stops at a static threshold. This
+//! module makes the heuristic measure, calibrate, and adapt itself:
+//!
+//! 1. **Calibrate** ([`calibrate`]): short startup probe bursts over the
+//!    [`platform`](crate::platform) virtual clock sweep the threshold and
+//!    flush knobs and distill the optimum into a [`CalibrationProfile`].
+//! 2. **Persist** ([`ProfileStore`]): profiles are saved as JSON keyed by
+//!    platform token, so a warm start loads the previous calibration and
+//!    skips probing entirely.
+//! 3. **Adapt** ([`AutoTuner`] / [`PoolAutoTuner`]): under live load, the
+//!    controller reads [`telemetry`](crate::telemetry) snapshot deltas
+//!    once per window and nudges the pool's
+//!    [`DispatchPolicy`](crate::coordinator::DispatchPolicy) threshold and
+//!    [`RequestBatcher`](crate::coordinator::RequestBatcher) flush size
+//!    toward the observed throughput optimum, publishing retunes through
+//!    the pool's lock-free
+//!    [`TuningHandle`](crate::coordinator::TuningHandle) — workers pick
+//!    them up without locking the hot path.
+//!
+//! The `autotune_convergence` bench gates the loop end to end: starting
+//! from a deliberately mis-specified threshold on a virtual-clock
+//! platform, the tuner must recover at least 90% of the best
+//! fixed-threshold throughput.
+
+mod controller;
+mod probe;
+mod profile;
+
+pub use controller::{AutoTuner, PoolAutoTuner, MAX_FLUSH, MAX_THRESHOLD};
+pub use probe::{
+    best_fixed_threshold, calibrate, virtual_pool_throughput, ProbeWorkload, FLUSH_GRID,
+    THRESHOLD_GRID,
+};
+pub use profile::{CalibrationProfile, ProfileStore, PROFILE_SCHEMA};

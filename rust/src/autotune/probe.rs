@@ -1,0 +1,266 @@
+//! Startup calibration probes over the virtual clock.
+//!
+//! The controller needs a throughput objective it can evaluate without
+//! hardware: [`virtual_pool_throughput`] replays a request mix through a
+//! faithful cost model of the pool — round-robin batched shards on the
+//! paired host CPU, the unbatched overflow lane on the device — using the
+//! same [`PerfModel`] constants that drive every other virtual-clock
+//! figure. [`calibrate`] sweeps the threshold and flush knobs over that
+//! model in short probe bursts and distills the optimum into a
+//! [`CalibrationProfile`]; the same objective powers the
+//! `autotune_convergence` bench gate. Like
+//! [`BackendHeuristic::calibrate`](crate::coordinator::BackendHeuristic),
+//! the device cost excludes the D2H readback (the paper's §8 scenario:
+//! the consumer is device-resident), which is what makes a crossover
+//! exist at all.
+
+use crate::coordinator::{BackendRegistry, Route, TuningParams};
+use crate::platform::{PerfModel, PlatformId, PlatformKind};
+use crate::testkit::Gen;
+
+use super::profile::CalibrationProfile;
+
+/// Threshold sweep bounds (powers of two): below 2^2 every request
+/// overflows; above 2^26 nothing realistic does.
+pub const THRESHOLD_GRID: std::ops::RangeInclusive<u32> = 2..=26;
+
+/// Flush-size sweep grid (powers of two).
+pub const FLUSH_GRID: std::ops::RangeInclusive<u32> = 0..=8;
+
+/// A deterministic serving mix used for probes: request sizes drawn
+/// log-uniformly, mostly small with a heavy tail of launch-saturating
+/// ones — the regime where the host-vs-device crossover matters.
+#[derive(Debug, Clone)]
+pub struct ProbeWorkload {
+    /// Request sizes, submission order.
+    pub sizes: Vec<usize>,
+}
+
+impl ProbeWorkload {
+    /// Deterministic mix of `requests` sizes in `[2^4, 2^23)`,
+    /// log-uniform (each octave equally likely).
+    pub fn serving_mix(seed: u64, requests: usize) -> ProbeWorkload {
+        let mut g = Gen::new(seed);
+        let sizes = (0..requests.max(1))
+            .map(|_| {
+                let base = 1usize << g.usize_in(4, 22);
+                base + g.usize_in(0, base - 1)
+            })
+            .collect();
+        ProbeWorkload { sizes }
+    }
+
+    /// Total numbers requested.
+    pub fn total(&self) -> u64 {
+        self.sizes.iter().map(|&n| n as u64).sum()
+    }
+}
+
+/// Virtual-clock delivered throughput (numbers per virtual second) of a
+/// pool serving `wl` on `platform` with `shards` batched workers and the
+/// given tuning knobs.
+///
+/// Cost model, mirroring the real pool's structure:
+/// * requests at/above the threshold go to the overflow lane: one
+///   unbatched device launch each (kernel + native completion callback,
+///   no D2H — device-resident consumer), serialized on that lane;
+/// * everything else round-robins across the batched shards; each shard
+///   closes batches by the flush limits and pays one host "kernel"
+///   (launch latency + items / host throughput) per batch;
+/// * lanes run concurrently, so the virtual makespan is the slowest
+///   lane's busy time.
+pub fn virtual_pool_throughput(
+    platform: PlatformId,
+    shards: usize,
+    params: &TuningParams,
+    wl: &ProbeWorkload,
+) -> f64 {
+    let spec = platform.spec();
+    let host_spec = BackendRegistry::host_platform(platform).spec();
+    let device = PerfModel::new(spec.clone());
+    let host = PerfModel::new(host_spec);
+    let policy = params.policy();
+    let has_device_lane = spec.kind != PlatformKind::Cpu;
+
+    let shards = shards.max(1);
+    let mut overflow_ns = 0u64;
+    let mut shard_ns = vec![0u64; shards];
+    // Per-shard open batch: (queued requests, queued items).
+    let mut open: Vec<(usize, usize)> = vec![(0, 0); shards];
+    let mut next = 0usize;
+
+    let close = |shard_ns: &mut [u64], i: usize, open: &mut [(usize, usize)]| {
+        let (reqs, items) = open[i];
+        if reqs == 0 {
+            return;
+        }
+        shard_ns[i] += host.kernel_ns(0, items as u64 * 4, items as u64, 1);
+        open[i] = (0, 0);
+    };
+
+    for &n in &wl.sizes {
+        if has_device_lane && policy.route(n) == Route::Overflow {
+            overflow_ns +=
+                device.kernel_ns(0, n as u64 * 4, n as u64, spec.native_tpb)
+                    + spec.native_callback_ns;
+        } else {
+            let i = next;
+            next = (next + 1) % shards;
+            open[i].0 += 1;
+            open[i].1 += n;
+            if open[i].0 >= params.flush_requests || open[i].1 >= params.max_batch {
+                close(&mut shard_ns, i, &mut open);
+            }
+        }
+    }
+    for i in 0..shards {
+        close(&mut shard_ns, i, &mut open);
+    }
+
+    let busiest = shard_ns.iter().copied().max().unwrap_or(0).max(overflow_ns);
+    if busiest == 0 {
+        return 0.0;
+    }
+    wl.total() as f64 / busiest as f64 * 1e9
+}
+
+/// Scan the power-of-two threshold grid (plus "disabled") at fixed flush
+/// knobs; returns the best threshold and its throughput — the oracle the
+/// convergence gate compares the online tuner against.
+///
+/// The disabled policy anchors the scan, so ties keep "no overflow lane"
+/// rather than the smallest grid point — on CPU platforms, where the
+/// model (like the real pool's backend sets) has no device lane worth
+/// routing to, every threshold scores identically and the calibrated
+/// answer must be "disabled", not "overflow everything".
+pub fn best_fixed_threshold(
+    platform: PlatformId,
+    shards: usize,
+    base: &TuningParams,
+    wl: &ProbeWorkload,
+) -> (usize, f64) {
+    let disabled = TuningParams { threshold: usize::MAX, ..*base };
+    let mut best = (usize::MAX, virtual_pool_throughput(platform, shards, &disabled, wl));
+    for t in THRESHOLD_GRID.map(|e| 1usize << e) {
+        let params = TuningParams { threshold: t, ..*base };
+        let tput = virtual_pool_throughput(platform, shards, &params, wl);
+        if tput > best.1 {
+            best = (t, tput);
+        }
+    }
+    best
+}
+
+/// Startup calibration: short probe bursts over the virtual clock —
+/// threshold sweep, then flush sweep at the winning threshold — distilled
+/// into a persistable profile. A warm start (profile already on disk)
+/// skips this entirely.
+pub fn calibrate(platform: PlatformId, shards: usize) -> CalibrationProfile {
+    let wl = ProbeWorkload::serving_mix(0xCA11_B007, 192);
+    let base = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+    let (threshold, _) = best_fixed_threshold(platform, shards, &base, &wl);
+    let mut best = (base.flush_requests, 0.0f64);
+    for f in FLUSH_GRID.map(|e| 1usize << e) {
+        let params = TuningParams { threshold, flush_requests: f, ..base };
+        let tput = virtual_pool_throughput(platform, shards, &params, &wl);
+        if tput > best.1 {
+            best = (f, tput);
+        }
+    }
+    CalibrationProfile {
+        platform,
+        shards,
+        params: TuningParams { threshold, flush_requests: best.0, ..base },
+        mnum_per_s: best.1 / 1e6,
+        source: "probe".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic_and_log_uniform() {
+        let a = ProbeWorkload::serving_mix(7, 100);
+        let b = ProbeWorkload::serving_mix(7, 100);
+        assert_eq!(a.sizes, b.sizes);
+        assert!(a.sizes.iter().all(|&n| (16..(1 << 23)).contains(&n)));
+        // Both small and launch-saturating requests are present.
+        assert!(a.sizes.iter().any(|&n| n < 1024));
+        assert!(a.sizes.iter().any(|&n| n > 1 << 20));
+    }
+
+    #[test]
+    fn throughput_is_positive_and_threshold_sensitive() {
+        let wl = ProbeWorkload::serving_mix(1, 128);
+        // 2^20 splits the mix so both lanes carry real volume — the regime
+        // where splitting beats either endpoint decisively.
+        let base = TuningParams { threshold: 1 << 20, flush_requests: 16, max_batch: 1 << 20 };
+        let mid = virtual_pool_throughput(PlatformId::A100, 4, &base, &wl);
+        assert!(mid > 0.0);
+        // All-overflow (threshold ~0) and no-overflow (disabled) are both
+        // worse than a mid crossover on a discrete GPU: the valley exists.
+        let all = TuningParams { threshold: 1, ..base };
+        let none = TuningParams { threshold: usize::MAX, ..base };
+        let t_all = virtual_pool_throughput(PlatformId::A100, 4, &all, &wl);
+        let t_none = virtual_pool_throughput(PlatformId::A100, 4, &none, &wl);
+        assert!(mid > t_all, "mid={mid} all={t_all}");
+        assert!(mid > t_none, "mid={mid} none={t_none}");
+    }
+
+    #[test]
+    fn cpu_platforms_never_use_a_device_lane() {
+        let wl = ProbeWorkload::serving_mix(2, 64);
+        let base = TuningParams { threshold: 1, flush_requests: 8, max_batch: 1 << 20 };
+        // threshold=1 would overflow everything — but a CPU platform has
+        // no device lane, so the policy is inert.
+        let t = virtual_pool_throughput(PlatformId::Rome7742, 2, &base, &wl);
+        let none = TuningParams { threshold: usize::MAX, ..base };
+        let t_none = virtual_pool_throughput(PlatformId::Rome7742, 2, &none, &wl);
+        assert_eq!(t, t_none);
+    }
+
+    #[test]
+    fn cpu_calibration_disables_the_overflow_lane() {
+        // With routing inert, every threshold ties — the calibrated
+        // answer must be the disabled policy, not the smallest grid point
+        // (a real pool WOULD honor threshold=4 and serialize everything
+        // on one unbatched shard).
+        for p in [PlatformId::Rome7742, PlatformId::XeonGold5220] {
+            let profile = calibrate(p, 4);
+            assert_eq!(profile.params.threshold, usize::MAX, "{p:?}");
+            assert!(!profile.params.policy().is_enabled());
+        }
+    }
+
+    #[test]
+    fn calibration_finds_an_interior_crossover_on_gpus() {
+        for p in [PlatformId::A100, PlatformId::Vega56] {
+            let profile = calibrate(p, 4);
+            assert!(profile.params.threshold > 4, "{p:?}: {}", profile.params.threshold);
+            assert!(
+                profile.params.threshold < 1 << 30,
+                "{p:?}: {}",
+                profile.params.threshold
+            );
+            assert!(profile.mnum_per_s > 0.0);
+            assert_eq!(profile.source, "probe");
+        }
+    }
+
+    #[test]
+    fn best_fixed_threshold_beats_endpoints() {
+        let wl = ProbeWorkload::serving_mix(3, 128);
+        let base = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+        let (t, tput) = best_fixed_threshold(PlatformId::A100, 4, &base, &wl);
+        let lo = virtual_pool_throughput(
+            PlatformId::A100,
+            4,
+            &TuningParams { threshold: 4, ..base },
+            &wl,
+        );
+        assert!(tput >= lo);
+        assert!(t > 4);
+    }
+}

@@ -1,0 +1,230 @@
+//! Persisted calibration profiles (schema `portarng-profile-v1`).
+//!
+//! A [`CalibrationProfile`] is the distilled output of a probe run or an
+//! autotune session for one platform: the tuning knobs plus the
+//! throughput they achieved. Profiles are persisted as a single JSON
+//! document keyed by platform token ([`ProfileStore`]), so a restarted
+//! server warm-starts from the previous calibration instead of probing
+//! again (see README "Calibration profile format" and the checked-in
+//! `profiles/example_profile.json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::TuningParams;
+use crate::error::{Error, Result};
+use crate::jsonlite::Value;
+use crate::platform::PlatformId;
+
+/// Profile document schema identifier (bump on breaking changes).
+pub const PROFILE_SCHEMA: &str = "portarng-profile-v1";
+
+/// One platform's calibrated tuning parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationProfile {
+    /// Platform the profile was calibrated on.
+    pub platform: PlatformId,
+    /// Batched shard count the knobs were calibrated for — the optimum
+    /// moves with it, so a warm start must re-probe on a mismatch.
+    pub shards: usize,
+    /// The calibrated knobs (dispatch threshold + batcher limits).
+    pub params: TuningParams,
+    /// Delivered throughput at these knobs, millions of numbers per
+    /// second (virtual-clock for probe-sourced profiles).
+    pub mnum_per_s: f64,
+    /// Where the profile came from: `"probe"` (startup calibration) or
+    /// `"autotune"` (persisted from a live tuning session).
+    pub source: String,
+}
+
+impl CalibrationProfile {
+    /// Serialize the per-platform body (the store adds the platform key).
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("shards".into(), Value::Number(self.shards as f64));
+        m.insert("threshold".into(), Value::Number(self.params.threshold as f64));
+        m.insert(
+            "flush_requests".into(),
+            Value::Number(self.params.flush_requests as f64),
+        );
+        m.insert("max_batch".into(), Value::Number(self.params.max_batch as f64));
+        m.insert("mnum_per_s".into(), Value::Number(self.mnum_per_s));
+        m.insert("source".into(), Value::String(self.source.clone()));
+        Value::Object(m)
+    }
+
+    /// Parse the [`CalibrationProfile::to_json`] body back.
+    pub fn from_json(platform: PlatformId, v: &Value) -> Result<CalibrationProfile> {
+        let num = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| Error::Json(format!("profile missing `{key}`")))
+        };
+        Ok(CalibrationProfile {
+            platform,
+            shards: (num("shards")? as usize).max(1),
+            params: TuningParams {
+                threshold: num("threshold")? as usize,
+                flush_requests: (num("flush_requests")? as usize).max(1),
+                max_batch: (num("max_batch")? as usize).max(1),
+            },
+            mnum_per_s: num("mnum_per_s")?,
+            source: v
+                .get("source")
+                .and_then(Value::as_str)
+                .unwrap_or("probe")
+                .to_string(),
+        })
+    }
+}
+
+/// The on-disk profile document: one [`CalibrationProfile`] per platform.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProfileStore {
+    profiles: BTreeMap<String, CalibrationProfile>,
+}
+
+impl ProfileStore {
+    /// Empty store.
+    pub fn new() -> ProfileStore {
+        ProfileStore::default()
+    }
+
+    /// Parse a profile document.
+    pub fn from_json(v: &Value) -> Result<ProfileStore> {
+        match v.get("schema").and_then(Value::as_str) {
+            Some(PROFILE_SCHEMA) => {}
+            other => {
+                return Err(Error::Json(format!(
+                    "expected schema `{PROFILE_SCHEMA}`, got {other:?}"
+                )))
+            }
+        }
+        let mut profiles = BTreeMap::new();
+        let body = v
+            .get("profiles")
+            .and_then(Value::as_object)
+            .ok_or_else(|| Error::Json("profile document missing `profiles`".into()))?;
+        for (token, entry) in body {
+            let platform = PlatformId::parse(token)
+                .ok_or_else(|| Error::Json(format!("unknown platform `{token}`")))?;
+            profiles.insert(token.clone(), CalibrationProfile::from_json(platform, entry)?);
+        }
+        Ok(ProfileStore { profiles })
+    }
+
+    /// Serialize the full document.
+    pub fn to_json(&self) -> Value {
+        let mut body = BTreeMap::new();
+        for (token, profile) in &self.profiles {
+            body.insert(token.clone(), profile.to_json());
+        }
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Value::String(PROFILE_SCHEMA.into()));
+        m.insert("profiles".into(), Value::Object(body));
+        Value::Object(m)
+    }
+
+    /// Load from a JSON file. A missing file is an empty store (cold
+    /// start); a present-but-invalid file is an error (never silently
+    /// discard someone's calibration data).
+    pub fn load(path: &Path) -> Result<ProfileStore> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(ProfileStore::new())
+            }
+            Err(e) => return Err(Error::Io(e)),
+        };
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    /// Write the document to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json()).map_err(Error::Io)
+    }
+
+    /// The stored profile for `platform`, if any (warm start).
+    pub fn get(&self, platform: PlatformId) -> Option<&CalibrationProfile> {
+        self.profiles.get(platform.token())
+    }
+
+    /// Insert/replace a platform's profile.
+    pub fn put(&mut self, profile: CalibrationProfile) {
+        self.profiles.insert(profile.platform.token().to_string(), profile);
+    }
+
+    /// Stored profile count.
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// Whether the store has no profiles.
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CalibrationProfile {
+        CalibrationProfile {
+            platform: PlatformId::A100,
+            shards: 4,
+            params: TuningParams { threshold: 262_144, flush_requests: 32, max_batch: 1 << 20 },
+            mnum_per_s: 1234.5,
+            source: "probe".into(),
+        }
+    }
+
+    #[test]
+    fn store_round_trips_through_jsonlite() {
+        let mut store = ProfileStore::new();
+        store.put(sample());
+        let mut vega = sample();
+        vega.platform = PlatformId::Vega56;
+        vega.params.threshold = 65_536;
+        vega.source = "autotune".into();
+        store.put(vega);
+        let text = store.to_json().to_json();
+        let back = ProfileStore::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, store);
+        assert_eq!(back.get(PlatformId::A100).unwrap().params.threshold, 262_144);
+        assert_eq!(back.get(PlatformId::Vega56).unwrap().source, "autotune");
+        assert!(back.get(PlatformId::Uhd630).is_none());
+    }
+
+    #[test]
+    fn load_missing_file_is_cold_start() {
+        let store =
+            ProfileStore::load(Path::new("/nonexistent/portarng-profiles.json")).unwrap();
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let dir = std::env::temp_dir().join("portarng-profile-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+        let mut store = ProfileStore::new();
+        store.put(sample());
+        store.save(&path).unwrap();
+        let back = ProfileStore::load(&path).unwrap();
+        assert_eq!(back, store);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_schema_and_platform() {
+        assert!(ProfileStore::from_json(
+            &Value::parse(r#"{"schema":"nope","profiles":{}}"#).unwrap()
+        )
+        .is_err());
+        let bad = format!(
+            r#"{{"schema":"{PROFILE_SCHEMA}","profiles":{{"tpu":{{"threshold":1,"flush_requests":1,"max_batch":1,"mnum_per_s":1}}}}}}"#
+        );
+        assert!(ProfileStore::from_json(&Value::parse(&bad).unwrap()).is_err());
+    }
+}

@@ -26,6 +26,7 @@ use crate::rng::engines::EngineKind;
 use crate::rng::{generate_buffer, generate_usm, Distribution};
 use crate::runtime::PjrtRuntime;
 use crate::sycl::{AccessMode, Buffer, CommandClass, CommandRecord, Queue, SyclRuntimeProfile};
+use crate::telemetry::TelemetrySnapshot;
 use std::sync::Arc;
 
 /// Batches above this run through [`run_burner_virtual`] (same command
@@ -496,6 +497,9 @@ pub struct PoolBurnerReport {
     pub wall_ns: u64,
     /// Per-shard service counters.
     pub stats: PoolStats,
+    /// Full telemetry snapshot taken after the drain (what
+    /// `burner --pool --stats-json` serializes).
+    pub telemetry: TelemetrySnapshot,
     /// Order-stable checksum over every reply's bit pattern — equal
     /// checksums across shard counts certify bit-identical per-request
     /// streams.
@@ -573,6 +577,7 @@ pub fn run_burner_pooled(
     }
     let wall_ns = wall_start.elapsed().as_nanos() as u64;
 
+    let telemetry = pool.telemetry().snapshot();
     let stats = pool.shutdown()?;
     Ok(PoolBurnerReport {
         shards,
@@ -580,6 +585,7 @@ pub fn run_burner_pooled(
         numbers,
         wall_ns,
         stats,
+        telemetry,
         checksum,
     })
 }
@@ -664,6 +670,10 @@ mod tests {
         assert_eq!(one.numbers, 12_000);
         assert_eq!(four.numbers, 12_000);
         assert_eq!(four.stats.total().requests, 12);
+        // The telemetry snapshot agrees with the report's own accounting.
+        assert_eq!(four.telemetry.total_delivered(), 12_000);
+        assert_eq!(four.telemetry.total_requests(), 12);
+        assert_eq!(four.telemetry.total_launches(), four.stats.total().launches);
 
         // And the checksum is the dedicated-stream checksum.
         let mut want = vec![0f32; 12_000];

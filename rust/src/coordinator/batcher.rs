@@ -67,6 +67,15 @@ impl RequestBatcher {
         }
     }
 
+    /// Adopt new flush thresholds (autotuner retune). Applies from the
+    /// next `push`; an already-queued batch keeps its members — a shrink
+    /// below the current queue depth simply closes the batch on the next
+    /// push, so no request is ever dropped or reordered by a retune.
+    pub fn set_limits(&mut self, max_batch: usize, max_requests: usize) {
+        self.max_batch = max_batch.max(1);
+        self.max_requests = max_requests.max(1);
+    }
+
     /// Enqueue; returns a closed batch if thresholds tripped.
     pub fn push(&mut self, req: PendingRequest) -> Option<BatchOutcome> {
         self.queue.push(req);
@@ -180,5 +189,21 @@ mod tests {
     fn flush_on_empty_is_none() {
         let mut b = RequestBatcher::new(10, 10, 4);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn retuned_limits_apply_without_dropping_queued_requests() {
+        let mut b = RequestBatcher::new(usize::MAX, 100, 4);
+        assert!(b.push(req(0, 8)).is_none());
+        assert!(b.push(req(1, 8)).is_none());
+        // Shrink below the current queue depth: next push closes the batch
+        // with everything queued so far.
+        b.set_limits(usize::MAX, 2);
+        let out = b.push(req(2, 8)).unwrap();
+        assert_eq!(out.members.len(), 3);
+        assert_eq!(b.pending(), 0);
+        // Zero limits are clamped to 1, never a stuck batcher.
+        b.set_limits(0, 0);
+        assert!(b.push(req(3, 8)).is_some());
     }
 }

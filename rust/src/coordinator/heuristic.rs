@@ -5,6 +5,8 @@
 //! service-pool layer: small requests coalesce through the batched
 //! round-robin shards, large ones overflow to a dedicated unbatched lane.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
 use crate::burner::{run_burner_virtual, BurnerApi, BurnerConfig};
 use crate::platform::{PlatformId, PlatformKind};
 
@@ -51,13 +53,110 @@ impl DispatchPolicy {
         self.threshold != usize::MAX
     }
 
-    /// Route a request of `n` numbers.
+    /// Route a request of `n` numbers. A disabled policy never overflows
+    /// (including the `n == usize::MAX == threshold` corner); an enabled
+    /// `threshold == 0` policy sends everything to the overflow lane.
     pub fn route(&self, n: usize) -> Route {
-        if n >= self.threshold {
+        if self.is_enabled() && n >= self.threshold {
             Route::Overflow
         } else {
             Route::Batched
         }
+    }
+}
+
+/// Atomically swappable tuning parameters: the dispatch threshold plus the
+/// batcher's flush limits, i.e. every knob the autotuner turns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuningParams {
+    /// Requests with `n >= threshold` take the overflow lane
+    /// (`usize::MAX` disables the lane).
+    pub threshold: usize,
+    /// Batcher: close a batch at this many queued requests.
+    pub flush_requests: usize,
+    /// Batcher: close a batch at this many queued items.
+    pub max_batch: usize,
+}
+
+impl TuningParams {
+    /// Parameters carrying a fixed policy with the given batcher limits.
+    pub fn new(policy: DispatchPolicy, flush_requests: usize, max_batch: usize) -> Self {
+        TuningParams {
+            threshold: policy.threshold,
+            flush_requests: flush_requests.max(1),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// The dispatch policy these parameters encode.
+    pub fn policy(&self) -> DispatchPolicy {
+        DispatchPolicy { threshold: self.threshold }
+    }
+}
+
+/// Shared, lock-free handle to the pool's live [`TuningParams`] — the
+/// ArcSwap role filled with plain atomics, which works because every knob
+/// is word-sized: the dispatcher and workers `load` with relaxed ordering
+/// on the hot path (no locks, no RMW), and the autotuner publishes a
+/// retune with plain `store`s. Readers may observe a retune's knobs
+/// non-atomically with respect to each other; every combination of old
+/// and new knobs is a valid configuration, and the stream invariant never
+/// depends on routing (offsets are assigned before the route), so torn
+/// retunes are benign.
+#[derive(Debug)]
+pub struct TuningHandle {
+    threshold: AtomicUsize,
+    flush_requests: AtomicUsize,
+    max_batch: AtomicUsize,
+    generation: AtomicU64,
+}
+
+impl TuningHandle {
+    /// Handle initialized to `params` (generation 0).
+    pub fn new(params: TuningParams) -> TuningHandle {
+        TuningHandle {
+            threshold: AtomicUsize::new(params.threshold),
+            flush_requests: AtomicUsize::new(params.flush_requests.max(1)),
+            max_batch: AtomicUsize::new(params.max_batch.max(1)),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Current dispatch policy (hot path: one relaxed load).
+    pub fn policy(&self) -> DispatchPolicy {
+        DispatchPolicy { threshold: self.threshold.load(Ordering::Relaxed) }
+    }
+
+    /// Current batcher flush-request limit.
+    pub fn flush_requests(&self) -> usize {
+        self.flush_requests.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Current batcher item limit.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch.load(Ordering::Relaxed).max(1)
+    }
+
+    /// All current knobs.
+    pub fn params(&self) -> TuningParams {
+        TuningParams {
+            threshold: self.threshold.load(Ordering::Relaxed),
+            flush_requests: self.flush_requests(),
+            max_batch: self.max_batch(),
+        }
+    }
+
+    /// Publish a retune; returns the new generation number.
+    pub fn retune(&self, params: TuningParams) -> u64 {
+        self.threshold.store(params.threshold, Ordering::Relaxed);
+        self.flush_requests.store(params.flush_requests.max(1), Ordering::Relaxed);
+        self.max_batch.store(params.max_batch.max(1), Ordering::Relaxed);
+        self.generation.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Retunes published so far.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
     }
 }
 
@@ -151,10 +250,34 @@ mod tests {
         let p = DispatchPolicy::fixed(1000);
         assert!(p.is_enabled());
         assert_eq!(p.route(999), Route::Batched);
-        assert_eq!(p.route(1000), Route::Overflow);
+        assert_eq!(p.route(1000), Route::Overflow); // n == threshold overflows
         let off = DispatchPolicy::disabled();
         assert!(!off.is_enabled());
         assert_eq!(off.route(usize::MAX - 1), Route::Batched);
+        // Disabled means *never* overflow, even at n == usize::MAX.
+        assert_eq!(off.route(usize::MAX), Route::Batched);
+        // threshold == 0 sends everything to the overflow lane.
+        let all = DispatchPolicy::fixed(0);
+        assert_eq!(all.route(0), Route::Overflow);
+        assert_eq!(all.route(1), Route::Overflow);
+    }
+
+    #[test]
+    fn tuning_handle_swaps_without_locking_readers() {
+        let h = TuningHandle::new(TuningParams::new(DispatchPolicy::fixed(1000), 16, 1 << 20));
+        assert_eq!(h.policy().threshold, 1000);
+        assert_eq!(h.flush_requests(), 16);
+        assert_eq!(h.generation(), 0);
+        let g = h.retune(TuningParams { threshold: 5000, flush_requests: 8, max_batch: 1 << 16 });
+        assert_eq!(g, 1);
+        assert_eq!(h.policy().threshold, 5000);
+        assert_eq!(h.flush_requests(), 8);
+        assert_eq!(h.max_batch(), 1 << 16);
+        assert_eq!(h.params().policy().route(5000), Route::Overflow);
+        // Degenerate limits are clamped, never zero.
+        h.retune(TuningParams { threshold: 0, flush_requests: 0, max_batch: 0 });
+        assert_eq!(h.flush_requests(), 1);
+        assert_eq!(h.max_batch(), 1);
     }
 
     #[test]

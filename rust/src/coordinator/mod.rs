@@ -9,6 +9,12 @@
 //! worker shards ([`ServicePool`]) while preserving bit-exact stream
 //! semantics through counter-based partitioning (see the crate-level docs
 //! in `lib.rs` for the architecture diagram).
+//!
+//! The dispatch policy is live, not frozen: dispatcher and workers read
+//! it through the lock-free [`TuningHandle`], the pool's counters live in
+//! a [`telemetry`](crate::telemetry) registry, and the
+//! [`autotune`](crate::autotune) controller closes the measure→retune
+//! loop (DESIGN.md S11–S12).
 
 mod batcher;
 mod heuristic;
@@ -17,7 +23,7 @@ mod registry;
 mod service;
 
 pub use batcher::{BatchMember, BatchOutcome, PendingRequest, RequestBatcher};
-pub use heuristic::{BackendHeuristic, DispatchPolicy, Route};
+pub use heuristic::{BackendHeuristic, DispatchPolicy, Route, TuningHandle, TuningParams};
 pub use pool::{PoolConfig, PoolStats, ServicePool, ServiceRequest, ServiceStats};
 pub use registry::{BackendRegistry, ShardBackendSet};
 pub use service::RngService;

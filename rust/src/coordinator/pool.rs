@@ -6,10 +6,12 @@
 //! [`RequestBatcher`]. The dispatcher assigns every request an absolute
 //! offset in the *global* engine stream from an atomic cursor before
 //! routing it, so the stream a requester observes is a pure function of
-//! submission order — independent of shard count, batching decisions and
-//! worker interleaving. Workers realise the sub-streams with counter-based
-//! skip-ahead (`VendorGenerator::set_offset`, i.e. `Engine::skip_ahead`),
-//! O(1) for Philox.
+//! submission order — independent of shard count, batching decisions,
+//! worker interleaving **and any mid-stream policy retune** (the offset is
+//! assigned before the route is computed). Workers realise the
+//! sub-streams with counter-based skip-ahead
+//! (`VendorGenerator::set_offset`, i.e. `Engine::skip_ahead`), O(1) for
+//! Philox.
 //!
 //! Requests at or above the [`DispatchPolicy`] threshold bypass the
 //! batched shards and go to a dedicated unbatched overflow shard: a large
@@ -19,18 +21,29 @@
 //! lanes run on the host backend, the overflow lane on the device-native
 //! backend (§8: "host for small workloads, GPU for larger ones") — which
 //! is observationally free because every backend is bit-exact Philox.
+//!
+//! The policy is not frozen at construction: dispatcher and workers read
+//! it through a shared lock-free [`TuningHandle`] (DESIGN.md S12), so the
+//! [`autotune`](crate::autotune) controller can retune the threshold and
+//! the batcher flush limits under live load without stalling the request
+//! path. All service counters live in a [`TelemetryRegistry`]
+//! (DESIGN.md S11) shared between workers and the pool handle — which is
+//! also why shutdown can never drop in-flight counts: the registry
+//! outlives the workers' ack channels.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::platform::PlatformId;
 use crate::rng::engines::EngineKind;
 use crate::rng::Distribution;
+use crate::telemetry::{Lane, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot};
 
 use super::batcher::{BatchOutcome, PendingRequest, RequestBatcher};
-use super::heuristic::{DispatchPolicy, Route};
+use super::heuristic::{DispatchPolicy, Route, TuningHandle, TuningParams};
 use super::registry::BackendRegistry;
 
 /// A generate request, as delivered to a shard worker.
@@ -48,10 +61,12 @@ pub struct ServiceRequest {
 enum Msg {
     Generate(ServiceRequest),
     Flush,
-    Shutdown(mpsc::Sender<ServiceStats>),
+    Shutdown(mpsc::Sender<()>),
 }
 
-/// Aggregate per-shard (and pool-total) service counters.
+/// Aggregate per-shard (and pool-total) service counters — a plain view
+/// derived from the pool's [`TelemetryRegistry`] (the authoritative,
+/// always-live store; this struct survives as the stable summary type).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     /// Requests served.
@@ -89,6 +104,21 @@ impl PoolStats {
             .copied()
             .fold(ServiceStats::default(), ServiceStats::merged)
     }
+
+    /// The counter view of a telemetry snapshot.
+    pub fn from_snapshot(snap: &TelemetrySnapshot) -> PoolStats {
+        PoolStats {
+            shards: snap
+                .shards
+                .iter()
+                .map(|s| ServiceStats {
+                    requests: s.requests,
+                    launches: s.launches,
+                    numbers: s.numbers,
+                })
+                .collect(),
+        }
+    }
 }
 
 /// Pool construction parameters.
@@ -107,11 +137,15 @@ pub struct PoolConfig {
     /// Size-aware routing; an enabled policy adds an unbatched overflow
     /// shard for requests at/above its threshold.
     pub policy: DispatchPolicy,
+    /// Spawn the overflow lane even when `policy` starts disabled, so a
+    /// later [`ServicePool::retune`] can enable size-aware routing without
+    /// respawning the pool (the autotuner sets this).
+    pub adaptive: bool,
 }
 
 impl PoolConfig {
     /// Defaults: 1 MiB-numbers batches, 16 requests per batch, no
-    /// overflow lane.
+    /// overflow lane, no adaptive headroom.
     pub fn new(platform: PlatformId, seed: u64, shards: usize) -> PoolConfig {
         PoolConfig {
             platform,
@@ -120,6 +154,7 @@ impl PoolConfig {
             max_batch: 1 << 20,
             max_requests: 16,
             policy: DispatchPolicy::disabled(),
+            adaptive: false,
         }
     }
 }
@@ -136,12 +171,14 @@ impl ShardHandle {
     /// host backend, the overflow lane on the device-native backend — the
     /// paper's §8 "host for small workloads, GPU for larger ones" applied
     /// at the service layer. Both halves are bit-exact Philox, so the
-    /// stream invariant is unaffected by the lane choice.
+    /// stream invariant is unaffected by the lane choice. Counters go to
+    /// `telemetry` (shared with the pool); batcher limits are re-read from
+    /// `tuning` on every request so retunes apply without a round-trip.
     fn spawn(
         platform: PlatformId,
         seed: u64,
-        max_batch: usize,
-        max_requests: usize,
+        tuning: Arc<TuningHandle>,
+        telemetry: Arc<ShardTelemetry>,
         lane: Route,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<Msg>();
@@ -151,6 +188,7 @@ impl ShardHandle {
                 Route::Batched => set.host,
                 Route::Overflow => set.native,
             };
+            telemetry.set_backend(backend.name());
             let mut gen = match backend.create_generator(EngineKind::Philox4x32x10, seed) {
                 Ok(g) => g,
                 Err(e) => {
@@ -158,18 +196,18 @@ impl ShardHandle {
                     // every request with a coordinator error. Requests are
                     // still counted so submitted-vs-served reconciles.
                     let why = e.to_string();
-                    let mut stats = ServiceStats::default();
                     while let Ok(msg) = rx.recv() {
                         match msg {
                             Msg::Generate(req) => {
-                                stats.requests += 1;
+                                telemetry.record_request(req.n);
+                                telemetry.record_failure();
                                 let _ = req.reply.send(Err(Error::Coordinator(format!(
                                     "shard backend unavailable: {why}"
                                 ))));
                             }
                             Msg::Flush => {}
                             Msg::Shutdown(ack) => {
-                                let _ = ack.send(stats);
+                                let _ = ack.send(());
                                 break;
                             }
                         }
@@ -177,34 +215,43 @@ impl ShardHandle {
                     return;
                 }
             };
-            let mut batcher = RequestBatcher::new(max_batch, max_requests, 4);
+            // The overflow lane launches every request immediately; batched
+            // lanes track the live tuning limits.
+            let fixed_flush = matches!(lane, Route::Overflow).then_some(1);
+            let mut batcher = RequestBatcher::new(
+                tuning.max_batch(),
+                fixed_flush.unwrap_or_else(|| tuning.flush_requests()),
+                4,
+            );
             let mut waiting: Vec<ServiceRequest> = Vec::new();
-            let mut stats = ServiceStats::default();
 
             while let Ok(msg) = rx.recv() {
                 match msg {
                     Msg::Generate(req) => {
+                        if fixed_flush.is_none() {
+                            batcher.set_limits(tuning.max_batch(), tuning.flush_requests());
+                        }
                         let pending = PendingRequest {
                             id: waiting.len() as u64,
                             n: req.n,
                             stream_offset: req.offset,
                         };
+                        telemetry.record_request(req.n);
                         waiting.push(req);
-                        stats.requests += 1;
                         if let Some(batch) = batcher.push(pending) {
-                            launch(gen.as_mut(), &batch, &mut waiting, &mut stats);
+                            launch(gen.as_mut(), &batch, &mut waiting, &telemetry);
                         }
                     }
                     Msg::Flush => {
                         if let Some(batch) = batcher.flush() {
-                            launch(gen.as_mut(), &batch, &mut waiting, &mut stats);
+                            launch(gen.as_mut(), &batch, &mut waiting, &telemetry);
                         }
                     }
                     Msg::Shutdown(ack) => {
                         if let Some(batch) = batcher.flush() {
-                            launch(gen.as_mut(), &batch, &mut waiting, &mut stats);
+                            launch(gen.as_mut(), &batch, &mut waiting, &telemetry);
                         }
-                        let _ = ack.send(stats);
+                        let _ = ack.send(());
                         break;
                     }
                 }
@@ -213,28 +260,23 @@ impl ShardHandle {
         ShardHandle { tx, worker: Some(worker) }
     }
 
-    fn shutdown(&mut self) -> Result<ServiceStats> {
+    /// Drain and stop the worker. Counter-safe by construction: stats live
+    /// in the shared telemetry registry, so a worker that died (closed ack
+    /// channel) loses no counts — we just join and move on.
+    fn shutdown(&mut self) {
         let (ack, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Shutdown(ack))
-            .map_err(|_| Error::Coordinator("shard worker gone".into()))?;
-        let stats = rx
-            .recv()
-            .map_err(|_| Error::Coordinator("shard worker dropped ack".into()))?;
+        if self.tx.send(Msg::Shutdown(ack)).is_ok() {
+            let _ = rx.recv();
+        }
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        Ok(stats)
     }
 }
 
 impl Drop for ShardHandle {
     fn drop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let (ack, _rx) = mpsc::channel();
-            let _ = self.tx.send(Msg::Shutdown(ack));
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -248,28 +290,44 @@ fn launch(
     gen: &mut dyn crate::backends::VendorGenerator,
     batch: &BatchOutcome,
     waiting: &mut Vec<ServiceRequest>,
-    stats: &mut ServiceStats,
+    telemetry: &ShardTelemetry,
 ) {
-    stats.launches += 1;
-    stats.numbers += batch.launch_n as u64;
+    let wall_start = Instant::now();
     let canonical = Distribution::uniform(0.0, 1.0);
+    let mut payload = 0u64;
+    let mut results: Vec<Result<Vec<f32>>> = Vec::with_capacity(batch.members.len());
     for m in &batch.members {
         let req = &waiting[m.id as usize];
-        let mut payload = vec![0f32; m.n];
+        let mut out = vec![0f32; m.n];
         let generated = gen
             .set_offset(m.stream_offset)
-            .and_then(|()| gen.generate_canonical(&canonical, &mut payload));
-        let reply = match generated {
+            .and_then(|()| gen.generate_canonical(&canonical, &mut out));
+        results.push(match generated {
             Ok(()) => {
+                payload += m.n as u64;
                 let (a, b) = req.range;
                 if a != 0.0 || b != 1.0 {
-                    crate::rng::range_transform::range_transform_inplace(&mut payload, a, b);
+                    crate::rng::range_transform::range_transform_inplace(&mut out, a, b);
                 }
-                Ok(payload)
+                Ok(out)
             }
-            Err(e) => Err(e),
-        };
-        let _ = req.reply.send(reply);
+            Err(e) => {
+                telemetry.record_failure();
+                Err(e)
+            }
+        });
+    }
+    // Record BEFORE sending any reply: a requester that has its numbers
+    // must be able to see this launch in a snapshot (otherwise
+    // drain-then-snapshot callers race the last batch's counters).
+    telemetry.record_launch(
+        batch.members.len(),
+        payload,
+        batch.launch_n as u64,
+        wall_start.elapsed().as_nanos() as u64,
+    );
+    for (m, reply) in batch.members.iter().zip(results) {
+        let _ = waiting[m.id as usize].reply.send(reply);
     }
     waiting.clear();
 }
@@ -279,44 +337,50 @@ pub struct ServicePool {
     shards: Vec<ShardHandle>,
     n_batched: usize,
     overflow: Option<usize>,
-    policy: DispatchPolicy,
+    tuning: Arc<TuningHandle>,
+    telemetry: Arc<TelemetryRegistry>,
     next: AtomicUsize,
     cursor: AtomicU64,
 }
 
 impl ServicePool {
     /// Spawn the pool: `cfg.shards` batched round-robin workers plus (when
-    /// the policy is enabled) one unbatched overflow worker.
+    /// the policy is enabled or `cfg.adaptive` is set) one unbatched
+    /// overflow worker.
     pub fn spawn(cfg: PoolConfig) -> ServicePool {
         let n_batched = cfg.shards.max(1);
-        let mut shards = Vec::with_capacity(n_batched + 1);
-        for _ in 0..n_batched {
+        let want_overflow = cfg.policy.is_enabled() || cfg.adaptive;
+        let mut lanes = vec![Lane::Batched; n_batched];
+        if want_overflow {
+            lanes.push(Lane::Overflow);
+        }
+        let telemetry = TelemetryRegistry::new(cfg.platform, &lanes);
+        let tuning = Arc::new(TuningHandle::new(TuningParams::new(
+            cfg.policy,
+            cfg.max_requests,
+            cfg.max_batch,
+        )));
+        let mut shards = Vec::with_capacity(lanes.len());
+        for (i, &lane) in lanes.iter().enumerate() {
+            let route = match lane {
+                Lane::Batched => Route::Batched,
+                Lane::Overflow => Route::Overflow,
+            };
             shards.push(ShardHandle::spawn(
                 cfg.platform,
                 cfg.seed,
-                cfg.max_batch,
-                cfg.max_requests,
-                Route::Batched,
+                tuning.clone(),
+                telemetry.shard(i),
+                route,
             ));
         }
-        let overflow = if cfg.policy.is_enabled() {
-            // max_requests = 1: every overflow request launches immediately.
-            shards.push(ShardHandle::spawn(
-                cfg.platform,
-                cfg.seed,
-                cfg.max_batch,
-                1,
-                Route::Overflow,
-            ));
-            Some(shards.len() - 1)
-        } else {
-            None
-        };
+        let overflow = want_overflow.then(|| shards.len() - 1);
         ServicePool {
             shards,
             n_batched,
             overflow,
-            policy: cfg.policy,
+            tuning,
+            telemetry,
             next: AtomicUsize::new(0),
             cursor: AtomicU64::new(0),
         }
@@ -332,15 +396,42 @@ impl ServicePool {
         self.overflow.is_some()
     }
 
+    /// The pool's metrics registry (share freely; snapshots are cheap).
+    pub fn telemetry(&self) -> &Arc<TelemetryRegistry> {
+        &self.telemetry
+    }
+
+    /// The live tuning handle the dispatcher and workers read.
+    pub fn tuning(&self) -> &Arc<TuningHandle> {
+        &self.tuning
+    }
+
+    /// Publish new tuning parameters (threshold + batcher limits). Takes
+    /// effect for subsequent requests without blocking in-flight ones;
+    /// per-request streams are unaffected (offsets are assigned before
+    /// routing). Enabling a threshold on a pool spawned without an
+    /// overflow lane (`adaptive: false`) is a no-op routing-wise: requests
+    /// keep round-robining, which is safe but unpartitioned.
+    pub fn retune(&self, params: TuningParams) -> u64 {
+        self.telemetry.record_retune();
+        self.tuning.retune(params)
+    }
+
     /// Submit a request; returns the receiver for the reply. The reply is
     /// exactly the sub-stream a dedicated engine skipped to this request's
     /// global offset would produce.
     pub fn generate(&self, n: usize, range: (f32, f32)) -> mpsc::Receiver<Result<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
         let offset = self.cursor.fetch_add(n as u64, Ordering::Relaxed);
-        let idx = match (self.overflow, self.policy.route(n)) {
-            (Some(ov), Route::Overflow) => ov,
-            _ => self.next.fetch_add(1, Ordering::Relaxed) % self.n_batched,
+        let idx = match (self.overflow, self.tuning.policy().route(n)) {
+            (Some(ov), Route::Overflow) => {
+                self.telemetry.record_dispatch(true);
+                ov
+            }
+            _ => {
+                self.telemetry.record_dispatch(false);
+                self.next.fetch_add(1, Ordering::Relaxed) % self.n_batched
+            }
         };
         let _ = self.shards[idx]
             .tx
@@ -355,13 +446,19 @@ impl ServicePool {
         }
     }
 
-    /// Stop all workers, returning per-shard counters.
+    /// Live counter view (no shutdown required).
+    pub fn stats_now(&self) -> PoolStats {
+        PoolStats::from_snapshot(&self.telemetry.snapshot())
+    }
+
+    /// Stop all workers, returning per-shard counters. Counts come from
+    /// the shared telemetry registry, so a shard whose ack channel closed
+    /// early (worker panic) still reports everything it recorded.
     pub fn shutdown(mut self) -> Result<PoolStats> {
-        let mut per_shard = Vec::with_capacity(self.shards.len());
         for shard in &mut self.shards {
-            per_shard.push(shard.shutdown()?);
+            shard.shutdown();
         }
-        Ok(PoolStats { shards: per_shard })
+        Ok(self.stats_now())
     }
 }
 
@@ -468,5 +565,81 @@ mod tests {
         crate::rng::range_transform::range_transform_inplace(&mut want, 2.0, 4.0);
         assert_eq!(got, want);
         pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn telemetry_labels_lanes_and_backends() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 5, 1);
+        cfg.policy = DispatchPolicy::fixed(1000);
+        let pool = ServicePool::spawn(cfg);
+        let small = pool.generate(10, (0.0, 1.0));
+        let large = pool.generate(2000, (0.0, 1.0));
+        large.recv().unwrap().unwrap();
+        pool.flush();
+        small.recv().unwrap().unwrap();
+
+        let snap = pool.telemetry().snapshot();
+        assert_eq!(snap.platform, PlatformId::A100);
+        assert_eq!(snap.dispatched_batched, 1);
+        assert_eq!(snap.dispatched_overflow, 1);
+        assert_eq!(snap.shards.len(), 2);
+        assert_eq!(snap.shards[0].lane, Lane::Batched);
+        assert_eq!(snap.shards[1].lane, Lane::Overflow);
+        // Batched lane generates on the host backend, overflow on the
+        // device-native one (workers report in at spawn).
+        assert_eq!(snap.shards[0].backend, "oneMKL-x86");
+        assert_eq!(snap.shards[1].backend, "cuRAND");
+        assert_eq!(snap.shards[0].delivered, 10);
+        assert_eq!(snap.shards[1].delivered, 2000);
+        assert_eq!(snap.shards[1].launch_ns.count, 1);
+        assert_eq!(snap.total_failures(), 0);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn adaptive_pool_retunes_overflow_on_and_off() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 13, 2);
+        cfg.adaptive = true; // lane exists even though policy starts disabled
+        let pool = ServicePool::spawn(cfg);
+        assert!(pool.has_overflow_lane());
+        assert!(!pool.tuning().policy().is_enabled());
+
+        // Everything batches while disabled.
+        let a = pool.generate(5000, (0.0, 1.0));
+        // Enable mid-stream: subsequent large requests overflow.
+        pool.retune(TuningParams { threshold: 1000, flush_requests: 16, max_batch: 1 << 20 });
+        let b = pool.generate(5000, (0.0, 1.0));
+        let got_b = b.recv().unwrap().unwrap(); // immediate: unbatched lane
+        pool.flush();
+        let got_a = a.recv().unwrap().unwrap();
+
+        // Offsets follow submission order regardless of the retune.
+        assert_eq!(got_a, dedicated(13, 0, 5000));
+        assert_eq!(got_b, dedicated(13, 5000, 5000));
+
+        let snap = pool.telemetry().snapshot();
+        assert_eq!(snap.retunes, 1);
+        assert_eq!(snap.dispatched_batched, 1);
+        assert_eq!(snap.dispatched_overflow, 1);
+        assert_eq!(pool.tuning().generation(), 1);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_survive_shutdown_and_live_view_matches() {
+        let pool = ServicePool::spawn(PoolConfig::new(PlatformId::Vega56, 2, 2));
+        let rxs: Vec<_> = (0..6).map(|_| pool.generate(50, (0.0, 1.0))).collect();
+        pool.flush();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let live = pool.stats_now();
+        assert_eq!(live.total().requests, 6);
+        let keep = pool.telemetry().clone();
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.total().requests, 6);
+        // The registry outlives the pool: counts are never dropped with
+        // the workers' channels.
+        assert_eq!(keep.snapshot().total_requests(), 6);
     }
 }

@@ -51,16 +51,22 @@ impl BackendRegistry {
         Ok(Box::new(PjrtBackend::new(rt)?))
     }
 
-    /// The host-fallback backend paired with a device platform (for the
-    /// heuristic selector): the device's host CPU.
-    pub fn host_for(&self, platform: PlatformId) -> Box<dyn RngBackend> {
-        let host = match platform {
+    /// The host CPU paired with a device platform (Table 1's machine
+    /// pairings) — the platform the batched lanes and the heuristic's
+    /// host side run on. CPU platforms are their own host.
+    pub fn host_platform(platform: PlatformId) -> PlatformId {
+        match platform {
             PlatformId::A100 => PlatformId::Rome7742, // DGX host
             PlatformId::Vega56 => PlatformId::XeonGold5220,
             PlatformId::Uhd630 => PlatformId::CoreI7_10875H,
             p => p,
-        };
-        Box::new(MklCpuBackend::new(host))
+        }
+    }
+
+    /// The host-fallback backend paired with a device platform (for the
+    /// heuristic selector): the device's host CPU.
+    pub fn host_for(&self, platform: PlatformId) -> Box<dyn RngBackend> {
+        Box::new(MklCpuBackend::new(Self::host_platform(platform)))
     }
 
     /// The backend set one pool shard owns: the platform's native backend

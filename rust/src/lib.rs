@@ -3,7 +3,9 @@
 //! Reproduction of Pascuzzi & Goli, *"Achieving near native runtime
 //! performance and cross-platform performance portability for random number
 //! generation through SYCL interoperability"* (2021), rebuilt on a
-//! Rust + JAX + Pallas three-layer stack (see `DESIGN.md`).
+//! Rust + JAX + Pallas three-layer stack (see `DESIGN.md` at the
+//! repository root for the layer map, substitution table and subsystem
+//! sections referenced throughout these docs).
 //!
 //! The crate is organised exactly along the paper's stack:
 //!
@@ -32,6 +34,13 @@
 //! * [`coordinator`] — backend registry/dispatch, request batcher, the
 //!   §8 "heuristic backend selection" extension, and the sharded RNG
 //!   service pool (below).
+//! * [`telemetry`] — lock-free metrics registry: atomic counters plus
+//!   log₂-bucketed latency/occupancy histograms per shard / lane /
+//!   backend, with cheap `jsonlite` snapshots (DESIGN.md S11).
+//! * [`autotune`] — the adaptive half of the §8 heuristic: startup
+//!   calibration probes, persisted calibration profiles, and the online
+//!   controller that retunes the pool from telemetry (DESIGN.md S12,
+//!   below).
 //! * [`repro`] — drivers that regenerate every table and figure.
 //! * [`benchkit`] / [`testkit`] / [`jsonlite`] / [`xla`] — in-tree
 //!   substrates for the criterion / proptest / serde_json / xla_extension
@@ -70,7 +79,37 @@
 //! workloads, GPU for larger ones" heuristic at the service layer.
 //! [`coordinator::RngService`] remains as the single-shard facade over the
 //! same machinery.
+//!
+//! ## The telemetry → autotune loop
+//!
+//! The dispatch threshold is measured, not guessed. Every shard records
+//! into a shared lock-free [`telemetry::TelemetryRegistry`] (relaxed
+//! atomics + log₂ histograms — nothing on the request path locks or
+//! allocates), and the [`autotune`] controller closes the loop:
+//!
+//! ```text
+//!   calibrate (startup probe bursts        ProfileStore (JSON, keyed by
+//!   over the virtual clock)  ────────────▶ platform; warm starts skip
+//!        │                                 probing)
+//!        ▼                                      │ load
+//!   TuningHandle (lock-free knobs) ◀────────────┘
+//!        ▲            │ relaxed loads
+//!        │ retune     ▼
+//!   PoolAutoTuner   ServicePool dispatcher + shard batchers
+//!        ▲            │ relaxed stores
+//!        │ window     ▼
+//!        └── TelemetrySnapshot deltas (delivered-throughput objective)
+//! ```
+//!
+//! Retunes preserve the stream invariant by construction: global offsets
+//! are assigned *before* routing, so any interleaving of retunes and
+//! requests yields bit-identical per-request streams. The
+//! `autotune_convergence` bench gates the loop (≥ 90% of the best fixed
+//! threshold from a mis-specified start); `portarng serve --autotune`,
+//! `portarng calibrate` and `portarng burner --stats-json` expose it on
+//! the CLI.
 
+pub mod autotune;
 pub mod backends;
 pub mod benchkit;
 pub mod burner;
@@ -84,6 +123,7 @@ pub mod repro;
 pub mod rng;
 pub mod runtime;
 pub mod sycl;
+pub mod telemetry;
 pub mod testkit;
 pub mod xla;
 

@@ -8,19 +8,24 @@
 //! portarng fastcalosim --platform a100 --api sycl --workload single-e [--events N]
 //! portarng repro --experiment fig3 [--quick] [--outdir results]
 //! portarng serve --batch-max 1048576 --demo-requests 32
+//! portarng serve --autotune [--profile profiles.json]   # adaptive dispatch
+//! portarng calibrate --platform a100 [--profile profiles.json]
 //! portarng check-artifacts                   # PJRT round-trip smoke test
 //! ```
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::process::ExitCode;
 use std::sync::Arc;
 
+use portarng::autotune::{calibrate, PoolAutoTuner, ProfileStore};
 use portarng::burner::{run_burner_auto, run_burner_with_runtime, BurnerApi, BurnerConfig};
 use portarng::coordinator::{DispatchPolicy, PoolConfig, ServicePool};
 use portarng::fastcalosim::{run_fastcalosim, FcsApi, Workload};
 use portarng::platform::PlatformId;
 use portarng::repro::ExperimentId;
 use portarng::runtime::PjrtRuntime;
+use portarng::testkit::Gen;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +40,7 @@ fn main() -> ExitCode {
         "fastcalosim" => cmd_fastcalosim(&opts),
         "repro" => cmd_repro(&opts),
         "serve" => cmd_serve(&opts),
+        "calibrate" => cmd_calibrate(&opts),
         "check-artifacts" => cmd_check_artifacts(),
         "--help" | "-h" | "help" => {
             println!("{}", USAGE);
@@ -58,12 +64,16 @@ USAGE:
   portarng burner --platform <p> --api <native|sycl-buffer|sycl-usm|pjrt>
                   --batch <n> [--iters <n>] [--range a,b]
                   [--distr <name> --params a,b,..] [--pool <shards>]
+                  [--stats-json <path>]        (pooled mode only)
   portarng fastcalosim --platform <p> --api <native|sycl>
                   --workload <single-e|ttbar> [--events <n>]
   portarng repro --experiment <table1|fig2|fig3|fig4|table2|fig5|ablation-heuristic|all>
                   [--quick] [--outdir <dir>]
-  portarng serve [--batch-max <n>] [--demo-requests <n>] [--shards <n>]
-                 [--overflow-at <n>]
+  portarng serve [--platform <p>] [--batch-max <n>] [--demo-requests <n>]
+                 [--shards <n>] [--overflow-at <n>]
+  portarng serve --autotune [--platform <p>] [--shards <n>] [--windows <n>]
+                 [--demo-requests <n>] [--profile <path>] [--save-profile]
+  portarng calibrate --platform <p> [--shards <n>] [--profile <path>]
   portarng check-artifacts
 
 Distributions: uniform a b | gaussian mean stddev | lognormal m s |
@@ -130,6 +140,12 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
         cfg.distr = portarng::rng::parse_distribution(name, &params)?;
     }
 
+    // --stats-json serializes the pool telemetry snapshot, so it only
+    // means something in pooled mode: reject instead of silently ignoring.
+    if opts.contains_key("stats-json") && !opts.contains_key("pool") {
+        return Err("--stats-json requires --pool <shards> (it dumps pool telemetry)".into());
+    }
+
     // Pooled mode: drive the workload through the sharded service pool.
     if let Some(shards) = opts.get("pool") {
         let shards: usize = shards.parse()?;
@@ -146,6 +162,15 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
             r.stats.total().launches,
             r.checksum
         );
+        if let Some(path) = opts.get("stats-json") {
+            let json = r.telemetry.to_json().to_json();
+            // Guarantee the documented round-trip property before writing.
+            portarng::telemetry::TelemetrySnapshot::from_json(
+                &portarng::jsonlite::Value::parse(&json)?,
+            )?;
+            std::fs::write(path, &json)?;
+            println!("[wrote telemetry snapshot to {path}]");
+        }
         return Ok(());
     }
 
@@ -238,15 +263,51 @@ fn cmd_repro(opts: &HashMap<String, String>) -> CliResult {
 }
 
 fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
-    let batch_max: usize =
-        opts.get("batch-max").map(|s| s.parse()).transpose()?.unwrap_or(1 << 20);
+    let autotune = opts.contains_key("autotune");
+    // Conflict validation, same policy as the --range/--distr pair above:
+    // errors instead of silent precedence.
+    if autotune && opts.contains_key("overflow-at") {
+        return Err(
+            "--autotune and --overflow-at conflict: the autotuner owns the threshold \
+             (drop --overflow-at, or drop --autotune for a fixed threshold)"
+                .into(),
+        );
+    }
+    if autotune && opts.contains_key("batch-max") {
+        return Err(
+            "--autotune and --batch-max conflict: batcher limits come from the \
+             calibration profile under autotuning"
+                .into(),
+        );
+    }
+    if opts.contains_key("profile") && !autotune {
+        return Err("--profile requires --autotune (profiles feed the autotuner)".into());
+    }
+    if opts.contains_key("windows") && !autotune {
+        return Err("--windows requires --autotune (it counts observation windows)".into());
+    }
+    if opts.contains_key("save-profile") && !opts.contains_key("profile") {
+        return Err("--save-profile requires --profile <path> (nowhere to save)".into());
+    }
+
+    let platform = match opts.get("platform") {
+        Some(p) => PlatformId::parse(p).ok_or("unknown platform; see `portarng platforms`")?,
+        None => PlatformId::A100,
+    };
     let n_req: usize =
         opts.get("demo-requests").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let shards: usize = opts.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+    if autotune {
+        return serve_autotuned(opts, platform, shards, n_req);
+    }
+
+    let batch_max: usize =
+        opts.get("batch-max").map(|s| s.parse()).transpose()?.unwrap_or(1 << 20);
     let overflow_at: Option<usize> =
         opts.get("overflow-at").map(|s| s.parse()).transpose()?;
 
-    let mut cfg = PoolConfig::new(PlatformId::A100, 0x5EED, shards);
+    let mut cfg = PoolConfig::new(platform, 0x5EED, shards);
     cfg.max_batch = batch_max;
     if let Some(t) = overflow_at {
         cfg.policy = DispatchPolicy::fixed(t);
@@ -275,6 +336,136 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
             "  shard {i}: {} requests, {} launches, {} numbers",
             s.requests, s.launches, s.numbers
         );
+    }
+    Ok(())
+}
+
+/// `serve --autotune`: calibrate (or warm-start from a profile), spawn an
+/// adaptive pool, and drive demo traffic in observation windows with the
+/// online tuner closing the loop after each one.
+fn serve_autotuned(
+    opts: &HashMap<String, String>,
+    platform: PlatformId,
+    shards: usize,
+    n_req: usize,
+) -> CliResult {
+    let windows: usize = opts.get("windows").map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let profile_path = opts.get("profile").map(Path::new);
+
+    let mut store = match profile_path {
+        Some(p) => ProfileStore::load(p)?,
+        None => ProfileStore::new(),
+    };
+    let (profile, warm) = match store.get(platform) {
+        // A stored profile only warm-starts a pool with the shard count
+        // it was calibrated for — the optimum moves with the lane count.
+        Some(p) if p.shards == shards => (p.clone(), true),
+        Some(p) => {
+            println!(
+                "stored {} profile was calibrated for {} shard(s), serving with {}: re-probing",
+                platform.token(),
+                p.shards,
+                shards
+            );
+            (calibrate(platform, shards), false)
+        }
+        None => (calibrate(platform, shards), false),
+    };
+    println!(
+        "{} calibration for {}: threshold {}, flush {}, {:.1} M numbers/s ({})",
+        if warm { "warm-start" } else { "probe" },
+        platform.token(),
+        profile.params.threshold,
+        profile.params.flush_requests,
+        profile.mnum_per_s,
+        profile.source
+    );
+
+    let mut cfg = PoolConfig::new(platform, 0x5EED, shards);
+    cfg.policy = profile.params.policy();
+    cfg.max_requests = profile.params.flush_requests;
+    cfg.max_batch = profile.params.max_batch;
+    cfg.adaptive = true;
+    let pool = ServicePool::spawn(cfg);
+    let mut tuner = PoolAutoTuner::new(&pool);
+
+    for window in 0..windows {
+        // Deterministic mixed-size demo traffic (log-uniform 2^6..2^14).
+        let mut g = Gen::new(0xD3_0000 + window as u64);
+        let receivers: Vec<_> = (0..n_req.max(1))
+            .map(|_| {
+                let base = 1usize << g.usize_in(6, 13);
+                pool.generate(base + g.usize_in(0, base - 1), (0.0, 1.0))
+            })
+            .collect();
+        pool.flush();
+        for rx in receivers {
+            rx.recv()??;
+        }
+        let params = tuner.step(&pool);
+        let (_, best_tput) = tuner.tuner().best();
+        println!(
+            "window {window:>2}: threshold {:>9}, flush {:>3} | best so far {:.1} M/s{}",
+            params.threshold,
+            params.flush_requests,
+            best_tput / 1e6,
+            if tuner.tuner().converged() { " [holding optimum]" } else { "" }
+        );
+    }
+
+    let snap = pool.telemetry().snapshot();
+    println!(
+        "served {} requests / {} numbers, {} launches, {} retunes, {} overflow-routed",
+        snap.total_requests(),
+        snap.total_delivered(),
+        snap.total_launches(),
+        snap.retunes,
+        snap.dispatched_overflow
+    );
+
+    // Persisting knobs fit to this serve session's traffic is opt-in:
+    // it REPLACES the platform's stored calibration, which may have come
+    // from a probe or a production run.
+    if opts.contains_key("save-profile") {
+        if let Some(path) = profile_path {
+            let (best, best_tput) = tuner.tuner().best();
+            store.put(portarng::autotune::CalibrationProfile {
+                platform,
+                shards,
+                params: best,
+                mnum_per_s: best_tput / 1e6,
+                source: "autotune".into(),
+            });
+            store.save(path)?;
+            println!("[wrote calibration profile to {}]", path.display());
+        }
+    }
+    pool.shutdown()?;
+    Ok(())
+}
+
+fn cmd_calibrate(opts: &HashMap<String, String>) -> CliResult {
+    let platform = PlatformId::parse(need(opts, "platform")?)
+        .ok_or("unknown platform; see `portarng platforms`")?;
+    let shards: usize = opts.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let profile = calibrate(platform, shards);
+    println!(
+        "calibrated {} ({} batched shards):\n  \
+         threshold {} (requests at/above overflow to the device lane)\n  \
+         flush {} requests per batch\n  \
+         {:.1} M numbers/s on the virtual clock",
+        platform.token(),
+        shards,
+        profile.params.threshold,
+        profile.params.flush_requests,
+        profile.mnum_per_s
+    );
+    if let Some(path) = opts.get("profile") {
+        let path = Path::new(path);
+        let mut store = ProfileStore::load(path)?;
+        store.put(profile);
+        store.save(path)?;
+        println!("[wrote calibration profile to {}]", path.display());
     }
     Ok(())
 }

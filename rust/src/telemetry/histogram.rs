@@ -1,0 +1,283 @@
+//! Lock-free log₂-bucketed histogram.
+//!
+//! The hot path ([`Log2Histogram::record`]) is two relaxed `fetch_add`s
+//! plus one on the value's bucket — no locks, no allocation — so shard
+//! workers can record per-launch latencies and batch occupancies without
+//! perturbing the throughput they are measuring. Reads go through
+//! [`Log2Histogram::snapshot`], which copies the counters into a plain
+//! [`HistogramSnapshot`] for aggregation and `jsonlite` serialization.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::jsonlite::Value;
+
+/// Bucket count: bucket 0 holds the value 0, bucket `i >= 1` holds values
+/// in `[2^(i-1), 2^i)`, and the last bucket absorbs everything above
+/// `2^(BUCKETS-2)` (~7e13 — minutes of nanoseconds, terascale batch
+/// sizes), so no observable value is dropped.
+pub const BUCKETS: usize = 48;
+
+/// Index of the bucket holding `value`.
+fn bucket_of(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        (64 - value.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Lower bound of bucket `i` (inclusive).
+fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Lock-free log₂ histogram of `u64` observations.
+#[derive(Debug)]
+pub struct Log2Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Log2Histogram {
+    /// Empty histogram.
+    pub fn new() -> Log2Histogram {
+        Log2Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (lock-free, relaxed ordering — counters are
+    /// monotonic and read only through whole-histogram snapshots).
+    pub fn record(&self, value: u64) {
+        self.buckets[bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    /// Copy the counters out. Concurrent recorders may land between the
+    /// individual loads; the snapshot is still a valid histogram (each
+    /// counter is internally consistent and monotonic).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        HistogramSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data copy of a [`Log2Histogram`] at one instant.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts (see [`BUCKETS`] for the layout).
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values.
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile: the lower bound of the bucket containing the
+    /// `q`-th observation (`q` in `[0, 1]`). Bucket resolution, so at most
+    /// a factor-2 overestimate of the true quantile.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_floor(i);
+            }
+        }
+        bucket_floor(self.buckets.len().saturating_sub(1))
+    }
+
+    /// Component-wise sum (cross-shard aggregation).
+    pub fn merged(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let n = self.buckets.len().max(other.buckets.len());
+        let mut buckets = vec![0u64; n];
+        for (i, b) in buckets.iter_mut().enumerate() {
+            *b = self.buckets.get(i).copied().unwrap_or(0)
+                + other.buckets.get(i).copied().unwrap_or(0);
+        }
+        HistogramSnapshot {
+            buckets,
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+        }
+    }
+
+    /// Observations recorded since `earlier` (windowed rates). Saturates
+    /// at zero if `earlier` is not actually earlier.
+    pub fn delta_count(&self, earlier: &HistogramSnapshot) -> u64 {
+        self.count.saturating_sub(earlier.count)
+    }
+
+    /// Serialize as `{"count": .., "sum": .., "buckets": [..]}` with
+    /// trailing zero buckets trimmed.
+    pub fn to_json(&self) -> Value {
+        let trimmed = self.buckets.len()
+            - self.buckets.iter().rev().take_while(|&&b| b == 0).count();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("count".to_string(), Value::Number(self.count as f64));
+        m.insert("sum".to_string(), Value::Number(self.sum as f64));
+        m.insert(
+            "buckets".to_string(),
+            Value::Array(
+                self.buckets[..trimmed].iter().map(|&b| Value::Number(b as f64)).collect(),
+            ),
+        );
+        Value::Object(m)
+    }
+
+    /// Parse the [`HistogramSnapshot::to_json`] form back (buckets are
+    /// re-padded to [`BUCKETS`]).
+    pub fn from_json(v: &Value) -> Result<HistogramSnapshot> {
+        let count = v
+            .get("count")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::Json("histogram missing `count`".into()))?
+            as u64;
+        let sum = v
+            .get("sum")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::Json("histogram missing `sum`".into()))?
+            as u64;
+        let arr = v
+            .get("buckets")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Json("histogram missing `buckets`".into()))?;
+        let mut buckets = vec![0u64; BUCKETS.max(arr.len())];
+        for (i, b) in arr.iter().enumerate() {
+            buckets[i] = b
+                .as_f64()
+                .ok_or_else(|| Error::Json("non-numeric histogram bucket".into()))?
+                as u64;
+        }
+        Ok(HistogramSnapshot { buckets, count, sum })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_floor(i)), i, "floor of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn record_and_snapshot() {
+        let h = Log2Histogram::new();
+        for v in [0u64, 1, 1, 5, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1007);
+        assert_eq!(s.buckets[0], 1); // the zero
+        assert_eq!(s.buckets[1], 2); // the ones
+        assert!((s.mean() - 201.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_floors() {
+        let h = Log2Histogram::new();
+        for _ in 0..90 {
+            h.record(10); // bucket [8, 16)
+        }
+        for _ in 0..10 {
+            h.record(1000); // bucket [512, 1024)
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 8);
+        assert_eq!(s.quantile(0.99), 512);
+        assert_eq!(HistogramSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = std::sync::Arc::new(Log2Histogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for v in 0..10_000u64 {
+                        h.record(v);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 40_000);
+        assert_eq!(s.sum, 4 * (10_000 * 9_999 / 2));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let h = Log2Histogram::new();
+        for v in [0u64, 3, 900, 1 << 40] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let text = s.to_json().to_json();
+        let back = HistogramSnapshot::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.count, s.count);
+        assert_eq!(back.sum, s.sum);
+        assert_eq!(&back.buckets[..BUCKETS], &s.buckets[..]);
+    }
+
+    #[test]
+    fn merge_sums_componentwise() {
+        let a = Log2Histogram::new();
+        a.record(5);
+        let b = Log2Histogram::new();
+        b.record(5);
+        b.record(100);
+        let m = a.snapshot().merged(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.sum, 110);
+        assert_eq!(m.buckets[bucket_of(5)], 2);
+    }
+}

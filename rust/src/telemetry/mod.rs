@@ -1,0 +1,22 @@
+//! Lock-free service telemetry (DESIGN.md S11).
+//!
+//! The adaptive-dispatch subsystem's measurement half: atomic counters
+//! plus log₂-bucketed latency and batch-occupancy histograms, kept per
+//! shard / per lane / per backend by [`TelemetryRegistry`], recorded by
+//! pool workers with relaxed atomics (nothing on the request hot path
+//! takes a lock or allocates), and read through cheap [`snapshot`]
+//! copies that serialize through `jsonlite` (schema
+//! `portarng-telemetry-v1`). The [`autotune`](crate::autotune) controller
+//! closes the loop by turning snapshot deltas into
+//! [`DispatchPolicy`](crate::coordinator::DispatchPolicy) retunes.
+//!
+//! [`snapshot`]: TelemetryRegistry::snapshot
+
+mod histogram;
+mod registry;
+
+pub use histogram::{HistogramSnapshot, Log2Histogram, BUCKETS};
+pub use registry::{
+    Lane, ShardSnapshot, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot,
+    TELEMETRY_SCHEMA,
+};

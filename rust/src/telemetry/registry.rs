@@ -1,0 +1,469 @@
+//! Shard/lane/backend-labelled metrics registry for the service pool.
+//!
+//! One [`ShardTelemetry`] per worker shard, allocated by the pool at spawn
+//! and shared with the worker thread as an `Arc` — the worker records with
+//! relaxed atomics (no locks on the request path) and the registry stays
+//! readable from any thread even after the worker is gone, which is what
+//! fixes the old `ServiceStats`-over-ack-channel shutdown path: counters
+//! live in the registry, not in worker-local state, so nothing is dropped
+//! when a shard's ack channel closes.
+//!
+//! [`TelemetryRegistry::snapshot`] copies everything into a plain
+//! [`TelemetrySnapshot`] that serializes through `jsonlite`
+//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v1`, see
+//! README "Telemetry snapshot schema").
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::jsonlite::Value;
+use crate::platform::PlatformId;
+
+use super::histogram::{HistogramSnapshot, Log2Histogram};
+
+/// Telemetry snapshot schema identifier (bump on breaking changes).
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v1";
+
+/// Which lane a shard serves (mirrors `coordinator::Route`, defined here
+/// so the telemetry layer does not depend on the coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Batched round-robin small-request lane.
+    Batched,
+    /// Unbatched large-request overflow lane.
+    Overflow,
+}
+
+impl Lane {
+    /// Stable label used in snapshots.
+    pub fn token(self) -> &'static str {
+        match self {
+            Lane::Batched => "batched",
+            Lane::Overflow => "overflow",
+        }
+    }
+
+    /// Parse a snapshot label.
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s {
+            "batched" => Some(Lane::Batched),
+            "overflow" => Some(Lane::Overflow),
+            _ => None,
+        }
+    }
+}
+
+/// Lock-free per-shard counters and histograms.
+#[derive(Debug)]
+pub struct ShardTelemetry {
+    /// Shard index in dispatch order.
+    pub shard: usize,
+    /// Lane this shard serves.
+    pub lane: Lane,
+    backend: OnceLock<String>,
+    requests: AtomicU64,
+    launches: AtomicU64,
+    numbers: AtomicU64,
+    delivered: AtomicU64,
+    failures: AtomicU64,
+    launch_ns: Log2Histogram,
+    batch_fill: Log2Histogram,
+    request_n: Log2Histogram,
+}
+
+impl ShardTelemetry {
+    fn new(shard: usize, lane: Lane) -> ShardTelemetry {
+        ShardTelemetry {
+            shard,
+            lane,
+            backend: OnceLock::new(),
+            requests: AtomicU64::new(0),
+            launches: AtomicU64::new(0),
+            numbers: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            launch_ns: Log2Histogram::new(),
+            batch_fill: Log2Histogram::new(),
+            request_n: Log2Histogram::new(),
+        }
+    }
+
+    /// Record which backend the worker built (first caller wins; workers
+    /// set it once right after construction).
+    pub fn set_backend(&self, name: &str) {
+        let _ = self.backend.set(name.to_string());
+    }
+
+    /// One request accepted by this shard.
+    pub fn record_request(&self, n: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.request_n.record(n as u64);
+    }
+
+    /// One kernel launch over a closed batch: `members` requests totalling
+    /// `payload` delivered numbers in a `launch_n`-number launch (padding
+    /// included), taking `wall_ns` of real time.
+    pub fn record_launch(&self, members: usize, payload: u64, launch_n: u64, wall_ns: u64) {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        self.numbers.fetch_add(launch_n, Ordering::Relaxed);
+        self.delivered.fetch_add(payload, Ordering::Relaxed);
+        self.launch_ns.record(wall_ns);
+        self.batch_fill.record(members as u64);
+    }
+
+    /// One request failed (backend error / degraded shard).
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy this shard's counters out.
+    pub fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            shard: self.shard,
+            lane: self.lane,
+            backend: self.backend.get().cloned().unwrap_or_default(),
+            requests: self.requests.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
+            numbers: self.numbers.load(Ordering::Relaxed),
+            delivered: self.delivered.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            launch_ns: self.launch_ns.snapshot(),
+            batch_fill: self.batch_fill.snapshot(),
+            request_n: self.request_n.snapshot(),
+        }
+    }
+}
+
+/// Pool-wide metrics registry: per-shard telemetry plus dispatcher-side
+/// counters.
+#[derive(Debug)]
+pub struct TelemetryRegistry {
+    platform: PlatformId,
+    shards: Vec<Arc<ShardTelemetry>>,
+    dispatched_batched: AtomicU64,
+    dispatched_overflow: AtomicU64,
+    retunes: AtomicU64,
+    started: Instant,
+}
+
+impl TelemetryRegistry {
+    /// Registry with one [`ShardTelemetry`] per lane entry, in dispatch
+    /// order.
+    pub fn new(platform: PlatformId, lanes: &[Lane]) -> Arc<TelemetryRegistry> {
+        Arc::new(TelemetryRegistry {
+            platform,
+            shards: lanes
+                .iter()
+                .enumerate()
+                .map(|(i, &lane)| Arc::new(ShardTelemetry::new(i, lane)))
+                .collect(),
+            dispatched_batched: AtomicU64::new(0),
+            dispatched_overflow: AtomicU64::new(0),
+            retunes: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    /// The shard-`i` telemetry handle (shared with that worker).
+    pub fn shard(&self, i: usize) -> Arc<ShardTelemetry> {
+        self.shards[i].clone()
+    }
+
+    /// Shard count (including the overflow lane when present).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Count one dispatcher routing decision.
+    pub fn record_dispatch(&self, overflow: bool) {
+        if overflow {
+            self.dispatched_overflow.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.dispatched_batched.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one policy retune (autotuner nudge).
+    pub fn record_retune(&self) {
+        self.retunes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy everything into a plain snapshot.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            platform: self.platform,
+            uptime_ns: self.started.elapsed().as_nanos() as u64,
+            dispatched_batched: self.dispatched_batched.load(Ordering::Relaxed),
+            dispatched_overflow: self.dispatched_overflow.load(Ordering::Relaxed),
+            retunes: self.retunes.load(Ordering::Relaxed),
+            shards: self.shards.iter().map(|s| s.snapshot()).collect(),
+        }
+    }
+}
+
+/// Plain-data copy of one shard's telemetry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSnapshot {
+    /// Shard index in dispatch order.
+    pub shard: usize,
+    /// Lane served.
+    pub lane: Lane,
+    /// Backend the worker built (empty until the worker reports in).
+    pub backend: String,
+    /// Requests accepted.
+    pub requests: u64,
+    /// Kernel launches issued.
+    pub launches: u64,
+    /// Numbers generated (padded launch totals).
+    pub numbers: u64,
+    /// Numbers delivered to requesters (padding excluded).
+    pub delivered: u64,
+    /// Failed requests.
+    pub failures: u64,
+    /// Real wall time per launch, ns.
+    pub launch_ns: HistogramSnapshot,
+    /// Requests per closed batch (batch occupancy).
+    pub batch_fill: HistogramSnapshot,
+    /// Request sizes seen.
+    pub request_n: HistogramSnapshot,
+}
+
+impl ShardSnapshot {
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("shard".into(), Value::Number(self.shard as f64));
+        m.insert("lane".into(), Value::String(self.lane.token().into()));
+        m.insert("backend".into(), Value::String(self.backend.clone()));
+        m.insert("requests".into(), Value::Number(self.requests as f64));
+        m.insert("launches".into(), Value::Number(self.launches as f64));
+        m.insert("numbers".into(), Value::Number(self.numbers as f64));
+        m.insert("delivered".into(), Value::Number(self.delivered as f64));
+        m.insert("failures".into(), Value::Number(self.failures as f64));
+        m.insert("launch_ns".into(), self.launch_ns.to_json());
+        m.insert("batch_fill".into(), self.batch_fill.to_json());
+        m.insert("request_n".into(), self.request_n.to_json());
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<ShardSnapshot> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("shard snapshot missing `{key}`")))
+        };
+        let hist = |key: &str| -> Result<HistogramSnapshot> {
+            HistogramSnapshot::from_json(
+                v.get(key)
+                    .ok_or_else(|| Error::Json(format!("shard snapshot missing `{key}`")))?,
+            )
+        };
+        let lane_str = v
+            .get("lane")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Json("shard snapshot missing `lane`".into()))?;
+        Ok(ShardSnapshot {
+            shard: num("shard")? as usize,
+            lane: Lane::parse(lane_str)
+                .ok_or_else(|| Error::Json(format!("unknown lane `{lane_str}`")))?,
+            backend: v
+                .get("backend")
+                .and_then(Value::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            requests: num("requests")?,
+            launches: num("launches")?,
+            numbers: num("numbers")?,
+            delivered: num("delivered")?,
+            failures: num("failures")?,
+            launch_ns: hist("launch_ns")?,
+            batch_fill: hist("batch_fill")?,
+            request_n: hist("request_n")?,
+        })
+    }
+}
+
+/// Plain-data copy of a [`TelemetryRegistry`] at one instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    /// Platform the pool serves.
+    pub platform: PlatformId,
+    /// Nanoseconds since the registry (pool) was created.
+    pub uptime_ns: u64,
+    /// Dispatcher decisions routed to batched shards.
+    pub dispatched_batched: u64,
+    /// Dispatcher decisions routed to the overflow lane.
+    pub dispatched_overflow: u64,
+    /// Policy retunes applied.
+    pub retunes: u64,
+    /// Per-shard telemetry, dispatch order.
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    /// Total requests accepted across shards.
+    pub fn total_requests(&self) -> u64 {
+        self.shards.iter().map(|s| s.requests).sum()
+    }
+
+    /// Total numbers delivered to requesters (padding excluded).
+    pub fn total_delivered(&self) -> u64 {
+        self.shards.iter().map(|s| s.delivered).sum()
+    }
+
+    /// Total kernel launches issued.
+    pub fn total_launches(&self) -> u64 {
+        self.shards.iter().map(|s| s.launches).sum()
+    }
+
+    /// Total failed requests.
+    pub fn total_failures(&self) -> u64 {
+        self.shards.iter().map(|s| s.failures).sum()
+    }
+
+    /// Delivered throughput since `earlier`, in numbers per second (the
+    /// autotuner's objective). Returns 0 when no time has passed.
+    pub fn delivered_per_s_since(&self, earlier: &TelemetrySnapshot) -> f64 {
+        let dt = self.uptime_ns.saturating_sub(earlier.uptime_ns);
+        if dt == 0 {
+            return 0.0;
+        }
+        let dn = self.total_delivered().saturating_sub(earlier.total_delivered());
+        dn as f64 / dt as f64 * 1e9
+    }
+
+    /// Serialize (schema `portarng-telemetry-v1`).
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
+        m.insert("platform".into(), Value::String(self.platform.token().into()));
+        m.insert("uptime_ns".into(), Value::Number(self.uptime_ns as f64));
+        m.insert(
+            "dispatched_batched".into(),
+            Value::Number(self.dispatched_batched as f64),
+        );
+        m.insert(
+            "dispatched_overflow".into(),
+            Value::Number(self.dispatched_overflow as f64),
+        );
+        m.insert("retunes".into(), Value::Number(self.retunes as f64));
+        m.insert(
+            "shards".into(),
+            Value::Array(self.shards.iter().map(ShardSnapshot::to_json).collect()),
+        );
+        Value::Object(m)
+    }
+
+    /// Parse the [`TelemetrySnapshot::to_json`] form back.
+    pub fn from_json(v: &Value) -> Result<TelemetrySnapshot> {
+        match v.get("schema").and_then(Value::as_str) {
+            Some(TELEMETRY_SCHEMA) => {}
+            other => {
+                return Err(Error::Json(format!(
+                    "expected schema `{TELEMETRY_SCHEMA}`, got {other:?}"
+                )))
+            }
+        }
+        let token = v
+            .get("platform")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Json("snapshot missing `platform`".into()))?;
+        let platform = PlatformId::parse(token)
+            .ok_or_else(|| Error::Json(format!("unknown platform `{token}`")))?;
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("snapshot missing `{key}`")))
+        };
+        let shards = v
+            .get("shards")
+            .and_then(Value::as_array)
+            .ok_or_else(|| Error::Json("snapshot missing `shards`".into()))?
+            .iter()
+            .map(ShardSnapshot::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TelemetrySnapshot {
+            platform,
+            uptime_ns: num("uptime_ns")?,
+            dispatched_batched: num("dispatched_batched")?,
+            dispatched_overflow: num("dispatched_overflow")?,
+            retunes: num("retunes")?,
+            shards,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> Arc<TelemetryRegistry> {
+        let reg =
+            TelemetryRegistry::new(PlatformId::A100, &[Lane::Batched, Lane::Overflow]);
+        let s0 = reg.shard(0);
+        s0.set_backend("oneMKL-x86");
+        s0.record_request(100);
+        s0.record_request(44);
+        s0.record_launch(2, 144, 144, 12_000);
+        let s1 = reg.shard(1);
+        s1.set_backend("cuRAND");
+        s1.record_request(5000);
+        s1.record_launch(1, 5000, 5000, 90_000);
+        s1.record_failure();
+        reg.record_dispatch(false);
+        reg.record_dispatch(false);
+        reg.record_dispatch(true);
+        reg.record_retune();
+        reg
+    }
+
+    #[test]
+    fn snapshot_aggregates_shards() {
+        let snap = sample_registry().snapshot();
+        assert_eq!(snap.total_requests(), 3);
+        assert_eq!(snap.total_delivered(), 5144);
+        assert_eq!(snap.total_launches(), 2);
+        assert_eq!(snap.total_failures(), 1);
+        assert_eq!(snap.dispatched_batched, 2);
+        assert_eq!(snap.dispatched_overflow, 1);
+        assert_eq!(snap.retunes, 1);
+        assert_eq!(snap.shards[0].lane, Lane::Batched);
+        assert_eq!(snap.shards[1].backend, "cuRAND");
+        assert_eq!(snap.shards[0].batch_fill.count, 1);
+        assert!(snap.shards[1].launch_ns.mean() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let mut snap = sample_registry().snapshot();
+        snap.uptime_ns = 123_456_789; // pin the clock for exact equality
+        let text = snap.to_json().to_json();
+        let back =
+            TelemetrySnapshot::from_json(&Value::parse(&text).unwrap()).unwrap();
+        // Histograms re-pad to full width; compare through re-serialization.
+        assert_eq!(back.to_json().to_json(), text);
+        assert_eq!(back.platform, snap.platform);
+        assert_eq!(back.total_delivered(), snap.total_delivered());
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema() {
+        let v = Value::parse(r#"{"schema":"nope","platform":"a100"}"#).unwrap();
+        assert!(TelemetrySnapshot::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn windowed_throughput_uses_deltas() {
+        let mut early = sample_registry().snapshot();
+        let mut late = early.clone();
+        early.uptime_ns = 0;
+        late.uptime_ns = 1_000_000_000;
+        late.shards[0].delivered += 1_000_000;
+        let tput = late.delivered_per_s_since(&early);
+        assert!((tput - 1_000_000.0).abs() < 1e-6, "tput={tput}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Adaptive-dispatch subsystem integration: telemetry snapshot schema and
+//! round-trips, calibration profiles, and the measure→retune loop end to
+//! end against the virtual-clock objective.
+
+use portarng::autotune::{
+    best_fixed_threshold, calibrate, virtual_pool_throughput, AutoTuner, CalibrationProfile,
+    ProbeWorkload, ProfileStore,
+};
+use portarng::burner::{run_burner_pooled, BurnerApi, BurnerConfig};
+use portarng::coordinator::TuningParams;
+use portarng::jsonlite::Value;
+use portarng::platform::PlatformId;
+use portarng::telemetry::{Lane, TelemetrySnapshot, TELEMETRY_SCHEMA};
+
+#[test]
+fn pooled_burner_telemetry_round_trips_and_matches_schema() {
+    // What `portarng burner --pool N --stats-json <path>` writes.
+    let mut cfg = BurnerConfig::paper_default(PlatformId::A100, BurnerApi::SyclBuffer, 1000);
+    cfg.iterations = 5;
+    let r = run_burner_pooled(&cfg, 2, 12).unwrap();
+    let text = r.telemetry.to_json().to_json();
+
+    // Round-trips through jsonlite...
+    let parsed = Value::parse(&text).unwrap();
+    let back = TelemetrySnapshot::from_json(&parsed).unwrap();
+    assert_eq!(back.to_json().to_json(), text);
+
+    // ...and matches the documented schema.
+    assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), TELEMETRY_SCHEMA);
+    assert_eq!(parsed.get("platform").unwrap().as_str().unwrap(), "a100");
+    for key in ["uptime_ns", "dispatched_batched", "dispatched_overflow", "retunes"] {
+        assert!(parsed.get(key).unwrap().as_f64().is_some(), "missing {key}");
+    }
+    let shards = parsed.get("shards").unwrap().as_array().unwrap();
+    assert_eq!(shards.len(), 2);
+    for s in shards {
+        for key in ["shard", "requests", "launches", "numbers", "delivered", "failures"] {
+            assert!(s.get(key).unwrap().as_f64().is_some(), "missing {key}");
+        }
+        assert!(Lane::parse(s.get("lane").unwrap().as_str().unwrap()).is_some());
+        for key in ["launch_ns", "batch_fill", "request_n"] {
+            let h = s.get(key).unwrap();
+            assert!(h.get("count").unwrap().as_f64().is_some());
+            assert!(h.get("sum").unwrap().as_f64().is_some());
+            assert!(h.get("buckets").unwrap().as_array().is_some());
+        }
+    }
+
+    // The counters agree with the burner's own accounting.
+    assert_eq!(back.total_requests(), 12);
+    assert_eq!(back.total_delivered(), 12_000);
+    assert_eq!(back.total_failures(), 0);
+}
+
+#[test]
+fn checked_in_example_profile_parses_and_warm_starts() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../profiles/example_profile.json");
+    let store = ProfileStore::load(&path).unwrap();
+    assert!(!store.is_empty(), "example profile must not silently load as empty");
+    let a100 = store.get(PlatformId::A100).expect("example covers a100");
+    assert!(a100.params.threshold > 1);
+    assert!(a100.params.flush_requests >= 1);
+    assert!(a100.mnum_per_s > 0.0);
+    // A warm start uses the stored knobs verbatim: they must be valid
+    // TuningParams for a pool.
+    assert!(a100.params.policy().is_enabled());
+}
+
+#[test]
+fn profile_store_round_trips_calibration_output() {
+    let profile = calibrate(PlatformId::Vega56, 4);
+    let mut store = ProfileStore::new();
+    store.put(profile.clone());
+    let text = store.to_json().to_json();
+    let back = ProfileStore::from_json(&Value::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.get(PlatformId::Vega56), Some(&profile));
+}
+
+#[test]
+fn calibration_beats_the_static_endpoints() {
+    // The probe's whole point: the calibrated knobs outperform both "no
+    // overflow lane" and "overflow everything" on the probe mix.
+    let wl = ProbeWorkload::serving_mix(0xCA11_B007, 192);
+    let profile = calibrate(PlatformId::A100, 4);
+    let tuned = virtual_pool_throughput(PlatformId::A100, 4, &profile.params, &wl);
+    let none = TuningParams { threshold: usize::MAX, ..profile.params };
+    let all = TuningParams { threshold: 1, ..profile.params };
+    assert!(tuned > virtual_pool_throughput(PlatformId::A100, 4, &none, &wl));
+    assert!(tuned > virtual_pool_throughput(PlatformId::A100, 4, &all, &wl));
+}
+
+#[test]
+fn online_tuner_recovers_miscalibration_against_virtual_objective() {
+    // The bench gate's scenario at test scale: mis-specified start, the
+    // tuner only sees throughput numbers, must reach 90% of the scan
+    // oracle.
+    let platform = PlatformId::A100;
+    let wl = ProbeWorkload::serving_mix(77, 96);
+    let defaults = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+    let (_, oracle) = best_fixed_threshold(platform, 4, &defaults, &wl);
+
+    let mut tuner = AutoTuner::new(TuningParams { threshold: 1 << 26, ..defaults });
+    let mut params = tuner.params();
+    for _ in 0..80 {
+        params = tuner.observe(virtual_pool_throughput(platform, 4, &params, &wl));
+    }
+    assert!(tuner.converged());
+    let (best, _) = tuner.best();
+    let recovered = virtual_pool_throughput(platform, 4, &best, &wl) / oracle;
+    assert!(recovered >= 0.9, "recovered only {:.0}%", recovered * 100.0);
+}
+
+#[test]
+fn profile_json_threshold_survives_extreme_values() {
+    // usize::MAX (disabled threshold) must survive the f64 JSON number
+    // representation by saturating back, not wrapping.
+    let mut store = ProfileStore::new();
+    store.put(CalibrationProfile {
+        platform: PlatformId::Rome7742,
+        shards: 4,
+        params: TuningParams {
+            threshold: usize::MAX,
+            flush_requests: 16,
+            max_batch: 1 << 20,
+        },
+        mnum_per_s: 1.0,
+        source: "probe".into(),
+    });
+    let text = store.to_json().to_json();
+    let back = ProfileStore::from_json(&Value::parse(&text).unwrap()).unwrap();
+    let p = back.get(PlatformId::Rome7742).unwrap();
+    assert_eq!(p.params.threshold, usize::MAX);
+}

@@ -2,7 +2,8 @@
 //! equivalence, registry dispatch, heuristic selection.
 
 use portarng::coordinator::{
-    BackendHeuristic, BackendRegistry, DispatchPolicy, PoolConfig, RngService, ServicePool,
+    BackendHeuristic, BackendRegistry, DispatchPolicy, PoolConfig, RngService, Route,
+    ServicePool, TuningParams,
 };
 use portarng::platform::PlatformId;
 use portarng::rng::{Engine, PhiloxEngine};
@@ -99,6 +100,94 @@ fn prop_pooled_batched_output_is_bit_identical_to_dedicated_engines() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_retuning_mid_stream_preserves_global_offset_invariant() {
+    // The retune-safety property: global offsets are assigned before
+    // routing, so ANY interleaving of threshold/flush retunes with
+    // submissions yields bit-identical per-request streams.
+    testkit::forall("retune-stream-exact", 8, |g| {
+        let seed = g.u64();
+        let n_req = g.usize_in(6, 16);
+        let sizes: Vec<usize> = (0..n_req)
+            .map(|_| if g.bool_with(0.3) { g.usize_in(800, 3000) } else { g.usize_in(1, 500) })
+            .collect();
+        let mut cfg = PoolConfig::new(PlatformId::A100, seed, g.usize_in(1, 4));
+        cfg.max_requests = g.usize_in(1, 6);
+        cfg.adaptive = true; // overflow lane exists from the start
+        let pool = ServicePool::spawn(cfg);
+        let mut rxs = Vec::new();
+        for &n in &sizes {
+            // Retune mid-stream, randomly: flip the threshold around and
+            // jiggle the flush limits between submissions.
+            if g.bool_with(0.4) {
+                pool.retune(TuningParams {
+                    threshold: *g.choose(&[0usize, 100, 800, 2000, usize::MAX]),
+                    flush_requests: g.usize_in(1, 8),
+                    max_batch: g.usize_in(256, 1 << 16),
+                });
+            }
+            rxs.push(pool.generate(n, (0.0, 1.0)));
+        }
+        pool.flush();
+        let mut offset = 0u64;
+        for (rx, &n) in rxs.iter().zip(&sizes) {
+            let got = rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?;
+            let mut want = vec![0f32; n];
+            PhiloxEngine::with_offset(seed, offset).fill_uniform_f32(&mut want);
+            if got != want {
+                return Err(format!("request at offset {offset} (n={n}) diverged under retune"));
+            }
+            offset += n as u64;
+        }
+        let stats = pool.shutdown().map_err(|e| e.to_string())?;
+        if stats.total().requests != sizes.len() as u64 {
+            return Err("request count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatch_policy_edge_cases_route_as_documented() {
+    // n == threshold goes to the overflow lane.
+    let at = DispatchPolicy::fixed(4096);
+    assert_eq!(at.route(4095), Route::Batched);
+    assert_eq!(at.route(4096), Route::Overflow);
+    // disabled() never overflows, even at usize::MAX.
+    let off = DispatchPolicy::disabled();
+    for n in [0usize, 1, 4096, usize::MAX - 1, usize::MAX] {
+        assert_eq!(off.route(n), Route::Batched, "n={n}");
+    }
+    // threshold == 0 sends everything to the overflow lane.
+    let zero = DispatchPolicy::fixed(0);
+    assert!(zero.is_enabled());
+    for n in [0usize, 1, 17, 1 << 20] {
+        assert_eq!(zero.route(n), Route::Overflow, "n={n}");
+    }
+}
+
+#[test]
+fn threshold_zero_pool_serves_everything_on_the_overflow_lane() {
+    let mut cfg = PoolConfig::new(PlatformId::A100, 21, 2);
+    cfg.policy = DispatchPolicy::fixed(0);
+    let pool = ServicePool::spawn(cfg);
+    let sizes = [7usize, 123, 4000];
+    let rxs: Vec<_> = sizes.iter().map(|&n| pool.generate(n, (0.0, 1.0))).collect();
+    // No flush needed: the overflow lane is unbatched.
+    let mut offset = 0u64;
+    for (rx, &n) in rxs.iter().zip(&sizes) {
+        let got = rx.recv().unwrap().unwrap();
+        let mut want = vec![0f32; n];
+        PhiloxEngine::with_offset(21, offset).fill_uniform_f32(&mut want);
+        assert_eq!(got, want);
+        offset += n as u64;
+    }
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.shards.len(), 3); // 2 batched (idle) + overflow
+    assert_eq!(stats.shards[2].requests, 3);
+    assert_eq!(stats.shards[0].requests + stats.shards[1].requests, 0);
 }
 
 #[test]
