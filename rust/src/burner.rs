@@ -128,44 +128,73 @@ pub struct KernelBreakdown {
     pub tpb: u32,
 }
 
+/// Streaming accumulator behind [`KernelBreakdown::from_records`] /
+/// [`KernelBreakdown::from_queue`].
+#[derive(Default)]
+struct BreakdownAcc {
+    b: KernelBreakdown,
+    gen_occ: f64,
+    gen_n: u32,
+    tr_occ: f64,
+    tr_n: u32,
+}
+
+impl BreakdownAcc {
+    fn push(&mut self, r: &CommandRecord) {
+        let dur = r.virt_end_ns - r.virt_start_ns;
+        match r.class {
+            CommandClass::Setup => self.b.setup_ns += dur,
+            CommandClass::Generate => {
+                self.b.generate_ns += dur;
+                if let Some(o) = r.occupancy {
+                    self.gen_occ += o;
+                    self.gen_n += 1;
+                }
+                if let Some(t) = r.tpb {
+                    self.b.tpb = t;
+                }
+            }
+            CommandClass::Transform => {
+                self.b.transform_ns += dur;
+                if let Some(o) = r.occupancy {
+                    self.tr_occ += o;
+                    self.tr_n += 1;
+                }
+            }
+            CommandClass::TransferH2D => self.b.h2d_ns += dur,
+            CommandClass::TransferD2H => self.b.d2h_ns += dur,
+            CommandClass::Malloc | CommandClass::Other => self.b.other_ns += dur,
+        }
+    }
+
+    fn finish(mut self) -> KernelBreakdown {
+        if self.gen_n > 0 {
+            self.b.generate_occupancy = self.gen_occ / self.gen_n as f64;
+        }
+        if self.tr_n > 0 {
+            self.b.transform_occupancy = self.tr_occ / self.tr_n as f64;
+        }
+        self.b
+    }
+}
+
 impl KernelBreakdown {
     /// Aggregate command records into the breakdown.
     pub fn from_records(records: &[CommandRecord]) -> KernelBreakdown {
-        let mut b = KernelBreakdown::default();
-        let (mut gen_occ, mut gen_n, mut tr_occ, mut tr_n) = (0.0, 0u32, 0.0, 0u32);
+        let mut acc = BreakdownAcc::default();
         for r in records {
-            let dur = r.virt_end_ns - r.virt_start_ns;
-            match r.class {
-                CommandClass::Setup => b.setup_ns += dur,
-                CommandClass::Generate => {
-                    b.generate_ns += dur;
-                    if let Some(o) = r.occupancy {
-                        gen_occ += o;
-                        gen_n += 1;
-                    }
-                    if let Some(t) = r.tpb {
-                        b.tpb = t;
-                    }
-                }
-                CommandClass::Transform => {
-                    b.transform_ns += dur;
-                    if let Some(o) = r.occupancy {
-                        tr_occ += o;
-                        tr_n += 1;
-                    }
-                }
-                CommandClass::TransferH2D => b.h2d_ns += dur,
-                CommandClass::TransferD2H => b.d2h_ns += dur,
-                CommandClass::Malloc | CommandClass::Other => b.other_ns += dur,
-            }
+            acc.push(r);
         }
-        if gen_n > 0 {
-            b.generate_occupancy = gen_occ / gen_n as f64;
-        }
-        if tr_n > 0 {
-            b.transform_occupancy = tr_occ / tr_n as f64;
-        }
-        b
+        acc.finish()
+    }
+
+    /// Aggregate a queue's retained records without cloning them
+    /// ([`Queue::visit_records`]) — the accounting path every burner
+    /// iteration takes.
+    pub fn from_queue(queue: &Queue) -> KernelBreakdown {
+        let mut acc = BreakdownAcc::default();
+        queue.visit_records(|r| acc.push(r));
+        acc.finish()
     }
 }
 
@@ -359,7 +388,7 @@ fn run_sycl_iteration(
         }
     };
 
-    Ok((total, KernelBreakdown::from_records(&queue.records()), sample))
+    Ok((total, KernelBreakdown::from_queue(&queue), sample))
 }
 
 /// Pure-virtual burner run (no real element computation): identical command
@@ -439,7 +468,7 @@ fn virtual_iteration(cfg: &BurnerConfig, salt: u64) -> Result<(u64, KernelBreakd
                 );
             });
             let total = queue.wait();
-            Ok((total, KernelBreakdown::from_records(&queue.records())))
+            Ok((total, KernelBreakdown::from_queue(&queue)))
         }
         BurnerApi::SyclUsm => {
             let profile = SyclRuntimeProfile::for_platform(&cfg.platform.spec());
@@ -469,7 +498,7 @@ fn virtual_iteration(cfg: &BurnerConfig, salt: u64) -> Result<(u64, KernelBreakd
                 |_| {},
             );
             let total = queue.wait();
-            Ok((total, KernelBreakdown::from_records(&queue.records())))
+            Ok((total, KernelBreakdown::from_queue(&queue)))
         }
     }
 }
@@ -532,18 +561,20 @@ fn checksum_fold(mut h: u64, xs: &[f32]) -> u64 {
 /// drained in order — the serving-layer counterpart of [`run_burner`].
 ///
 /// Only uniform distributions are meaningful here (the pool's request API
-/// is range-based) and only the sycl-buffer application variant is pooled
-/// (the pool's coalesced launches are the buffer path); anything else is
-/// rejected rather than silently substituted.
+/// is range-based) and only the SYCL application variants are pooled —
+/// the pool's coalesced flushes run through the SYCL runtime (the USM
+/// batch path over arena memory, DESIGN.md S13) regardless of which of
+/// the two memory-API tokens was passed; native/pjrt are rejected rather
+/// than silently substituted.
 pub fn run_burner_pooled(
     cfg: &BurnerConfig,
     shards: usize,
     requests: usize,
 ) -> Result<PoolBurnerReport> {
-    if cfg.api != BurnerApi::SyclBuffer {
+    if !matches!(cfg.api, BurnerApi::SyclBuffer | BurnerApi::SyclUsm) {
         return Err(Error::InvalidArgument(format!(
-            "pooled burner drives the sycl-buffer path; --api {} is not pooled \
-             (drop --pool or use --api sycl-buffer)",
+            "pooled burner serves through the SYCL runtime (USM batch path); \
+             --api {} is not pooled (drop --pool or use --api sycl-buffer/sycl-usm)",
             cfg.api.token()
         )));
     }

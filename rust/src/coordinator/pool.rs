@@ -22,6 +22,21 @@
 //! backend (§8: "host for small workloads, GPU for larger ones") — which
 //! is observationally free because every backend is bit-exact Philox.
 //!
+//! Serving runs **through the SYCL runtime** (DESIGN.md S13): every
+//! worker owns a [`Queue`] on its lane's platform and a [`UsmArena`] of
+//! recycled allocations, both reused across requests. A flush is one DAG
+//! submission — one interop generate host task writing every member's
+//! sub-stream straight into arena USM, at most one range-transform
+//! kernel, and one event-chained D2H slice per member that becomes the
+//! reply buffer ([`crate::rng::generate_batch_usm`]). At steady state the
+//! generate/launch path performs zero per-request allocations — no
+//! staging vecs, no device mallocs (the launch buffer is an arena hit);
+//! per request only the reply payload and the substrate's per-command
+//! bookkeeping remain. After each flush the worker drains the queue's
+//! command records into the telemetry registry (per-class virtual
+//! timings + arena counters), so autotune sees where the time actually
+//! goes.
+//!
 //! The policy is not frozen at construction: dispatcher and workers read
 //! it through a shared lock-free [`TuningHandle`] (DESIGN.md S12), so the
 //! [`autotune`](crate::autotune) controller can retune the threshold and
@@ -39,8 +54,11 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::platform::PlatformId;
 use crate::rng::engines::EngineKind;
-use crate::rng::Distribution;
-use crate::telemetry::{Lane, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot};
+use crate::rng::{generate_batch_usm, BatchSlice};
+use crate::sycl::{CommandClass, Queue, SyclRuntimeProfile, UsmArena};
+use crate::telemetry::{
+    ArenaCounters, CommandKind, Lane, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot,
+};
 
 use super::batcher::{BatchOutcome, PendingRequest, RequestBatcher};
 use super::heuristic::{DispatchPolicy, Route, TuningHandle, TuningParams};
@@ -215,6 +233,19 @@ impl ShardHandle {
                     return;
                 }
             };
+            // Worker-owned SYCL runtime state, reused across requests
+            // (DESIGN.md S13): a queue on the lane's generating platform
+            // and a USM arena of recycled launch allocations. `slices` is
+            // the flush scratch — capacity is retained, so steady-state
+            // flushes allocate nothing.
+            let queue_platform = backend.platform();
+            let queue = Queue::new(
+                queue_platform,
+                SyclRuntimeProfile::for_platform(&queue_platform.spec()),
+            );
+            let arena: UsmArena<f32> = UsmArena::new();
+            let mut slices: Vec<BatchSlice> = Vec::new();
+
             // The overflow lane launches every request immediately; batched
             // lanes track the live tuning limits.
             let fixed_flush = matches!(lane, Route::Overflow).then_some(1);
@@ -239,17 +270,41 @@ impl ShardHandle {
                         telemetry.record_request(req.n);
                         waiting.push(req);
                         if let Some(batch) = batcher.push(pending) {
-                            launch(gen.as_mut(), &batch, &mut waiting, &telemetry);
+                            launch(
+                                gen.as_mut(),
+                                &queue,
+                                &arena,
+                                &mut slices,
+                                &batch,
+                                &mut waiting,
+                                &telemetry,
+                            );
                         }
                     }
                     Msg::Flush => {
                         if let Some(batch) = batcher.flush() {
-                            launch(gen.as_mut(), &batch, &mut waiting, &telemetry);
+                            launch(
+                                gen.as_mut(),
+                                &queue,
+                                &arena,
+                                &mut slices,
+                                &batch,
+                                &mut waiting,
+                                &telemetry,
+                            );
                         }
                     }
                     Msg::Shutdown(ack) => {
                         if let Some(batch) = batcher.flush() {
-                            launch(gen.as_mut(), &batch, &mut waiting, &telemetry);
+                            launch(
+                                gen.as_mut(),
+                                &queue,
+                                &arena,
+                                &mut slices,
+                                &batch,
+                                &mut waiting,
+                                &telemetry,
+                            );
                         }
                         let _ = ack.send(());
                         break;
@@ -280,43 +335,97 @@ impl Drop for ShardHandle {
     }
 }
 
-/// One coalesced kernel launch over a closed batch: every member's
-/// payload is generated at the member's *global* stream offset via
-/// counter-based skip-ahead, so responses are independent of batching and
-/// sharding. Generation goes straight into each member's reply buffer —
-/// the padded `launch_n` exists only in the launch accounting (kernel
-/// block granularity), not as allocated scratch.
+/// One coalesced flush through the SYCL runtime: the closed batch becomes
+/// ONE interop generate host task (every member generated at its *global*
+/// stream offset via O(1) skip-ahead, straight into recycled arena USM —
+/// so responses are independent of batching and sharding), at most ONE
+/// range-transform kernel over the launch buffer, and one event-chained
+/// D2H slice per member that becomes the member's reply buffer. The
+/// padded `launch_n` tail lives inside the arena allocation, which is
+/// recycled across flushes: at steady state the generate path allocates
+/// no staging and mallocs no device memory per request (the reply
+/// payload is the D2H output — the handoff, not scratch).
 fn launch(
     gen: &mut dyn crate::backends::VendorGenerator,
+    queue: &Queue,
+    arena: &UsmArena<f32>,
+    slices: &mut Vec<BatchSlice>,
     batch: &BatchOutcome,
     waiting: &mut Vec<ServiceRequest>,
     telemetry: &ShardTelemetry,
 ) {
     let wall_start = Instant::now();
-    let canonical = Distribution::uniform(0.0, 1.0);
+    slices.clear();
+    slices.extend(batch.members.iter().map(|m| BatchSlice {
+        buffer_offset: m.batch_offset,
+        stream_offset: m.stream_offset,
+        n: m.n,
+        range: waiting[m.id as usize].range,
+    }));
+
+    // Checkout inherits the allocation's pending events (the previous
+    // flush's D2H copies) and the generate chains behind them — the USM
+    // reuse hazard the paper's §4.1 warns about, handled explicitly.
+    let mut lease = arena.checkout(queue, batch.launch_n.max(1));
+    let outcome = generate_batch_usm(
+        queue,
+        gen,
+        slices.as_slice(),
+        batch.launch_n,
+        lease.buffer(),
+        lease.deps(),
+    );
+    let (results, pending) = match outcome {
+        Ok(b) => {
+            let pending = b.last_events();
+            (b.payloads, pending)
+        }
+        Err(e) => {
+            // Defensive whole-flush failure (empty batches never reach
+            // here): fail every member rather than dropping replies.
+            // Nothing was submitted, so the allocation's inherited
+            // hazards stay pending for its next user.
+            let why = e.to_string();
+            let fail: Vec<Result<Vec<f32>>> = batch
+                .members
+                .iter()
+                .map(|_| Err(Error::Coordinator(why.clone())))
+                .collect();
+            (fail, lease.deps().to_vec())
+        }
+    };
+    lease.set_pending(pending);
+    drop(lease); // recycle now: the arena is warm before the next flush
+
     let mut payload = 0u64;
-    let mut results: Vec<Result<Vec<f32>>> = Vec::with_capacity(batch.members.len());
-    for m in &batch.members {
-        let req = &waiting[m.id as usize];
-        let mut out = vec![0f32; m.n];
-        let generated = gen
-            .set_offset(m.stream_offset)
-            .and_then(|()| gen.generate_canonical(&canonical, &mut out));
-        results.push(match generated {
-            Ok(()) => {
-                payload += m.n as u64;
-                let (a, b) = req.range;
-                if a != 0.0 || b != 1.0 {
-                    crate::rng::range_transform::range_transform_inplace(&mut out, a, b);
-                }
-                Ok(out)
-            }
-            Err(e) => {
-                telemetry.record_failure();
-                Err(e)
-            }
-        });
+    for r in &results {
+        match r {
+            Ok(v) => payload += v.len() as u64,
+            Err(_) => telemetry.record_failure(),
+        }
     }
+
+    // Per-command-class virtual timings for this flush, drained (not
+    // cloned) so a long-lived worker queue's record log stays bounded.
+    for r in queue.drain_records() {
+        let kind = match r.class {
+            CommandClass::Generate => CommandKind::Generate,
+            CommandClass::Transform => CommandKind::Transform,
+            CommandClass::TransferD2H => CommandKind::TransferD2H,
+            _ => CommandKind::Other,
+        };
+        telemetry.record_command(kind, r.virt_end_ns - r.virt_start_ns);
+    }
+    let a = arena.stats();
+    telemetry.set_arena(ArenaCounters {
+        checkouts: a.checkouts,
+        hits: a.hits,
+        misses: a.misses,
+        recycles: a.recycles,
+        pooled: a.pooled,
+        pooled_bytes: a.pooled_bytes,
+    });
+
     // Record BEFORE sending any reply: a requester that has its numbers
     // must be able to see this launch in a snapshot (otherwise
     // drain-then-snapshot callers race the last batch's counters).
@@ -622,6 +731,61 @@ mod tests {
         assert_eq!(snap.dispatched_batched, 1);
         assert_eq!(snap.dispatched_overflow, 1);
         assert_eq!(pool.tuning().generation(), 1);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn flushes_are_single_dag_submissions_with_recycled_arena() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 11, 1);
+        cfg.max_requests = 3;
+        let pool = ServicePool::spawn(cfg);
+        // 4 waves x 3 requests: 4 flushes on one shard, all landing in the
+        // same arena size class.
+        for _ in 0..4 {
+            let rxs: Vec<_> = (0..3).map(|i| pool.generate(100 + i, (0.0, 2.0))).collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        }
+        let snap = pool.telemetry().snapshot();
+        let s = &snap.shards[0];
+        assert_eq!(s.launches, 4);
+        // Exactly ONE generate host task and ONE transform kernel per
+        // flush, one D2H slice per request — the S13 submission shape.
+        assert_eq!(s.generate.cmds, 4);
+        assert_eq!(s.transform.cmds, 4);
+        assert_eq!(s.d2h.cmds, 12);
+        assert!(s.generate.virt_ns > 0);
+        // Warm arena: one cold malloc, every later flush recycles.
+        assert_eq!(s.arena.checkouts, 4);
+        assert_eq!(s.arena.misses, 1);
+        assert_eq!(s.arena.hits, 3);
+        assert_eq!(s.arena.recycles, 4);
+        assert_eq!(s.arena.pooled, 1);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn overflow_lane_rides_the_usm_event_chain() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 4, 1);
+        cfg.policy = DispatchPolicy::fixed(100);
+        let pool = ServicePool::spawn(cfg);
+        for i in 0..3 {
+            let rx = pool.generate(5000 + i, (0.0, 1.0)); // unbatched, canonical
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = pool.telemetry().snapshot();
+        let ov = &snap.shards[1];
+        assert_eq!(ov.lane, Lane::Overflow);
+        // One generate + one D2H per request, no transform (unit range);
+        // the device-lane copies carry real virtual transfer time.
+        assert_eq!(ov.generate.cmds, 3);
+        assert_eq!(ov.transform.cmds, 0);
+        assert_eq!(ov.d2h.cmds, 3);
+        assert!(ov.d2h.virt_ns > 0);
+        // Size classes: 5000-ish requests share one class — 1 miss.
+        assert_eq!(ov.arena.checkouts, 3);
+        assert_eq!(ov.arena.misses, 1);
         pool.shutdown().unwrap();
     }
 

@@ -162,6 +162,28 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
             r.stats.total().launches,
             r.checksum
         );
+        // Fig.-4-style per-kernel-class split of the serving path, from
+        // the workers' drained queue records (virtual clock).
+        let k = r.telemetry.command_breakdown();
+        let arena = r.telemetry.arena_totals();
+        println!(
+            "  kernels (virtual): generate {:.3} ms / {} | transform {:.3} ms / {} | \
+             d2h {:.3} ms / {} | other {:.3} ms",
+            k.generate.virt_ns as f64 / 1e6,
+            k.generate.cmds,
+            k.transform.virt_ns as f64 / 1e6,
+            k.transform.cmds,
+            k.d2h.virt_ns as f64 / 1e6,
+            k.d2h.cmds,
+            k.other.virt_ns as f64 / 1e6
+        );
+        println!(
+            "  arena: {} checkouts, {:.1}% hit rate, {} mallocs, {} KiB pooled",
+            arena.checkouts,
+            arena.hit_rate() * 100.0,
+            arena.misses,
+            arena.pooled_bytes / 1024
+        );
         if let Some(path) = opts.get("stats-json") {
             let json = r.telemetry.to_json().to_json();
             // Guarantee the documented round-trip property before writing.

@@ -7,8 +7,14 @@
 //! SYCL kernel applies the range transformation; the dependency between the
 //! two is derived automatically from the `read_write` accessors.
 //! [`generate_usm`] is the same flow on the pointer path with an explicit
-//! event chain. [`catalog`] enumerates the 36-entry API surface and which
-//! entries each backend class supports (20/36 on cuRAND/hipRAND).
+//! event chain, and [`generate_batch_usm`] coalesces a whole serving
+//! flush — many requests at distinct global stream offsets — into that
+//! same two-kernel shape (one interop host task, one transform kernel)
+//! plus per-member D2H slices. All three write vendor output directly
+//! into accessor/USM memory inside the command closure; there is no
+//! staging copy anywhere on the path. [`catalog`] enumerates the 36-entry
+//! API surface and which entries each backend class supports (20/36 on
+//! cuRAND/hipRAND).
 
 use crate::backends::VendorGenerator;
 use crate::error::Result;
@@ -61,6 +67,13 @@ fn transform_params(distr: &Distribution) -> Option<(f32, f32, bool)> {
 
 /// Buffer-API generate: Listing 1.1 (interop kernel) + Listing 1.2
 /// (transform kernel). Returns the last event.
+///
+/// Error semantics mirror a real runtime: the command group is submitted
+/// and the vendor call fails *inside* the host task, so a rejected
+/// combination (e.g. ICDF on cuRAND) still leaves a recorded — but
+/// data-less — Generate command on the queue (and, on this path, a write
+/// registered against the buffer). Callers must treat the buffer contents
+/// as undefined after an `Err`.
 pub fn generate_buffer(
     queue: &Queue,
     generator: &mut Box<dyn VendorGenerator>,
@@ -72,23 +85,25 @@ pub fn generate_buffer(
 
     // Kernel 1: SYCL interop host task wrapping the vendor call
     // (cgh.codeplay_host_task in the paper's listing). The vendor call
-    // happens *here*, synchronously, against the accessor's native memory.
-    let acc = {
-        // Vendor generation must happen inside the command closure; since
-        // our runtime executes eagerly, generate into a staging vec first
-        // and move it into the closure (numerically identical, keeps the
-        // borrow of `generator` out of the 'static closure).
-        let mut staged = vec![0f32; n];
-        generator.generate_canonical(&distr, &mut staged)?;
-        let name = format!("{}::generate", generator.backend_name());
-        queue.submit(move |cgh| {
-            let acc = cgh.require(buf, AccessMode::ReadWrite);
-            cgh.host_task(name, CommandClass::Generate, generate_kernel_cost(n), move |ih| {
-                let mut mem = ih.get_native_mem(&acc);
-                mem[..n].copy_from_slice(&staged);
-            });
-        })
-    };
+    // happens inside the command closure, writing directly into the
+    // accessor's native memory — no staging allocation, exactly the
+    // paper's `ih.get_native_mem` flow. The closure may borrow
+    // `generator` because command groups execute eagerly.
+    let mut vendor: Result<()> = Ok(());
+    let name = format!("{}::generate", generator.backend_name());
+    // Reborrows moved into the task closure (the task outlives the
+    // command-group closure's body, so it cannot borrow its locals).
+    let vendor_slot = &mut vendor;
+    let gen_ref = &mut *generator;
+    let distr_ref = &distr;
+    let gen_ev = queue.submit(|cgh| {
+        let acc = cgh.require(buf, AccessMode::ReadWrite);
+        cgh.host_task(name, CommandClass::Generate, generate_kernel_cost(n), move |ih| {
+            let mut mem = ih.get_native_mem(&acc);
+            *vendor_slot = gen_ref.generate_canonical(distr_ref, &mut mem[..n]);
+        });
+    });
+    vendor?;
 
     // Kernel 2: the range-transformation kernel (pure SYCL, Listing 1.2).
     // The RAW dependency on kernel 1 is derived from the accessors.
@@ -128,12 +143,15 @@ pub fn generate_buffer(
         });
         return Ok(ev);
     }
-    Ok(acc)
+    Ok(gen_ev)
 }
 
 /// USM-API generate: same two kernels, dependencies threaded explicitly
 /// through the returned events (paper §4.3: "a direct injection of the
-/// event object returned by the command group handler").
+/// event object returned by the command group handler"). As with
+/// [`generate_buffer`], a failing vendor call errors *inside* the
+/// submitted host task: the Generate command stays recorded and the USM
+/// contents are undefined after an `Err`.
 pub fn generate_usm(
     queue: &Queue,
     generator: &mut Box<dyn VendorGenerator>,
@@ -144,29 +162,30 @@ pub fn generate_usm(
 ) -> Result<Event> {
     assert!(usm.len() >= n, "output allocation too small");
 
-    let mut staged = vec![0f32; n];
-    generator.generate_canonical(&distr, &mut staged)?;
+    // The vendor call writes directly into USM memory inside the command
+    // closure — no staging vec (USM submissions were never `'static`, the
+    // staging here was pure legacy).
+    let mut vendor: Result<()> = Ok(());
     let name = format!("{}::generate", generator.backend_name());
-    let usm2 = usm.clone();
     let gen_ev = queue.submit_usm(
         name,
         CommandClass::Generate,
         generate_kernel_cost(n),
         deps,
-        move |_ih| {
-            usm2.lock()[..n].copy_from_slice(&staged);
+        |_ih| {
+            vendor = generator.generate_canonical(&distr, &mut usm.lock()[..n]);
         },
     );
+    vendor?;
 
     if let Some((p0, p1, gaussian)) = transform_params(&distr) {
-        let usm3 = usm.clone();
         let ev = queue.submit_usm(
             "range_transform_fp",
             CommandClass::Transform,
             transform_kernel_cost(n),
             std::slice::from_ref(&gen_ev),
-            move |_ih| {
-                let mut mem = usm3.lock();
+            |_ih| {
+                let mut mem = usm.lock();
                 if gaussian {
                     range_transform::scale_gaussian_inplace(&mut mem[..n], p0, p1);
                 } else {
@@ -177,14 +196,13 @@ pub fn generate_usm(
         return Ok(ev);
     }
     if let Distribution::Lognormal { m, s, .. } = distr {
-        let usm3 = usm.clone();
         let ev = queue.submit_usm(
             "lognormal_transform",
             CommandClass::Transform,
             transform_kernel_cost(n),
             std::slice::from_ref(&gen_ev),
-            move |_ih| {
-                for x in usm3.lock()[..n].iter_mut() {
+            |_ih| {
+                for x in usm.lock()[..n].iter_mut() {
                     *x = (m + s * *x).exp();
                 }
             },
@@ -192,6 +210,160 @@ pub fn generate_usm(
         return Ok(ev);
     }
     Ok(gen_ev)
+}
+
+/// One member of a coalesced USM generate: a slice of the launch buffer
+/// bound to an absolute offset in the global engine stream and its own
+/// output range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchSlice {
+    /// Start of the member's slice inside the launch buffer.
+    pub buffer_offset: usize,
+    /// Absolute offset in the global engine stream (O(1) skip-ahead).
+    pub stream_offset: u64,
+    /// Numbers wanted.
+    pub n: usize,
+    /// Output range `[a, b)`; `(0.0, 1.0)` needs no transform.
+    pub range: (f32, f32),
+}
+
+/// Result of one [`generate_batch_usm`] flush.
+#[derive(Debug)]
+pub struct UsmBatch {
+    /// Per-member readbacks (member order); a member fails alone when its
+    /// vendor call errors, without poisoning the rest of the flush.
+    pub payloads: Vec<Result<Vec<f32>>>,
+    /// The single interop generate host task.
+    pub generate: Event,
+    /// The single range-transform kernel (absent when every member asked
+    /// for the canonical `[0, 1)` range).
+    pub transform: Option<Event>,
+    /// Per-member D2H slice copies, chained behind the last kernel.
+    pub d2h: Vec<Event>,
+}
+
+impl UsmBatch {
+    /// The event completing the whole flush (for chaining into the next
+    /// user of the allocation — e.g. [`crate::sycl::UsmLease::set_pending`]).
+    pub fn last_events(&self) -> Vec<Event> {
+        if self.d2h.is_empty() {
+            let last = self.transform.clone().unwrap_or_else(|| self.generate.clone());
+            vec![last]
+        } else {
+            self.d2h.clone()
+        }
+    }
+}
+
+/// Batched USM generate — the serving path's flush primitive. Renders one
+/// closed batch of `members` (each at its own global stream offset, each
+/// with its own output range) as exactly **one** interop generate host
+/// task + at most **one** range-transform kernel over the whole launch
+/// buffer + one D2H slice copy per member, all chained by events:
+///
+/// ```text
+///   deps ─▶ vendor::generate_batch ─▶ range_transform_fp ─▶ d2h slice 0
+///           (one host task; per-member                  ├▶ d2h slice 1
+///            O(1) skip-ahead inside)                    └▶ ...
+/// ```
+///
+/// Every member observes the bit-exact sub-stream a dedicated engine at
+/// `stream_offset` would produce: the host task skips the shared engine to
+/// each member's offset before generating its slice (counter-based, O(1)),
+/// and the transform kernel applies each member's own affine range.
+pub fn generate_batch_usm(
+    queue: &Queue,
+    generator: &mut dyn VendorGenerator,
+    members: &[BatchSlice],
+    launch_n: usize,
+    usm: &UsmBuffer<f32>,
+    deps: &[Event],
+) -> Result<UsmBatch> {
+    if members.is_empty() {
+        return Err(crate::error::Error::InvalidArgument(
+            "generate_batch_usm: empty batch".into(),
+        ));
+    }
+    assert!(usm.len() >= launch_n, "launch allocation too small");
+    for m in members {
+        assert!(
+            m.buffer_offset + m.n <= launch_n,
+            "batch member overruns the launch buffer"
+        );
+    }
+
+    let canonical = Distribution::uniform(0.0, 1.0);
+    let mut member_res: Vec<Result<()>> = Vec::with_capacity(members.len());
+    let name = format!("{}::generate_batch", generator.backend_name());
+    let gen_ev = queue.submit_usm(
+        name,
+        CommandClass::Generate,
+        generate_kernel_cost(launch_n),
+        deps,
+        |_ih| {
+            let mut mem = usm.lock();
+            for m in members {
+                let out = &mut mem[m.buffer_offset..m.buffer_offset + m.n];
+                let r = generator
+                    .set_offset(m.stream_offset)
+                    .and_then(|()| generator.generate_canonical(&canonical, out));
+                member_res.push(r);
+            }
+        },
+    );
+
+    // One transform kernel for the whole flush: each member's own affine
+    // range applied to its slice (skipped entirely when every member is
+    // canonical — matching the single-request path's record shape). The
+    // kernel is costed by the items it actually transforms, so a mixed
+    // canonical/ranged batch does not overstate the transform share in
+    // the per-command-class telemetry.
+    let transform_items: usize = members
+        .iter()
+        .zip(&member_res)
+        .filter(|(m, r)| r.is_ok() && m.range != (0.0, 1.0))
+        .map(|(m, _)| m.n)
+        .sum();
+    let transform_ev = (transform_items > 0).then(|| {
+        queue.submit_usm(
+            "range_transform_fp",
+            CommandClass::Transform,
+            transform_kernel_cost(transform_items),
+            std::slice::from_ref(&gen_ev),
+            |_ih| {
+                let mut mem = usm.lock();
+                for (m, r) in members.iter().zip(&member_res) {
+                    if r.is_ok() && m.range != (0.0, 1.0) {
+                        range_transform::range_transform_inplace(
+                            &mut mem[m.buffer_offset..m.buffer_offset + m.n],
+                            m.range.0,
+                            m.range.1,
+                        );
+                    }
+                }
+            },
+        )
+    });
+
+    let last = transform_ev.as_ref().unwrap_or(&gen_ev).clone();
+    let mut payloads = Vec::with_capacity(members.len());
+    let mut d2h = Vec::with_capacity(members.len());
+    for (m, r) in members.iter().zip(member_res) {
+        match r {
+            Ok(()) => {
+                let (data, ev) = queue.usm_slice_to_host(
+                    usm,
+                    m.buffer_offset,
+                    m.n,
+                    std::slice::from_ref(&last),
+                );
+                payloads.push(Ok(data));
+                d2h.push(ev);
+            }
+            Err(e) => payloads.push(Err(e)),
+        }
+    }
+    Ok(UsmBatch { payloads, generate: gen_ev, transform: transform_ev, d2h })
 }
 
 /// Output type of a generate entry point.
@@ -440,6 +612,85 @@ mod tests {
         assert!(parse_distribution("nope", &[]).is_err());
         let g = parse_distribution("gaussian", &[3.0, 0.5]).unwrap();
         assert_eq!(g, Distribution::gaussian(3.0, 0.5));
+    }
+
+    #[test]
+    fn batch_usm_matches_dedicated_engines_with_one_kernel_pair() {
+        let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let backend = CurandBackend::new();
+        let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 77).unwrap();
+        // Mixed sizes/offsets/ranges, deliberately not multiples of 4.
+        let members = [
+            BatchSlice { buffer_offset: 0, stream_offset: 500, n: 33, range: (0.0, 1.0) },
+            BatchSlice { buffer_offset: 33, stream_offset: 0, n: 101, range: (-2.0, 2.0) },
+            BatchSlice { buffer_offset: 134, stream_offset: 7_777, n: 66, range: (5.0, 9.0) },
+        ];
+        let usm = queue.malloc_device::<f32>(256);
+        let batch = generate_batch_usm(&queue, gen.as_mut(), &members, 200, &usm, &[]).unwrap();
+
+        for (m, payload) in members.iter().zip(&batch.payloads) {
+            let got = payload.as_ref().unwrap();
+            let mut want = vec![0f32; m.n];
+            let mut e = PhiloxEngine::with_offset(77, m.stream_offset);
+            e.fill_uniform_f32(&mut want);
+            if m.range != (0.0, 1.0) {
+                range_transform::range_transform_inplace(&mut want, m.range.0, m.range.1);
+            }
+            assert_eq!(got, &want, "member at stream offset {}", m.stream_offset);
+        }
+
+        // Exactly ONE generate host task + ONE transform kernel for the
+        // whole flush, one D2H per member, all correctly chained.
+        let records = queue.records();
+        let count = |c: CommandClass| records.iter().filter(|r| r.class == c).count();
+        assert_eq!(count(CommandClass::Generate), 1);
+        assert_eq!(count(CommandClass::Transform), 1);
+        assert_eq!(count(CommandClass::TransferD2H), members.len());
+        let transform = batch.transform.as_ref().unwrap();
+        assert!(transform.profiling_command_start() >= batch.generate.profiling_command_end());
+        for ev in &batch.d2h {
+            assert!(ev.profiling_command_start() >= transform.profiling_command_end());
+        }
+    }
+
+    #[test]
+    fn batch_usm_single_member_parity_with_unbatched_paths() {
+        let distr = Distribution::uniform(-1.0, 3.0);
+        let n = 999;
+
+        let qb = Queue::new(PlatformId::Vega56, SyclRuntimeProfile::HipSycl);
+        let backend = crate::backends::HiprandBackend::new();
+        let mut g1 = backend.create_generator(EngineKind::Philox4x32x10, 5).unwrap();
+        let buf = Buffer::<f32>::new(n);
+        generate_buffer(&qb, &mut g1, distr, n, &buf).unwrap();
+
+        let qx = Queue::new(PlatformId::Vega56, SyclRuntimeProfile::HipSycl);
+        let mut g2 = backend.create_generator(EngineKind::Philox4x32x10, 5).unwrap();
+        let usm = qx.malloc_device::<f32>(1024);
+        let member =
+            BatchSlice { buffer_offset: 0, stream_offset: 0, n, range: (-1.0, 3.0) };
+        let batch = generate_batch_usm(&qx, g2.as_mut(), &[member], n, &usm, &[]).unwrap();
+        assert_eq!(batch.payloads[0].as_ref().unwrap(), &qb.host_read(&buf));
+    }
+
+    #[test]
+    fn batch_usm_all_canonical_skips_the_transform_kernel() {
+        let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let backend = CurandBackend::new();
+        let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 1).unwrap();
+        let members = [
+            BatchSlice { buffer_offset: 0, stream_offset: 0, n: 64, range: (0.0, 1.0) },
+            BatchSlice { buffer_offset: 64, stream_offset: 64, n: 64, range: (0.0, 1.0) },
+        ];
+        let usm = queue.malloc_device::<f32>(128);
+        let batch = generate_batch_usm(&queue, gen.as_mut(), &members, 128, &usm, &[]).unwrap();
+        assert!(batch.transform.is_none());
+        // The flush's last events are the D2H copies, chained on generate.
+        assert_eq!(batch.last_events().len(), 2);
+        for ev in &batch.d2h {
+            assert!(ev.profiling_command_start() >= batch.generate.profiling_command_end());
+        }
+        assert!(generate_batch_usm(&queue, gen.as_mut(), &[], 0, &usm, &[]).is_err());
     }
 
     #[test]

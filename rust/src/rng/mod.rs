@@ -12,7 +12,10 @@ pub mod range_transform;
 
 pub use distributions::{Distribution, GaussianMethod, UniformMethod};
 pub use engines::{Engine, EngineKind, PhiloxEngine};
-pub use generate::{generate_buffer, generate_usm, parse_distribution, GenerateApi};
+pub use generate::{
+    generate_batch_usm, generate_buffer, generate_usm, parse_distribution, BatchSlice,
+    GenerateApi, UsmBatch,
+};
 pub use range_transform::range_transform_inplace;
 
 /// Canonical u32 -> f32 `[0, 1)` conversion (DESIGN.md §4): keep the top 24

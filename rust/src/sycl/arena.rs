@@ -1,0 +1,294 @@
+//! USM allocation arena: size-class recycling for serving workloads
+//! (DESIGN.md S13).
+//!
+//! `malloc_device` is a blocking host call (tens of microseconds on the
+//! discrete GPUs — [`crate::platform::PlatformSpec::malloc_ns`]), which is
+//! fine for a one-shot benchmark and fatal on a serving hot path issuing a
+//! launch per flush. [`UsmArena`] sits between a worker and its
+//! [`Queue`]: allocations are rounded up to power-of-two size classes,
+//! checked out as [`UsmLease`]s and parked back in per-class free lists on
+//! recycle, so a steady-state worker performs **zero** device mallocs —
+//! every flush reuses a warm allocation.
+//!
+//! USM dependencies are the user's responsibility (paper §4.1), and a
+//! recycled allocation is the classic place to forget them: the next
+//! writer must wait for the previous user's reads. The arena carries that
+//! bookkeeping for free — each lease stores the events of the last
+//! commands touching its buffer ([`UsmLease::set_pending`]), and a
+//! checkout hands them back ([`UsmLease::deps`]) so the next flush chains
+//! its generate submission behind them.
+
+use std::sync::Mutex;
+
+use super::event::Event;
+use super::queue::Queue;
+use super::usm::UsmBuffer;
+
+/// Occupancy and traffic counters for a [`UsmArena`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ArenaStats {
+    /// Leases handed out.
+    pub checkouts: u64,
+    /// Checkouts served from a parked allocation (no device malloc).
+    pub hits: u64,
+    /// Checkouts that had to `malloc_device` (cold class).
+    pub misses: u64,
+    /// Leases returned to the free lists.
+    pub recycles: u64,
+    /// Leases currently checked out.
+    pub live: u64,
+    /// Allocations parked in the free lists.
+    pub pooled: u64,
+    /// Bytes parked in the free lists.
+    pub pooled_bytes: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served without a device malloc (0 when the
+    /// arena is untouched).
+    pub fn hit_rate(&self) -> f64 {
+        if self.checkouts == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.checkouts as f64
+        }
+    }
+}
+
+struct Parked<T> {
+    buf: UsmBuffer<T>,
+    /// Last commands that touched the buffer — the dependency set the
+    /// next checkout must chain behind.
+    pending: Vec<Event>,
+}
+
+struct ArenaState<T> {
+    /// Free lists indexed by size class (class `c` holds `1 << c`-element
+    /// allocations).
+    free: Vec<Vec<Parked<T>>>,
+    stats: ArenaStats,
+}
+
+/// A worker-owned pool of recycled [`UsmBuffer`] allocations in
+/// power-of-two size classes.
+pub struct UsmArena<T> {
+    state: Mutex<ArenaState<T>>,
+}
+
+/// Size class for an `n`-element request: smallest power of two >= n.
+fn class_of(n: usize) -> usize {
+    (usize::BITS - n.max(1).next_power_of_two().leading_zeros() - 1) as usize
+}
+
+impl<T: Clone + Default + Send + 'static> UsmArena<T> {
+    /// Empty arena (allocations happen lazily on checkout misses).
+    pub fn new() -> UsmArena<T> {
+        UsmArena {
+            state: Mutex::new(ArenaState {
+                free: (0..usize::BITS as usize).map(|_| Vec::new()).collect(),
+                stats: ArenaStats::default(),
+            }),
+        }
+    }
+
+    /// Check out an allocation of at least `n` elements. A parked
+    /// allocation of the matching size class is reused (hit); otherwise
+    /// `queue.malloc_device` pays the real allocation cost (miss). The
+    /// lease recycles itself back into the arena on drop.
+    pub fn checkout(&self, queue: &Queue, n: usize) -> UsmLease<'_, T> {
+        let class = class_of(n);
+        let parked = {
+            let mut st = self.state.lock().unwrap();
+            st.stats.checkouts += 1;
+            st.stats.live += 1;
+            match st.free[class].pop() {
+                Some(p) => {
+                    st.stats.hits += 1;
+                    st.stats.pooled -= 1;
+                    st.stats.pooled_bytes -=
+                        ((1usize << class) * std::mem::size_of::<T>()) as u64;
+                    Some(p)
+                }
+                None => {
+                    st.stats.misses += 1;
+                    None
+                }
+            }
+        };
+        // The miss path mallocs outside the state lock: the queue models
+        // the blocking host call and must not serialise other checkouts.
+        let parked = parked.unwrap_or_else(|| Parked {
+            buf: queue.malloc_device::<T>(1usize << class),
+            pending: Vec::new(),
+        });
+        UsmLease { arena: self, class, buf: Some(parked.buf), pending: parked.pending }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ArenaStats {
+        self.state.lock().unwrap().stats
+    }
+
+    fn park(&self, class: usize, buf: UsmBuffer<T>, pending: Vec<Event>) {
+        let mut st = self.state.lock().unwrap();
+        st.stats.recycles += 1;
+        st.stats.live -= 1;
+        st.stats.pooled += 1;
+        st.stats.pooled_bytes += ((1usize << class) * std::mem::size_of::<T>()) as u64;
+        st.free[class].push(Parked { buf, pending });
+    }
+}
+
+impl<T: Clone + Default + Send + 'static> Default for UsmArena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A checked-out arena allocation. Dropping (or [`UsmLease::recycle`]-ing)
+/// parks the buffer back in the arena's free list together with the
+/// pending events recorded through [`UsmLease::set_pending`].
+pub struct UsmLease<'a, T: Clone + Default + Send + 'static> {
+    arena: &'a UsmArena<T>,
+    class: usize,
+    buf: Option<UsmBuffer<T>>,
+    pending: Vec<Event>,
+}
+
+impl<T: Clone + Default + Send + 'static> UsmLease<'_, T> {
+    /// The leased allocation (capacity `>=` the requested element count).
+    pub fn buffer(&self) -> &UsmBuffer<T> {
+        self.buf.as_ref().expect("lease already recycled")
+    }
+
+    /// Capacity in elements (the size class, not the requested count).
+    pub fn capacity(&self) -> usize {
+        1usize << self.class
+    }
+
+    /// Events of the last commands that touched this allocation before it
+    /// was recycled — the dependency set a new user must chain behind
+    /// (USM hazards are explicit; see module docs).
+    pub fn deps(&self) -> &[Event] {
+        &self.pending
+    }
+
+    /// Record the events of the commands this lease submitted, replacing
+    /// the inherited set; they travel with the buffer into the free list.
+    pub fn set_pending(&mut self, events: Vec<Event>) {
+        self.pending = events;
+    }
+
+    /// Return the allocation to the arena (also happens on drop).
+    pub fn recycle(self) {}
+}
+
+impl<T: Clone + Default + Send + 'static> Drop for UsmLease<'_, T> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.arena.park(self.class, buf, std::mem::take(&mut self.pending));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+    use crate::sycl::SyclRuntimeProfile;
+
+    fn q() -> Queue {
+        Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp)
+    }
+
+    #[test]
+    fn size_classes_are_power_of_two_ceilings() {
+        assert_eq!(class_of(0), 0);
+        assert_eq!(class_of(1), 0);
+        assert_eq!(class_of(2), 1);
+        assert_eq!(class_of(3), 2);
+        assert_eq!(class_of(4), 2);
+        assert_eq!(class_of(5), 3);
+        assert_eq!(class_of(1 << 20), 20);
+        assert_eq!(class_of((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn checkout_recycle_checkout_hits_the_same_allocation() {
+        let queue = q();
+        let arena: UsmArena<f32> = UsmArena::new();
+        let first_id = {
+            let lease = arena.checkout(&queue, 1000);
+            assert!(lease.capacity() >= 1000);
+            lease.buffer().id()
+        }; // drop recycles
+        let lease = arena.checkout(&queue, 900); // same class (1024)
+        assert_eq!(lease.buffer().id(), first_id);
+        let s = arena.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.recycles, 1);
+        assert_eq!(s.live, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_classes_do_not_share_allocations() {
+        let queue = q();
+        let arena: UsmArena<f32> = UsmArena::new();
+        let small = arena.checkout(&queue, 100);
+        let large = arena.checkout(&queue, 100_000);
+        assert_ne!(small.buffer().id(), large.buffer().id());
+        assert_ne!(small.capacity(), large.capacity());
+        drop(small);
+        drop(large);
+        let s = arena.stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.pooled, 2);
+        assert_eq!(
+            s.pooled_bytes,
+            ((128 + 131_072) * std::mem::size_of::<f32>()) as u64
+        );
+    }
+
+    #[test]
+    fn pending_events_travel_with_the_recycled_buffer() {
+        use crate::platform::CommandCost;
+        use crate::sycl::CommandClass;
+        let queue = q();
+        let arena: UsmArena<f32> = UsmArena::new();
+        let mut lease = arena.checkout(&queue, 64);
+        let ev = queue.submit_usm(
+            "touch",
+            CommandClass::Generate,
+            CommandCost::Kernel { bytes_read: 0, bytes_written: 256, items: 64, tpb: 0 },
+            &[],
+            |_| {},
+        );
+        lease.set_pending(vec![ev.clone()]);
+        lease.recycle();
+        let next = arena.checkout(&queue, 64);
+        assert_eq!(next.deps().len(), 1);
+        assert_eq!(next.deps()[0].id(), ev.id());
+        // A cold checkout carries no inherited hazards.
+        let cold = arena.checkout(&queue, 64);
+        assert!(cold.deps().is_empty());
+    }
+
+    #[test]
+    fn steady_state_serves_without_mallocs() {
+        let queue = q();
+        let arena: UsmArena<f32> = UsmArena::new();
+        for _ in 0..100 {
+            let lease = arena.checkout(&queue, 4096);
+            lease.recycle();
+        }
+        let s = arena.stats();
+        assert_eq!(s.checkouts, 100);
+        assert_eq!(s.misses, 1);
+        assert!(s.hit_rate() > 0.98);
+        assert_eq!(s.live, 0);
+        assert_eq!(s.pooled, 1);
+    }
+}

@@ -11,6 +11,8 @@
 //!   commands on non-UMA devices.
 //! * **USM** allocations take the pointer-based path: no accessors, the
 //!   *user* supplies explicit event dependency lists (paper §4.1).
+//!   [`UsmArena`] recycles them in size classes for serving workloads,
+//!   carrying each allocation's pending events across reuse (S13).
 //! * **Host tasks** are the interoperability mechanism (the paper's
 //!   `codeplay_host_task`): closures that run on the host, receive an
 //!   [`InteropHandle`], and produce side effects attributed to the device
@@ -22,6 +24,7 @@
 //! serialises them. Profiling info on [`Event`]s mirrors
 //! `info::event_profiling`.
 
+mod arena;
 mod buffer;
 mod dag;
 mod event;
@@ -30,6 +33,7 @@ mod profile;
 mod queue;
 mod usm;
 
+pub use arena::{ArenaStats, UsmArena, UsmLease};
 pub use buffer::{AccessMode, Buffer};
 pub use dag::{Dag, DagStats};
 pub use event::{CommandClass, CommandRecord, Event};

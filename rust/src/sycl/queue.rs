@@ -46,18 +46,24 @@ struct AccessorDecl {
     deps: Arc<Mutex<BufferDeps>>,
 }
 
-type Task = Box<dyn FnOnce(&InteropHandle) + 'static>;
+type Task<'scope> = Box<dyn FnOnce(&InteropHandle) + 'scope>;
 
 /// Builder passed to the `queue.submit(|cgh| ...)` closure — the SYCL
 /// command-group handler.
-pub struct CommandGroupHandler<'q> {
+///
+/// `'scope` is the lifetime of borrows the command closure may capture:
+/// because this runtime executes command groups eagerly (the closure runs
+/// inside [`Queue::submit`], before it returns), the closure does not need
+/// to be `'static` — it may borrow the caller's generator handle and write
+/// vendor output directly into accessor memory, with no staging copy.
+pub struct CommandGroupHandler<'q, 'scope> {
     queue: &'q Queue,
     accessors: Vec<AccessorDecl>,
     explicit_deps: Vec<Event>,
-    task: Option<(String, CommandClass, CommandCost, Task)>,
+    task: Option<(String, CommandClass, CommandCost, Task<'scope>)>,
 }
 
-impl<'q> CommandGroupHandler<'q> {
+impl<'q, 'scope> CommandGroupHandler<'q, 'scope> {
     /// Declare a buffer accessor (`buffer.get_access<mode>(cgh)`).
     pub fn require<T: Clone + Default + Send + 'static>(
         &mut self,
@@ -86,7 +92,7 @@ impl<'q> CommandGroupHandler<'q> {
         name: impl Into<String>,
         class: CommandClass,
         cost: CommandCost,
-        f: impl FnOnce(&InteropHandle) + 'static,
+        f: impl FnOnce(&InteropHandle) + 'scope,
     ) {
         debug_assert!(self.task.is_none(), "one command per group");
         self.task = Some((name.into(), class, cost, Box::new(f)));
@@ -100,7 +106,7 @@ impl<'q> CommandGroupHandler<'q> {
         name: impl Into<String>,
         class: CommandClass,
         cost: CommandCost,
-        f: impl FnOnce(&InteropHandle) + 'static,
+        f: impl FnOnce(&InteropHandle) + 'scope,
     ) {
         self.host_task(name, class, cost, f);
     }
@@ -194,10 +200,12 @@ impl Queue {
         self.state.lock().unwrap().noise_salt = salt;
     }
 
-    /// Submit a command group; returns its completion event.
-    pub fn submit<F>(&self, f: F) -> Event
+    /// Submit a command group; returns its completion event. The command
+    /// closure may borrow from the caller (`'scope`): execution is eager,
+    /// so the closure runs — and its borrows end — before `submit` returns.
+    pub fn submit<'scope, F>(&self, f: F) -> Event
     where
-        F: FnOnce(&mut CommandGroupHandler),
+        F: for<'q> FnOnce(&mut CommandGroupHandler<'q, 'scope>),
     {
         let mut cgh = CommandGroupHandler {
             queue: self,
@@ -347,6 +355,35 @@ impl Queue {
         usm.snapshot()
     }
 
+    /// Asynchronous USM D2H copy of `usm[offset..offset + len]`
+    /// (`queue.memcpy` from a pointer interior). Unlike
+    /// [`Queue::usm_to_host`] the *host* does not block: ordering is
+    /// carried by the returned [`Event`] (chain it into later submissions
+    /// or wait on the queue). The batched serving path issues one of these
+    /// per batch member, all depending on the flush's transform event.
+    pub fn usm_slice_to_host<T: Clone + Default + Send + 'static>(
+        &self,
+        usm: &UsmBuffer<T>,
+        offset: usize,
+        len: usize,
+        deps: &[Event],
+    ) -> (Vec<T>, Event) {
+        let bytes = (len * std::mem::size_of::<T>()) as u64;
+        let mut st = self.state.lock().unwrap();
+        st.host_now_ns += self.profile.usm_dep_wait_ns() * deps.len() as u64;
+        let ev = self.record_command(
+            &mut st,
+            format!("d2h:usm{}+{offset}", usm.id()),
+            CommandClass::TransferD2H,
+            CommandCost::Transfer { bytes, dir: crate::platform::TransferDir::D2H },
+            deps,
+            0,
+        );
+        drop(st);
+        let data = usm.lock()[offset..offset + len].to_vec();
+        (data, ev)
+    }
+
     /// Model host-side work of known duration between submissions.
     pub fn advance_host(&self, ns: u64) {
         self.state.lock().unwrap().host_now_ns += ns;
@@ -366,8 +403,38 @@ impl Queue {
     }
 
     /// Executed-command records (DAG introspection, Fig. 4 breakdown).
+    ///
+    /// Clones the full record vec — fine for tests and one-shot analysis,
+    /// wrong for hot loops. Aggregation paths should use
+    /// [`Queue::visit_records`] (no copy) and long-lived queues should
+    /// bound their memory with [`Queue::drain_records`].
     pub fn records(&self) -> Vec<CommandRecord> {
         self.state.lock().unwrap().records.clone()
+    }
+
+    /// Number of executed-command records currently retained.
+    pub fn records_len(&self) -> usize {
+        self.state.lock().unwrap().records.len()
+    }
+
+    /// Visit every retained record in submission order without cloning —
+    /// the accounting path for benches and the burner breakdown.
+    ///
+    /// The queue's internal lock is held while iterating: `f` must not
+    /// call back into the same queue (submit/read/drain would deadlock on
+    /// the non-reentrant mutex). Pure aggregation only.
+    pub fn visit_records<F: FnMut(&CommandRecord)>(&self, mut f: F) {
+        for r in &self.state.lock().unwrap().records {
+            f(r);
+        }
+    }
+
+    /// Take ownership of the retained records, leaving the queue's record
+    /// log empty (timeline state — virtual clocks, channel availability,
+    /// command ids — is unaffected). Long-lived worker queues drain after
+    /// every flush so the log never grows with uptime.
+    pub fn drain_records(&self) -> Vec<CommandRecord> {
+        std::mem::take(&mut self.state.lock().unwrap().records)
     }
 
     fn buffer_deps(&self, decl: &AccessorDecl, for_transfer: bool) -> Vec<Event> {
@@ -668,5 +735,73 @@ mod tests {
             });
         });
         assert!(w2.profiling_command_start() >= r.profiling_command_end());
+    }
+
+    #[test]
+    fn command_closures_may_borrow_the_caller() {
+        // The zero-staging contract: a host task may capture &mut state
+        // from the submitting scope because execution is eager.
+        let queue = q();
+        let buf = Buffer::<f32>::new(16);
+        let mut calls = 0usize;
+        queue.submit(|cgh| {
+            let acc = cgh.require(&buf, AccessMode::ReadWrite);
+            cgh.host_task("gen", CommandClass::Generate, kernel_cost(16), |ih| {
+                let mut mem = ih.get_native_mem(&acc);
+                mem[0] = 7.0;
+                calls += 1;
+            });
+        });
+        assert_eq!(calls, 1);
+        assert_eq!(buf.snapshot()[0], 7.0);
+    }
+
+    #[test]
+    fn record_visiting_and_draining_match_the_cloning_path() {
+        let queue = q();
+        let buf = Buffer::<f32>::new(1 << 12);
+        for _ in 0..3 {
+            queue.submit(|cgh| {
+                let acc = cgh.require(&buf, AccessMode::ReadWrite);
+                cgh.host_task("k", CommandClass::Generate, kernel_cost(1 << 12), move |_| {
+                    let _ = acc;
+                });
+            });
+        }
+        let cloned = queue.records();
+        assert_eq!(queue.records_len(), cloned.len());
+        let mut visited = 0usize;
+        queue.visit_records(|r| {
+            assert_eq!(r.id, cloned[visited].id);
+            visited += 1;
+        });
+        assert_eq!(visited, cloned.len());
+
+        let drained = queue.drain_records();
+        assert_eq!(drained.len(), cloned.len());
+        assert_eq!(queue.records_len(), 0);
+        // Draining does not reset the timeline: new commands keep fresh
+        // ids and start no earlier than the drained ones ended.
+        let ev = queue.submit_usm("k2", CommandClass::Generate, kernel_cost(16), &[], |_| {});
+        assert!(ev.id() > drained.last().unwrap().id);
+        assert_eq!(queue.records_len(), 1);
+    }
+
+    #[test]
+    fn usm_slice_readback_is_event_chained_not_host_blocking() {
+        let queue = q();
+        let usm = queue.malloc_device::<f32>(64);
+        usm.lock()[10] = 5.0;
+        let gen = queue.submit_usm("gen", CommandClass::Generate, kernel_cost(64), &[], |_| {});
+        let host_before = queue.virtual_now_ns();
+        let (data, ev) = queue.usm_slice_to_host(&usm, 10, 4, std::slice::from_ref(&gen));
+        assert_eq!(data, vec![5.0, 0.0, 0.0, 0.0]);
+        // Chained: the copy starts after the producer ends ...
+        assert!(ev.profiling_command_start() >= gen.profiling_command_end());
+        assert_eq!(ev.class(), CommandClass::TransferD2H);
+        // ... but the host does not sit out the transfer (unlike
+        // `usm_to_host`, which advances host time to the copy's end).
+        assert!(queue.virtual_now_ns() < ev.profiling_command_end());
+        let _ = host_before;
     }
 }

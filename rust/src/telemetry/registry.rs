@@ -10,8 +10,12 @@
 //!
 //! [`TelemetryRegistry::snapshot`] copies everything into a plain
 //! [`TelemetrySnapshot`] that serializes through `jsonlite`
-//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v1`, see
-//! README "Telemetry snapshot schema").
+//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v2`, see
+//! README "Telemetry snapshot schema"). v2 adds per-command-class virtual
+//! timings ([`CommandTiming`]: generate / transform / d2h / other, fed
+//! from drained queue records) and the worker arena's allocation counters
+//! ([`ArenaCounters`]) to every shard — what the autotuner and the Fig. 4
+//! style breakdown read; v1 (counters + histograms only) is superseded.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,7 +29,153 @@ use crate::platform::PlatformId;
 use super::histogram::{HistogramSnapshot, Log2Histogram};
 
 /// Telemetry snapshot schema identifier (bump on breaking changes).
-pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v1";
+/// v1 (no per-command-class timings, no arena counters) is superseded.
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v2";
+
+/// Command classes the serving path times. Mirrors
+/// `sycl::CommandClass` for the classes the pool's flushes issue —
+/// defined here, like [`Lane`], so the telemetry layer stays independent
+/// of the substrate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommandKind {
+    /// The interop generate host task.
+    Generate,
+    /// The range-transform kernel.
+    Transform,
+    /// Device-to-host slice copies.
+    TransferD2H,
+    /// Everything else on the worker queue (mallocs, setup, ...).
+    Other,
+}
+
+impl CommandKind {
+    /// All kinds, snapshot order.
+    pub const ALL: [CommandKind; 4] = [
+        CommandKind::Generate,
+        CommandKind::Transform,
+        CommandKind::TransferD2H,
+        CommandKind::Other,
+    ];
+
+    /// Stable label used in snapshots.
+    pub fn token(self) -> &'static str {
+        match self {
+            CommandKind::Generate => "generate",
+            CommandKind::Transform => "transform",
+            CommandKind::TransferD2H => "d2h",
+            CommandKind::Other => "other",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            CommandKind::Generate => 0,
+            CommandKind::Transform => 1,
+            CommandKind::TransferD2H => 2,
+            CommandKind::Other => 3,
+        }
+    }
+}
+
+/// Command count + summed virtual duration of one command class.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommandTiming {
+    /// Commands executed.
+    pub cmds: u64,
+    /// Summed virtual duration, ns.
+    pub virt_ns: u64,
+}
+
+impl CommandTiming {
+    fn merged(self, other: CommandTiming) -> CommandTiming {
+        CommandTiming { cmds: self.cmds + other.cmds, virt_ns: self.virt_ns + other.virt_ns }
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("cmds".into(), Value::Number(self.cmds as f64));
+        m.insert("virt_ns".into(), Value::Number(self.virt_ns as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<CommandTiming> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("command timing missing `{key}`")))
+        };
+        Ok(CommandTiming { cmds: num("cmds")?, virt_ns: num("virt_ns")? })
+    }
+}
+
+/// Point-in-time copy of a worker's USM-arena counters (mirror of
+/// `sycl::ArenaStats`, defined here to keep the layer independent).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaCounters {
+    /// Leases handed out.
+    pub checkouts: u64,
+    /// Checkouts served from a parked allocation.
+    pub hits: u64,
+    /// Checkouts that had to allocate (cold class).
+    pub misses: u64,
+    /// Leases returned to the free lists.
+    pub recycles: u64,
+    /// Allocations parked in the free lists.
+    pub pooled: u64,
+    /// Bytes parked in the free lists.
+    pub pooled_bytes: u64,
+}
+
+impl ArenaCounters {
+    /// Fraction of checkouts served without an allocation.
+    pub fn hit_rate(&self) -> f64 {
+        if self.checkouts == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.checkouts as f64
+        }
+    }
+
+    fn merged(self, other: ArenaCounters) -> ArenaCounters {
+        ArenaCounters {
+            checkouts: self.checkouts + other.checkouts,
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            recycles: self.recycles + other.recycles,
+            pooled: self.pooled + other.pooled,
+            pooled_bytes: self.pooled_bytes + other.pooled_bytes,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("checkouts".into(), Value::Number(self.checkouts as f64));
+        m.insert("hits".into(), Value::Number(self.hits as f64));
+        m.insert("misses".into(), Value::Number(self.misses as f64));
+        m.insert("recycles".into(), Value::Number(self.recycles as f64));
+        m.insert("pooled".into(), Value::Number(self.pooled as f64));
+        m.insert("pooled_bytes".into(), Value::Number(self.pooled_bytes as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<ArenaCounters> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("arena counters missing `{key}`")))
+        };
+        Ok(ArenaCounters {
+            checkouts: num("checkouts")?,
+            hits: num("hits")?,
+            misses: num("misses")?,
+            recycles: num("recycles")?,
+            pooled: num("pooled")?,
+            pooled_bytes: num("pooled_bytes")?,
+        })
+    }
+}
 
 /// Which lane a shard serves (mirrors `coordinator::Route`, defined here
 /// so the telemetry layer does not depend on the coordinator).
@@ -72,6 +222,15 @@ pub struct ShardTelemetry {
     launch_ns: Log2Histogram,
     batch_fill: Log2Histogram,
     request_n: Log2Histogram,
+    /// Per-command-class counts/virtual-ns, indexed by `CommandKind`.
+    command_cmds: [AtomicU64; 4],
+    command_virt_ns: [AtomicU64; 4],
+    /// Latest worker-arena counters, published whole once per flush — a
+    /// mutex (not the request path: one uncontended lock per flush) so a
+    /// concurrent snapshot can never observe counters torn across two
+    /// flushes (hits from one, checkouts from another would make the
+    /// allocation gate's deltas lie).
+    arena: std::sync::Mutex<ArenaCounters>,
 }
 
 impl ShardTelemetry {
@@ -88,6 +247,9 @@ impl ShardTelemetry {
             launch_ns: Log2Histogram::new(),
             batch_fill: Log2Histogram::new(),
             request_n: Log2Histogram::new(),
+            command_cmds: std::array::from_fn(|_| AtomicU64::new(0)),
+            command_virt_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            arena: std::sync::Mutex::new(ArenaCounters::default()),
         }
     }
 
@@ -119,8 +281,29 @@ impl ShardTelemetry {
         self.failures.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Fold one executed command's virtual duration into the per-class
+    /// timings — workers call this while draining their queue's records
+    /// after a flush, so autotune sees where the time actually goes
+    /// (generate vs transform vs D2H).
+    pub fn record_command(&self, kind: CommandKind, virt_ns: u64) {
+        self.command_cmds[kind.index()].fetch_add(1, Ordering::Relaxed);
+        self.command_virt_ns[kind.index()].fetch_add(virt_ns, Ordering::Relaxed);
+    }
+
+    /// Publish the worker arena's current counters (absolute values — the
+    /// worker owns the arena and pushes its stats once per flush). The
+    /// whole set swaps atomically, so snapshots never mix two flushes.
+    pub fn set_arena(&self, c: ArenaCounters) {
+        *self.arena.lock().unwrap() = c;
+    }
+
     /// Copy this shard's counters out.
     pub fn snapshot(&self) -> ShardSnapshot {
+        let timing = |k: CommandKind| CommandTiming {
+            cmds: self.command_cmds[k.index()].load(Ordering::Relaxed),
+            virt_ns: self.command_virt_ns[k.index()].load(Ordering::Relaxed),
+        };
+        let arena = *self.arena.lock().unwrap();
         ShardSnapshot {
             shard: self.shard,
             lane: self.lane,
@@ -133,6 +316,11 @@ impl ShardTelemetry {
             launch_ns: self.launch_ns.snapshot(),
             batch_fill: self.batch_fill.snapshot(),
             request_n: self.request_n.snapshot(),
+            generate: timing(CommandKind::Generate),
+            transform: timing(CommandKind::Transform),
+            d2h: timing(CommandKind::TransferD2H),
+            other: timing(CommandKind::Other),
+            arena,
         }
     }
 }
@@ -229,6 +417,16 @@ pub struct ShardSnapshot {
     pub batch_fill: HistogramSnapshot,
     /// Request sizes seen.
     pub request_n: HistogramSnapshot,
+    /// Generate host tasks executed on the worker queue (virtual ns).
+    pub generate: CommandTiming,
+    /// Range-transform kernels executed (virtual ns).
+    pub transform: CommandTiming,
+    /// D2H slice copies executed (virtual ns).
+    pub d2h: CommandTiming,
+    /// Everything else on the worker queue (mallocs, setup; virtual ns).
+    pub other: CommandTiming,
+    /// Worker USM-arena counters at snapshot time.
+    pub arena: ArenaCounters,
 }
 
 impl ShardSnapshot {
@@ -245,6 +443,13 @@ impl ShardSnapshot {
         m.insert("launch_ns".into(), self.launch_ns.to_json());
         m.insert("batch_fill".into(), self.batch_fill.to_json());
         m.insert("request_n".into(), self.request_n.to_json());
+        let mut commands = BTreeMap::new();
+        commands.insert("generate".into(), self.generate.to_json());
+        commands.insert("transform".into(), self.transform.to_json());
+        commands.insert("d2h".into(), self.d2h.to_json());
+        commands.insert("other".into(), self.other.to_json());
+        m.insert("commands".into(), Value::Object(commands));
+        m.insert("arena".into(), self.arena.to_json());
         Value::Object(m)
     }
 
@@ -265,6 +470,14 @@ impl ShardSnapshot {
             .get("lane")
             .and_then(Value::as_str)
             .ok_or_else(|| Error::Json("shard snapshot missing `lane`".into()))?;
+        let commands = v
+            .get("commands")
+            .ok_or_else(|| Error::Json("shard snapshot missing `commands`".into()))?;
+        let timing = |key: &str| -> Result<CommandTiming> {
+            CommandTiming::from_json(commands.get(key).ok_or_else(|| {
+                Error::Json(format!("shard snapshot missing command class `{key}`"))
+            })?)
+        };
         Ok(ShardSnapshot {
             shard: num("shard")? as usize,
             lane: Lane::parse(lane_str)
@@ -282,8 +495,30 @@ impl ShardSnapshot {
             launch_ns: hist("launch_ns")?,
             batch_fill: hist("batch_fill")?,
             request_n: hist("request_n")?,
+            generate: timing("generate")?,
+            transform: timing("transform")?,
+            d2h: timing("d2h")?,
+            other: timing("other")?,
+            arena: ArenaCounters::from_json(
+                v.get("arena")
+                    .ok_or_else(|| Error::Json("shard snapshot missing `arena`".into()))?,
+            )?,
         })
     }
+}
+
+/// Aggregated per-class virtual timings (see
+/// [`TelemetrySnapshot::command_breakdown`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommandBreakdown {
+    /// Interop generate host tasks.
+    pub generate: CommandTiming,
+    /// Range-transform kernels.
+    pub transform: CommandTiming,
+    /// D2H slice copies.
+    pub d2h: CommandTiming,
+    /// Everything else.
+    pub other: CommandTiming,
 }
 
 /// Plain-data copy of a [`TelemetryRegistry`] at one instant.
@@ -335,7 +570,33 @@ impl TelemetrySnapshot {
         dn as f64 / dt as f64 * 1e9
     }
 
-    /// Serialize (schema `portarng-telemetry-v1`).
+    /// Per-command-class virtual timings summed across shards — the
+    /// Fig.-4-style gen/transform/D2H split of the serving path.
+    pub fn command_breakdown(&self) -> CommandBreakdown {
+        let fold = |f: fn(&ShardSnapshot) -> CommandTiming| {
+            self.shards
+                .iter()
+                .map(f)
+                .fold(CommandTiming::default(), CommandTiming::merged)
+        };
+        CommandBreakdown {
+            generate: fold(|s| s.generate),
+            transform: fold(|s| s.transform),
+            d2h: fold(|s| s.d2h),
+            other: fold(|s| s.other),
+        }
+    }
+
+    /// Arena counters summed across shards (each worker owns its own
+    /// arena; the sum is what the allocation gate checks).
+    pub fn arena_totals(&self) -> ArenaCounters {
+        self.shards
+            .iter()
+            .map(|s| s.arena)
+            .fold(ArenaCounters::default(), ArenaCounters::merged)
+    }
+
+    /// Serialize (schema `portarng-telemetry-v2`).
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
@@ -409,11 +670,24 @@ mod tests {
         s0.record_request(100);
         s0.record_request(44);
         s0.record_launch(2, 144, 144, 12_000);
+        s0.record_command(CommandKind::Generate, 4_000);
+        s0.record_command(CommandKind::Transform, 1_500);
+        s0.record_command(CommandKind::TransferD2H, 800);
+        s0.record_command(CommandKind::TransferD2H, 200);
+        s0.set_arena(ArenaCounters {
+            checkouts: 10,
+            hits: 9,
+            misses: 1,
+            recycles: 10,
+            pooled: 1,
+            pooled_bytes: 4096,
+        });
         let s1 = reg.shard(1);
         s1.set_backend("cuRAND");
         s1.record_request(5000);
         s1.record_launch(1, 5000, 5000, 90_000);
         s1.record_failure();
+        s1.record_command(CommandKind::Generate, 9_000);
         reg.record_dispatch(false);
         reg.record_dispatch(false);
         reg.record_dispatch(true);
@@ -435,6 +709,25 @@ mod tests {
         assert_eq!(snap.shards[1].backend, "cuRAND");
         assert_eq!(snap.shards[0].batch_fill.count, 1);
         assert!(snap.shards[1].launch_ns.mean() > 0.0);
+    }
+
+    #[test]
+    fn command_classes_and_arena_aggregate_across_shards() {
+        let snap = sample_registry().snapshot();
+        assert_eq!(snap.shards[0].generate, CommandTiming { cmds: 1, virt_ns: 4_000 });
+        assert_eq!(snap.shards[0].d2h, CommandTiming { cmds: 2, virt_ns: 1_000 });
+        let b = snap.command_breakdown();
+        assert_eq!(b.generate, CommandTiming { cmds: 2, virt_ns: 13_000 });
+        assert_eq!(b.transform, CommandTiming { cmds: 1, virt_ns: 1_500 });
+        assert_eq!(b.d2h, CommandTiming { cmds: 2, virt_ns: 1_000 });
+        assert_eq!(b.other, CommandTiming::default());
+        let a = snap.arena_totals();
+        assert_eq!(a.checkouts, 10);
+        assert_eq!(a.misses, 1);
+        assert!((a.hit_rate() - 0.9).abs() < 1e-12);
+        // Shard 1 never published arena counters: all-zero, rate 0.
+        assert_eq!(snap.shards[1].arena, ArenaCounters::default());
+        assert_eq!(snap.shards[1].arena.hit_rate(), 0.0);
     }
 
     #[test]

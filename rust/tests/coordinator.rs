@@ -150,6 +150,118 @@ fn prop_retuning_mid_stream_preserves_global_offset_invariant() {
 }
 
 #[test]
+fn prop_sycl_serving_path_is_bit_exact_across_waves_and_arena_reuse() {
+    // The S13 invariant on the serve-through-SYCL path: flushes run as
+    // one DAG submission into recycled arena USM, in several waves so
+    // allocations are actually reused — and every reply is still the
+    // bit-exact sub-stream of a dedicated engine at the request's global
+    // offset, for random shard counts, flush limits, sizes, ranges and
+    // overflow policies.
+    testkit::forall("sycl-serve-exact", 8, |g| {
+        let seed = g.u64();
+        let platform =
+            *g.choose(&[PlatformId::A100, PlatformId::Vega56, PlatformId::Rome7742]);
+        let mut cfg = PoolConfig::new(platform, seed, g.usize_in(1, 5));
+        cfg.max_requests = g.usize_in(1, 6);
+        cfg.max_batch = g.usize_in(64, 8192);
+        if g.bool_with(0.5) {
+            cfg.policy = DispatchPolicy::fixed(g.usize_in(400, 2000));
+        }
+        let pool = ServicePool::spawn(cfg);
+        let mut offset = 0u64;
+        let waves = g.usize_in(2, 4);
+        for _ in 0..waves {
+            let specs: Vec<(usize, (f32, f32))> = (0..g.usize_in(2, 10))
+                .map(|_| {
+                    let n = if g.bool_with(0.2) {
+                        g.usize_in(800, 3000)
+                    } else {
+                        g.usize_in(1, 400)
+                    };
+                    let range = *g.choose(&[(0.0f32, 1.0f32), (-1.0, 1.0), (3.0, 7.5)]);
+                    (n, range)
+                })
+                .collect();
+            let rxs: Vec<_> =
+                specs.iter().map(|&(n, range)| pool.generate(n, range)).collect();
+            pool.flush();
+            for (rx, &(n, range)) in rxs.iter().zip(&specs) {
+                let got =
+                    rx.recv().map_err(|e| e.to_string())?.map_err(|e| e.to_string())?;
+                let mut want = vec![0f32; n];
+                PhiloxEngine::with_offset(seed, offset).fill_uniform_f32(&mut want);
+                if range != (0.0, 1.0) {
+                    portarng::rng::range_transform_inplace(&mut want, range.0, range.1);
+                }
+                if got != want {
+                    return Err(format!(
+                        "reply at offset {offset} (n={n}, range {range:?}) diverged"
+                    ));
+                }
+                offset += n as u64;
+            }
+        }
+        // Submission shape held across every wave: exactly one generate
+        // host task per launch, one D2H slice per request, and the waves
+        // after the first reused arena allocations.
+        let snap = pool.telemetry().snapshot();
+        let k = snap.command_breakdown();
+        if k.generate.cmds != snap.total_launches() {
+            return Err(format!(
+                "{} generate tasks for {} launches",
+                k.generate.cmds,
+                snap.total_launches()
+            ));
+        }
+        if k.d2h.cmds != snap.total_requests() {
+            return Err(format!(
+                "{} D2H slices for {} requests",
+                k.d2h.cmds,
+                snap.total_requests()
+            ));
+        }
+        let a = snap.arena_totals();
+        if a.checkouts != snap.total_launches() {
+            return Err("every flush must go through the arena".into());
+        }
+        pool.shutdown().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_replies_match_the_buffer_api_generate_path() {
+    // Buffer-vs-USM parity at the serving layer: a pooled reply (the USM
+    // batch path through arena memory) is bit-identical to the buffer-API
+    // generate flow at the same engine offset and range.
+    use portarng::backends::RngBackend;
+    use portarng::sycl::{Buffer, Queue, SyclRuntimeProfile};
+
+    let (seed, n) = (99u64, 1000usize);
+    let pool = ServicePool::spawn(PoolConfig::new(PlatformId::A100, seed, 2));
+    let rx = pool.generate(n, (2.0, 4.0));
+    pool.flush();
+    let pooled = rx.recv().unwrap().unwrap();
+    pool.shutdown().unwrap();
+
+    let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+    let backend = portarng::backends::CurandBackend::new();
+    let mut gen = backend
+        .create_generator(portarng::rng::EngineKind::Philox4x32x10, seed)
+        .unwrap();
+    let buf = Buffer::<f32>::new(n);
+    portarng::rng::generate_buffer(
+        &queue,
+        &mut gen,
+        portarng::rng::Distribution::uniform(2.0, 4.0),
+        n,
+        &buf,
+    )
+    .unwrap();
+    assert_eq!(pooled, queue.host_read(&buf));
+}
+
+#[test]
 fn dispatch_policy_edge_cases_route_as_documented() {
     // n == threshold goes to the overflow lane.
     let at = DispatchPolicy::fixed(4096);
