@@ -25,7 +25,9 @@ use crate::platform::{CommandCost, PlatformId, PlatformKind, TransferDir};
 use crate::rng::engines::EngineKind;
 use crate::rng::{generate_buffer, generate_usm, Distribution};
 use crate::runtime::PjrtRuntime;
-use crate::sycl::{AccessMode, Buffer, CommandClass, CommandRecord, Queue, SyclRuntimeProfile};
+use crate::sycl::{
+    Access, AccessMode, Buffer, CommandClass, CommandRecord, Queue, SyclRuntimeProfile,
+};
 use crate::telemetry::TelemetrySnapshot;
 use std::sync::Arc;
 
@@ -475,16 +477,30 @@ fn virtual_iteration(cfg: &BurnerConfig, salt: u64) -> Result<(u64, KernelBreakd
             let queue = Queue::new(cfg.platform, profile);
             queue.set_noise_salt(salt);
             queue.advance_host(profile.onemkl_setup_overhead_ns(true, queue.spec()));
-            queue.submit_usm("create", CommandClass::Setup, CommandCost::GeneratorSetup, &[], |_| {});
-            let _usm = queue.malloc_device::<f32>(16);
-            let gen_ev =
-                queue.submit_usm("generate", CommandClass::Generate, gen_cost, &[], |_| {});
+            queue.submit_usm(
+                "create",
+                CommandClass::Setup,
+                CommandCost::GeneratorSetup,
+                &[],
+                vec![],
+                |_| {},
+            );
+            let usm = queue.malloc_device::<f32>(16);
+            let gen_ev = queue.submit_usm(
+                "generate",
+                CommandClass::Generate,
+                gen_cost,
+                &[],
+                vec![Access::usm(usm.id(), AccessMode::Write)],
+                |_| {},
+            );
             let last = if cfg.distr.requires_range_transform() {
                 queue.submit_usm(
                     "transform",
                     CommandClass::Transform,
                     tr_cost,
                     std::slice::from_ref(&gen_ev),
+                    vec![Access::usm(usm.id(), AccessMode::ReadWrite)],
                     |_| {},
                 )
             } else {
@@ -495,6 +511,7 @@ fn virtual_iteration(cfg: &BurnerConfig, salt: u64) -> Result<(u64, KernelBreakd
                 CommandClass::TransferD2H,
                 CommandCost::Transfer { bytes: n * 4, dir: TransferDir::D2H },
                 std::slice::from_ref(&last),
+                vec![Access::usm(usm.id(), AccessMode::Read)],
                 |_| {},
             );
             let total = queue.wait();

@@ -57,7 +57,8 @@ use crate::rng::engines::EngineKind;
 use crate::rng::{generate_batch_usm, BatchSlice};
 use crate::sycl::{CommandClass, Queue, SyclRuntimeProfile, UsmArena};
 use crate::telemetry::{
-    ArenaCounters, CommandKind, Lane, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot,
+    ArenaCounters, CommandKind, HazardCounters, Lane, ShardTelemetry, TelemetryRegistry,
+    TelemetrySnapshot,
 };
 
 use super::batcher::{BatchOutcome, PendingRequest, RequestBatcher};
@@ -373,6 +374,7 @@ fn launch(
         slices.as_slice(),
         batch.launch_n,
         lease.buffer(),
+        Some(lease.generation()),
         lease.deps(),
     );
     let (results, pending) = match outcome {
@@ -395,7 +397,7 @@ fn launch(
         }
     };
     lease.set_pending(pending);
-    drop(lease); // recycle now: the arena is warm before the next flush
+    lease.recycle(); // park now: the arena is warm before the next flush
 
     let mut payload = 0u64;
     for r in &results {
@@ -407,7 +409,17 @@ fn launch(
 
     // Per-command-class virtual timings for this flush, drained (not
     // cloned) so a long-lived worker queue's record log stays bounded.
-    for r in queue.drain_records() {
+    let records = queue.drain_records();
+    // Prove the flush race-free (the analyzer's per-kind counts feed the
+    // v3 `hazards` telemetry block; under PORTARNG_HAZARD_CHECK the drain
+    // above already panicked on any diagnostic).
+    let hazard_report = crate::sycl::analyze_hazards(&records);
+    telemetry.record_hazards(HazardCounters::from_window(
+        records.len() as u64,
+        hazard_report.external_deps as u64,
+        hazard_report.counts(),
+    ));
+    for r in records {
         let kind = match r.class {
             CommandClass::Generate => CommandKind::Generate,
             CommandClass::Transform => CommandKind::Transform,
@@ -422,6 +434,7 @@ fn launch(
         hits: a.hits,
         misses: a.misses,
         recycles: a.recycles,
+        leaked: a.leaked,
         pooled: a.pooled,
         pooled_bytes: a.pooled_bytes,
     });

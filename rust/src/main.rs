@@ -11,6 +11,7 @@
 //! portarng serve --autotune [--profile profiles.json]   # adaptive dispatch
 //! portarng calibrate --platform a100 [--profile profiles.json]
 //! portarng check-artifacts                   # PJRT round-trip smoke test
+//! portarng lint-dag                          # hazard-analyze burner DAGs everywhere
 //! ```
 
 use std::collections::HashMap;
@@ -42,6 +43,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&opts),
         "calibrate" => cmd_calibrate(&opts),
         "check-artifacts" => cmd_check_artifacts(),
+        "lint-dag" => cmd_lint_dag(&opts),
         "--help" | "-h" | "help" => {
             println!("{}", USAGE);
             Ok(())
@@ -75,6 +77,7 @@ USAGE:
                  [--demo-requests <n>] [--profile <path>] [--save-profile]
   portarng calibrate --platform <p> [--shards <n>] [--profile <path>]
   portarng check-artifacts
+  portarng lint-dag [--verbose]                (prove recorded DAGs race-free)
 
 Distributions: uniform a b | gaussian mean stddev | lognormal m s |
                exponential lambda | poisson lambda | bits
@@ -490,6 +493,178 @@ fn cmd_calibrate(opts: &HashMap<String, String>) -> CliResult {
         println!("[wrote calibration profile to {}]", path.display());
     }
     Ok(())
+}
+
+/// `lint-dag`: run burner-shaped workloads over every platform spec, drain
+/// the recorded command DAGs, and hand each window to the hazard analyzer
+/// (DESIGN.md S14). Structural validation (`Dag::validate`) and the
+/// memory-hazard proof both have to pass on every platform; any diagnostic
+/// fails the command — this is the CI gate behind the `lint-dag` job.
+fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
+    use portarng::rng::{
+        generate_batch_usm, generate_buffer, generate_usm, BatchSlice, Distribution, EngineKind,
+    };
+    use portarng::sycl::{Buffer, Dag, HazardReport, Queue, SyclRuntimeProfile, UsmArena};
+
+    /// Validate one drained window structurally, then analyze it for
+    /// memory hazards.
+    fn lint_window(records: &[portarng::sycl::CommandRecord]) -> Result<HazardReport, String> {
+        let dag = Dag::new(records);
+        dag.validate().map_err(|e| format!("structural validation failed: {e}"))?;
+        Ok(dag.analyze_hazards())
+    }
+
+    let verbose = opts.contains_key("verbose");
+    let n = 4096usize;
+    println!(
+        "lint-dag: proving recorded command DAGs race-free on {} platforms \
+         (debug enforcement: {})",
+        PlatformId::ALL.len(),
+        if portarng::sycl::Queue::hazard_check_enabled() { "on" } else { "off" }
+    );
+
+    let mut failures: Vec<String> = Vec::new();
+    for platform in PlatformId::ALL {
+        let profile = SyclRuntimeProfile::for_platform(&platform.spec());
+        let backend = portarng::burner::native_backend_for(platform);
+        let mut windows: Vec<(&str, HazardReport)> = Vec::new();
+
+        // 1. Buffer API: accessor-declared accesses, runtime-derived
+        //    RAW/WAR/WAW edges (generate -> transform -> D2H readback).
+        {
+            let queue = Queue::new(platform, profile);
+            let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 0x11E7)?;
+            let buf = Buffer::<f32>::new(n);
+            generate_buffer(&queue, &mut gen, Distribution::uniform(-2.0, 3.0), n, &buf)?;
+            let _ = queue.host_read(&buf);
+            queue.wait();
+            windows.push(("buffer", lint_window(&queue.drain_records())?));
+        }
+
+        // 2. USM API: explicit event chains (paper §4.1) — generate ->
+        //    range transform -> blocking D2H copy.
+        {
+            let queue = Queue::new(platform, profile);
+            let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 0x11E8)?;
+            let usm = queue.malloc_device::<f32>(n);
+            let ev =
+                generate_usm(&queue, &mut gen, Distribution::uniform(0.5, 2.5), n, &usm, &[])?;
+            let _ = queue.usm_to_host(&usm, std::slice::from_ref(&ev));
+            queue.wait();
+            windows.push(("usm", lint_window(&queue.drain_records())?));
+        }
+
+        // 3. Arena serving path: two coalesced flushes through one
+        //    recycled launch buffer — cross-generation reuse must be
+        //    proved ordered through the lease's pending events (S13/S14).
+        {
+            let queue = Queue::new(platform, profile);
+            let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 0x11E9)?;
+            let arena: UsmArena<f32> = UsmArena::new();
+            let half = n / 2;
+            for flush in 0..2u64 {
+                let mut lease = arena.checkout(&queue, n);
+                let base = flush * n as u64;
+                let members = [
+                    BatchSlice {
+                        buffer_offset: 0,
+                        stream_offset: base,
+                        n: half,
+                        range: (0.0, 1.0),
+                    },
+                    BatchSlice {
+                        buffer_offset: half,
+                        stream_offset: base + half as u64,
+                        n: half,
+                        range: (-1.0, 1.0),
+                    },
+                ];
+                let deps = lease.deps().to_vec();
+                let batch = generate_batch_usm(
+                    &queue,
+                    gen.as_mut(),
+                    &members,
+                    n,
+                    lease.buffer(),
+                    Some(lease.generation()),
+                    &deps,
+                )?;
+                for payload in &batch.payloads {
+                    if let Err(e) = payload {
+                        return Err(format!("arena flush member failed: {e}").into());
+                    }
+                }
+                lease.set_pending(batch.last_events());
+                lease.recycle();
+            }
+            queue.wait();
+            windows.push(("arena", lint_window(&queue.drain_records())?));
+        }
+
+        let commands: usize = windows.iter().map(|(_, r)| r.commands).sum();
+        let external: usize = windows.iter().map(|(_, r)| r.external_deps).sum();
+        let diagnostics: usize = windows.iter().map(|(_, r)| r.hazards.len()).sum();
+        println!(
+            "  {:<12} {:>3} command(s) across {} window(s), {} external dep(s): {}",
+            platform.token(),
+            commands,
+            windows.len(),
+            external,
+            if diagnostics == 0 {
+                "clean".to_string()
+            } else {
+                format!("{diagnostics} DIAGNOSTIC(S)")
+            }
+        );
+        for (label, report) in &windows {
+            if verbose || !report.is_clean() {
+                for line in report.pretty().lines() {
+                    println!("    [{label}] {line}");
+                }
+            }
+            if !report.is_clean() {
+                failures.push(format!("{}/{label}", platform.token()));
+            }
+        }
+    }
+
+    // 4. Serving pool end-to-end: the per-flush analyzer runs inside the
+    //    workers and feeds the telemetry `hazards` block — assert the
+    //    aggregated counters stay clean.
+    let pool_totals = {
+        let cfg = PoolConfig::new(PlatformId::A100, 0x5EED, 2);
+        let pool = ServicePool::spawn(cfg);
+        let receivers: Vec<_> =
+            (0..8).map(|i| pool.generate(512 + 64 * i, (0.0, 1.0))).collect();
+        pool.flush();
+        for rx in receivers {
+            rx.recv()??;
+        }
+        let snap = pool.telemetry().snapshot();
+        pool.shutdown()?;
+        snap.hazard_totals()
+    };
+    println!(
+        "  service pool: {} window(s), {} command(s), {} external dep(s): {}",
+        pool_totals.windows,
+        pool_totals.commands,
+        pool_totals.external_deps,
+        if pool_totals.clean() {
+            "clean".to_string()
+        } else {
+            format!("{} DIAGNOSTIC(S)", pool_totals.total())
+        }
+    );
+    if !pool_totals.clean() {
+        failures.push("pool/telemetry".into());
+    }
+
+    if failures.is_empty() {
+        println!("lint-dag OK: every recorded DAG proved race-free");
+        Ok(())
+    } else {
+        Err(format!("lint-dag found hazards in: {}", failures.join(", ")).into())
+    }
 }
 
 fn cmd_check_artifacts() -> CliResult {

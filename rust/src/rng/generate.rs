@@ -19,7 +19,7 @@
 use crate::backends::VendorGenerator;
 use crate::error::Result;
 use crate::platform::CommandCost;
-use crate::sycl::{AccessMode, Buffer, CommandClass, Event, Queue, UsmBuffer};
+use crate::sycl::{Access, AccessMode, Buffer, CommandClass, Event, Queue, UsmBuffer};
 
 use super::distributions::{Distribution, GaussianMethod, UniformMethod};
 use super::range_transform;
@@ -172,6 +172,7 @@ pub fn generate_usm(
         CommandClass::Generate,
         generate_kernel_cost(n),
         deps,
+        vec![Access::usm(usm.id(), AccessMode::Write)],
         |_ih| {
             vendor = generator.generate_canonical(&distr, &mut usm.lock()[..n]);
         },
@@ -184,6 +185,7 @@ pub fn generate_usm(
             CommandClass::Transform,
             transform_kernel_cost(n),
             std::slice::from_ref(&gen_ev),
+            vec![Access::usm(usm.id(), AccessMode::ReadWrite)],
             |_ih| {
                 let mut mem = usm.lock();
                 if gaussian {
@@ -201,6 +203,7 @@ pub fn generate_usm(
             CommandClass::Transform,
             transform_kernel_cost(n),
             std::slice::from_ref(&gen_ev),
+            vec![Access::usm(usm.id(), AccessMode::ReadWrite)],
             |_ih| {
                 for x in usm.lock()[..n].iter_mut() {
                     *x = (m + s * *x).exp();
@@ -271,12 +274,20 @@ impl UsmBatch {
 /// `stream_offset` would produce: the host task skips the shared engine to
 /// each member's offset before generating its slice (counter-based, O(1)),
 /// and the transform kernel applies each member's own affine range.
+///
+/// `generation` is the arena-lease generation when `usm` is a recycled
+/// launch buffer ([`crate::sycl::UsmLease::generation`]) — stamped on the
+/// kernels' access sets so the hazard analyzer can distinguish
+/// reuse-after-recycle from use-after-recycle; pass `None` for a
+/// non-arena allocation.
+#[allow(clippy::too_many_arguments)]
 pub fn generate_batch_usm(
     queue: &Queue,
     generator: &mut dyn VendorGenerator,
     members: &[BatchSlice],
     launch_n: usize,
     usm: &UsmBuffer<f32>,
+    generation: Option<u64>,
     deps: &[Event],
 ) -> Result<UsmBatch> {
     if members.is_empty() {
@@ -300,6 +311,7 @@ pub fn generate_batch_usm(
         CommandClass::Generate,
         generate_kernel_cost(launch_n),
         deps,
+        vec![Access::usm_leased(usm.id(), AccessMode::Write, generation)],
         |_ih| {
             let mut mem = usm.lock();
             for m in members {
@@ -330,6 +342,7 @@ pub fn generate_batch_usm(
             CommandClass::Transform,
             transform_kernel_cost(transform_items),
             std::slice::from_ref(&gen_ev),
+            vec![Access::usm_leased(usm.id(), AccessMode::ReadWrite, generation)],
             |_ih| {
                 let mut mem = usm.lock();
                 for (m, r) in members.iter().zip(&member_res) {
@@ -626,7 +639,8 @@ mod tests {
             BatchSlice { buffer_offset: 134, stream_offset: 7_777, n: 66, range: (5.0, 9.0) },
         ];
         let usm = queue.malloc_device::<f32>(256);
-        let batch = generate_batch_usm(&queue, gen.as_mut(), &members, 200, &usm, &[]).unwrap();
+        let batch =
+            generate_batch_usm(&queue, gen.as_mut(), &members, 200, &usm, None, &[]).unwrap();
 
         for (m, payload) in members.iter().zip(&batch.payloads) {
             let got = payload.as_ref().unwrap();
@@ -669,7 +683,7 @@ mod tests {
         let usm = qx.malloc_device::<f32>(1024);
         let member =
             BatchSlice { buffer_offset: 0, stream_offset: 0, n, range: (-1.0, 3.0) };
-        let batch = generate_batch_usm(&qx, g2.as_mut(), &[member], n, &usm, &[]).unwrap();
+        let batch = generate_batch_usm(&qx, g2.as_mut(), &[member], n, &usm, None, &[]).unwrap();
         assert_eq!(batch.payloads[0].as_ref().unwrap(), &qb.host_read(&buf));
     }
 
@@ -683,14 +697,15 @@ mod tests {
             BatchSlice { buffer_offset: 64, stream_offset: 64, n: 64, range: (0.0, 1.0) },
         ];
         let usm = queue.malloc_device::<f32>(128);
-        let batch = generate_batch_usm(&queue, gen.as_mut(), &members, 128, &usm, &[]).unwrap();
+        let batch =
+            generate_batch_usm(&queue, gen.as_mut(), &members, 128, &usm, None, &[]).unwrap();
         assert!(batch.transform.is_none());
         // The flush's last events are the D2H copies, chained on generate.
         assert_eq!(batch.last_events().len(), 2);
         for ev in &batch.d2h {
             assert!(ev.profiling_command_start() >= batch.generate.profiling_command_end());
         }
-        assert!(generate_batch_usm(&queue, gen.as_mut(), &[], 0, &usm, &[]).is_err());
+        assert!(generate_batch_usm(&queue, gen.as_mut(), &[], 0, &usm, None, &[]).is_err());
     }
 
     #[test]

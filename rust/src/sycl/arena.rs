@@ -17,6 +17,15 @@
 //! commands touching its buffer ([`UsmLease::set_pending`]), and a
 //! checkout hands them back ([`UsmLease::deps`]) so the next flush chains
 //! its generate submission behind them.
+//!
+//! Returning a buffer is **explicit**: [`UsmLease::recycle`] parks it with
+//! its pending events and bumps the allocation's *generation* counter (the
+//! hazard analyzer's handle for telling reuse-after-recycle from
+//! use-after-recycle — see [`crate::sycl::hazard`]). Merely dropping a
+//! lease does *not* recycle: the allocation is freed, its pending events
+//! are discarded, and the loss is counted in [`ArenaStats::leaked`] — a
+//! dropped lease on a serving path is a bug (the warm allocation is gone),
+//! so it is observable rather than silently papered over.
 
 use std::sync::Mutex;
 
@@ -35,6 +44,9 @@ pub struct ArenaStats {
     pub misses: u64,
     /// Leases returned to the free lists.
     pub recycles: u64,
+    /// Leases dropped without [`UsmLease::recycle`]: the allocation was
+    /// freed instead of parked and its pending events were discarded.
+    pub leaked: u64,
     /// Leases currently checked out.
     pub live: u64,
     /// Allocations parked in the free lists.
@@ -60,6 +72,9 @@ struct Parked<T> {
     /// Last commands that touched the buffer — the dependency set the
     /// next checkout must chain behind.
     pending: Vec<Event>,
+    /// Recycle count of this allocation; the next checkout's lease is
+    /// stamped with it so commands can tag their accesses.
+    generation: u64,
 }
 
 struct ArenaState<T> {
@@ -93,8 +108,9 @@ impl<T: Clone + Default + Send + 'static> UsmArena<T> {
 
     /// Check out an allocation of at least `n` elements. A parked
     /// allocation of the matching size class is reused (hit); otherwise
-    /// `queue.malloc_device` pays the real allocation cost (miss). The
-    /// lease recycles itself back into the arena on drop.
+    /// `queue.malloc_device` pays the real allocation cost (miss). Return
+    /// the lease with [`UsmLease::recycle`] — dropping it leaks (see
+    /// module docs).
     pub fn checkout(&self, queue: &Queue, n: usize) -> UsmLease<'_, T> {
         let class = class_of(n);
         let parked = {
@@ -120,8 +136,15 @@ impl<T: Clone + Default + Send + 'static> UsmArena<T> {
         let parked = parked.unwrap_or_else(|| Parked {
             buf: queue.malloc_device::<T>(1usize << class),
             pending: Vec::new(),
+            generation: 0,
         });
-        UsmLease { arena: self, class, buf: Some(parked.buf), pending: parked.pending }
+        UsmLease {
+            arena: self,
+            class,
+            buf: Some(parked.buf),
+            pending: parked.pending,
+            generation: parked.generation,
+        }
     }
 
     /// Current counters.
@@ -129,13 +152,19 @@ impl<T: Clone + Default + Send + 'static> UsmArena<T> {
         self.state.lock().unwrap().stats
     }
 
-    fn park(&self, class: usize, buf: UsmBuffer<T>, pending: Vec<Event>) {
+    fn park(&self, class: usize, buf: UsmBuffer<T>, pending: Vec<Event>, generation: u64) {
         let mut st = self.state.lock().unwrap();
         st.stats.recycles += 1;
         st.stats.live -= 1;
         st.stats.pooled += 1;
         st.stats.pooled_bytes += ((1usize << class) * std::mem::size_of::<T>()) as u64;
-        st.free[class].push(Parked { buf, pending });
+        st.free[class].push(Parked { buf, pending, generation });
+    }
+
+    fn leak(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.stats.leaked += 1;
+        st.stats.live -= 1;
     }
 }
 
@@ -145,14 +174,16 @@ impl<T: Clone + Default + Send + 'static> Default for UsmArena<T> {
     }
 }
 
-/// A checked-out arena allocation. Dropping (or [`UsmLease::recycle`]-ing)
-/// parks the buffer back in the arena's free list together with the
-/// pending events recorded through [`UsmLease::set_pending`].
+/// A checked-out arena allocation. [`UsmLease::recycle`] parks the buffer
+/// back in the arena's free list together with the pending events recorded
+/// through [`UsmLease::set_pending`], bumping its generation; dropping the
+/// lease instead frees the allocation and counts a leak (see module docs).
 pub struct UsmLease<'a, T: Clone + Default + Send + 'static> {
     arena: &'a UsmArena<T>,
     class: usize,
     buf: Option<UsmBuffer<T>>,
     pending: Vec<Event>,
+    generation: u64,
 }
 
 impl<T: Clone + Default + Send + 'static> UsmLease<'_, T> {
@@ -179,14 +210,31 @@ impl<T: Clone + Default + Send + 'static> UsmLease<'_, T> {
         self.pending = events;
     }
 
-    /// Return the allocation to the arena (also happens on drop).
-    pub fn recycle(self) {}
+    /// How many times this allocation has been recycled before this
+    /// checkout (0 for a cold allocation). Stamp it on the lease's USM
+    /// accesses ([`crate::sycl::Access::usm_leased`]) so the hazard
+    /// analyzer can reason about reuse across recycles.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Return the allocation to the arena's free list together with its
+    /// pending events, bumping the generation the next checkout will see.
+    /// This is the only way back into the pool — a lease that is merely
+    /// dropped leaks instead.
+    pub fn recycle(mut self) {
+        let buf = self.buf.take().expect("lease buffer already taken");
+        let pending = std::mem::take(&mut self.pending);
+        self.arena.park(self.class, buf, pending, self.generation + 1);
+    }
 }
 
 impl<T: Clone + Default + Send + 'static> Drop for UsmLease<'_, T> {
     fn drop(&mut self) {
-        if let Some(buf) = self.buf.take() {
-            self.arena.park(self.class, buf, std::mem::take(&mut self.pending));
+        // Not recycled: free the allocation (dropping `buf` releases it),
+        // discard pending events, and make the loss observable.
+        if self.buf.take().is_some() {
+            self.arena.leak();
         }
     }
 }
@@ -217,13 +265,14 @@ mod tests {
     fn checkout_recycle_checkout_hits_the_same_allocation() {
         let queue = q();
         let arena: UsmArena<f32> = UsmArena::new();
-        let first_id = {
-            let lease = arena.checkout(&queue, 1000);
-            assert!(lease.capacity() >= 1000);
-            lease.buffer().id()
-        }; // drop recycles
+        let lease = arena.checkout(&queue, 1000);
+        assert!(lease.capacity() >= 1000);
+        assert_eq!(lease.generation(), 0);
+        let first_id = lease.buffer().id();
+        lease.recycle();
         let lease = arena.checkout(&queue, 900); // same class (1024)
         assert_eq!(lease.buffer().id(), first_id);
+        assert_eq!(lease.generation(), 1);
         let s = arena.stats();
         assert_eq!(s.checkouts, 2);
         assert_eq!(s.hits, 1);
@@ -241,8 +290,8 @@ mod tests {
         let large = arena.checkout(&queue, 100_000);
         assert_ne!(small.buffer().id(), large.buffer().id());
         assert_ne!(small.capacity(), large.capacity());
-        drop(small);
-        drop(large);
+        small.recycle();
+        large.recycle();
         let s = arena.stats();
         assert_eq!(s.misses, 2);
         assert_eq!(s.pooled, 2);
@@ -264,6 +313,11 @@ mod tests {
             CommandClass::Generate,
             CommandCost::Kernel { bytes_read: 0, bytes_written: 256, items: 64, tpb: 0 },
             &[],
+            vec![crate::sycl::Access::usm_leased(
+                lease.buffer().id(),
+                crate::sycl::AccessMode::Write,
+                Some(lease.generation()),
+            )],
             |_| {},
         );
         lease.set_pending(vec![ev.clone()]);
@@ -290,5 +344,39 @@ mod tests {
         assert!(s.hit_rate() > 0.98);
         assert_eq!(s.live, 0);
         assert_eq!(s.pooled, 1);
+        assert_eq!(s.leaked, 0);
+    }
+
+    #[test]
+    fn dropping_without_recycle_is_an_observable_leak() {
+        let queue = q();
+        let arena: UsmArena<f32> = UsmArena::new();
+        let first_id = {
+            let lease = arena.checkout(&queue, 256);
+            lease.buffer().id()
+        }; // dropped, not recycled
+        let s = arena.stats();
+        assert_eq!(s.leaked, 1);
+        assert_eq!(s.recycles, 0);
+        assert_eq!(s.live, 0);
+        assert_eq!(s.pooled, 0);
+        // The allocation did not survive: the next checkout is a fresh
+        // malloc with a new id and a reset generation.
+        let lease = arena.checkout(&queue, 256);
+        assert_ne!(lease.buffer().id(), first_id);
+        assert_eq!(lease.generation(), 0);
+        assert_eq!(arena.stats().misses, 2);
+        lease.recycle();
+    }
+
+    #[test]
+    fn generations_count_recycles_per_allocation() {
+        let queue = q();
+        let arena: UsmArena<f32> = UsmArena::new();
+        for expect in 0..5 {
+            let lease = arena.checkout(&queue, 512);
+            assert_eq!(lease.generation(), expect);
+            lease.recycle();
+        }
     }
 }

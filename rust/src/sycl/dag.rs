@@ -10,12 +10,16 @@
 use std::collections::HashMap;
 
 use super::event::CommandRecord;
+use super::hazard::{analyze_hazards, HazardReport};
 
 /// Reconstructed DAG over a queue's command records.
 #[derive(Debug)]
 pub struct Dag<'a> {
     records: &'a [CommandRecord],
     by_id: HashMap<u64, &'a CommandRecord>,
+    /// Command ids appearing more than once in the record stream — a
+    /// corrupt stream, surfaced by [`Dag::validate`].
+    duplicates: Vec<u64>,
 }
 
 /// Aggregate DAG statistics.
@@ -34,16 +38,36 @@ pub struct DagStats {
 }
 
 impl<'a> Dag<'a> {
-    /// Build from records (as returned by `Queue::records`).
+    /// Build from records (as returned by `Queue::records`). Duplicate
+    /// command ids are retained (first occurrence wins for lookups) and
+    /// reported by [`Dag::validate`] — they must never be silently
+    /// collapsed, since a collision means two distinct commands would
+    /// alias in every id-keyed analysis.
     pub fn new(records: &'a [CommandRecord]) -> Self {
-        let by_id = records.iter().map(|r| (r.id, r)).collect();
-        Dag { records, by_id }
+        let mut by_id: HashMap<u64, &'a CommandRecord> = HashMap::with_capacity(records.len());
+        let mut duplicates = Vec::new();
+        for r in records {
+            if by_id.contains_key(&r.id) {
+                duplicates.push(r.id);
+            } else {
+                by_id.insert(r.id, r);
+            }
+        }
+        Dag { records, by_id, duplicates }
     }
 
-    /// Every dependency must point to an earlier-submitted command
-    /// (the runtime can only depend on already-known nodes) and must be
-    /// temporally respected: dep.end <= node.start.
+    /// Every command id must be unique, every dependency must point to an
+    /// earlier-submitted command (the runtime can only depend on
+    /// already-known nodes) and must be temporally respected:
+    /// dep.end <= node.start.
     pub fn validate(&self) -> Result<(), String> {
+        if let Some(id) = self.duplicates.first() {
+            return Err(format!(
+                "duplicate command id {} ({} collision(s) total)",
+                id,
+                self.duplicates.len()
+            ));
+        }
         for r in self.records {
             for d in &r.dep_ids {
                 let dep = self
@@ -62,6 +86,14 @@ impl<'a> Dag<'a> {
             }
         }
         Ok(())
+    }
+
+    /// Run the memory-hazard analyzer over this DAG's records: prove
+    /// every pair of conflicting accesses is connected by an ordering
+    /// path (see [`crate::sycl::hazard`] for the diagnostic taxonomy and
+    /// the windowed-analysis contract).
+    pub fn analyze_hazards(&self) -> HazardReport {
+        analyze_hazards(self.records)
     }
 
     /// True if any two commands overlap on the virtual timeline.
@@ -147,6 +179,20 @@ mod tests {
         assert_eq!(stats.edges, 5);
         // A pure chain: critical path == total work.
         assert_eq!(stats.critical_path_ns, stats.total_work_ns);
+        assert!(dag.analyze_hazards().is_clean());
+    }
+
+    #[test]
+    fn duplicate_ids_fail_validation() {
+        let q = chain_queue(2);
+        let mut records = q.records();
+        let forged = records[0].clone();
+        records.push(forged);
+        let dag = Dag::new(&records);
+        let err = dag.validate().unwrap_err();
+        assert!(err.contains("duplicate command id"), "unexpected error: {err}");
+        let report = dag.analyze_hazards();
+        assert_eq!(report.count_of(crate::sycl::HazardKind::DuplicateId), 1);
     }
 
     #[test]
@@ -179,5 +225,6 @@ mod tests {
         let stats = dag.stats();
         assert!(stats.critical_path_ns < stats.total_work_ns);
         assert!(stats.makespan_ns < stats.total_work_ns);
+        assert!(dag.analyze_hazards().is_clean());
     }
 }

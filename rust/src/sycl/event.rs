@@ -1,6 +1,15 @@
 //! Events and command records: the profiling layer of the runtime.
+//!
+//! Every executed command additionally carries its *access set*
+//! ([`Access`]): which allocations it touched and how. Buffer-path
+//! submissions derive the set from their accessor declarations, USM-path
+//! submissions declare it explicitly, and D2H readbacks record it
+//! automatically — the raw material the hazard analyzer
+//! ([`crate::sycl::analyze_hazards`]) proves race-freedom from.
 
 use std::sync::Arc;
+
+use super::buffer::AccessMode;
 
 /// Classification of commands for the Fig. 4 per-kernel breakdown.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -33,6 +42,74 @@ impl CommandClass {
             CommandClass::Malloc => "malloc",
             CommandClass::Other => "other",
         }
+    }
+}
+
+/// Which kind of allocation an [`Access`] refers to. The three namespaces
+/// are disjoint: a buffer id and a USM id never collide semantically even
+/// when the integers coincide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    /// A `Buffer` (accessor/DAG path) — id is `Buffer::id()`.
+    Buffer,
+    /// A USM allocation (pointer/event path) — id is `UsmBuffer::id()`.
+    Usm,
+    /// A host-side reply slice written by a D2H copy. Each copy writes a
+    /// distinct slice, so these ids are unique per command and never
+    /// alias.
+    HostSlice,
+}
+
+impl AccessKind {
+    /// Stable token for reports.
+    pub fn token(self) -> &'static str {
+        match self {
+            AccessKind::Buffer => "buffer",
+            AccessKind::Usm => "usm",
+            AccessKind::HostSlice => "host-slice",
+        }
+    }
+}
+
+/// One entry of a command's access set: `(allocation, mode)` plus — for
+/// arena-leased USM — the lease generation the command believed it held,
+/// letting the analyzer tell reuse-after-recycle (generations differ,
+/// ordering required) from use-after-recycle (generation went backwards:
+/// someone kept a stale handle).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Access {
+    /// Allocation namespace.
+    pub kind: AccessKind,
+    /// Allocation id within the namespace.
+    pub id: u64,
+    /// How the command touched it.
+    pub mode: AccessMode,
+    /// Arena-lease generation, when the allocation was checked out of a
+    /// [`crate::sycl::UsmArena`]; `None` for untracked allocations.
+    pub generation: Option<u64>,
+}
+
+impl Access {
+    /// Buffer-path access (generation-free).
+    pub fn buffer(id: u64, mode: AccessMode) -> Access {
+        Access { kind: AccessKind::Buffer, id, mode, generation: None }
+    }
+
+    /// USM access outside any arena lease.
+    pub fn usm(id: u64, mode: AccessMode) -> Access {
+        Access { kind: AccessKind::Usm, id, mode, generation: None }
+    }
+
+    /// USM access under an arena lease of known generation (pass the
+    /// lease's [`crate::sycl::UsmLease::generation`]); `None` degrades to
+    /// [`Access::usm`].
+    pub fn usm_leased(id: u64, mode: AccessMode, generation: Option<u64>) -> Access {
+        Access { kind: AccessKind::Usm, id, mode, generation }
+    }
+
+    /// Host reply-slice write of a D2H copy.
+    pub fn host_slice(id: u64) -> Access {
+        Access { kind: AccessKind::HostSlice, id, mode: AccessMode::Write, generation: None }
     }
 }
 
@@ -114,4 +191,7 @@ pub struct CommandRecord {
     pub tpb: Option<u32>,
     /// Achieved occupancy (kernels only).
     pub occupancy: Option<f64>,
+    /// Allocations this command touched and how (the hazard analyzer's
+    /// input; empty for commands with no tracked memory effects).
+    pub accesses: Vec<Access>,
 }

@@ -1,0 +1,546 @@
+//! Memory-hazard analyzer over executed command records (DESIGN.md S14).
+//!
+//! The queue's buffer path derives its dependency edges automatically, but
+//! the interop fast paths — USM submissions, arena-recycled launch
+//! buffers, event-chained D2H slices — build those edges *by hand* (paper
+//! §4.1: "it is the user's responsibility to ensure dependencies are
+//! met"), and a missing edge is a silent data race, not an error. This
+//! module turns that class of bug into a typed diagnostic: every command
+//! carries its access set ([`super::event::Access`]), and
+//! [`analyze_hazards`] walks the recorded DAG proving that every pair of
+//! conflicting accesses is connected by an ordering path.
+//!
+//! The analysis is *windowed*: long-lived worker queues drain their record
+//! log after every flush ([`super::Queue::drain_records`]), so a window's
+//! records may depend on commands drained before it. Command ids are
+//! monotonic and execution is eager, therefore any dependency on an id
+//! below the window's smallest retained id is already satisfied — those
+//! edges are counted as `external_deps`, not dangling. Missing ids at or
+//! above the window floor are real [`HazardKind::DanglingDep`]s.
+//!
+//! Enforcement: under `cfg(debug_assertions)` or `PORTARNG_HAZARD_CHECK=1`
+//! the queue runs this analyzer in `wait()`/`drain_records()` and panics
+//! on any diagnostic, making the whole test + bench corpus a
+//! race-detection suite. `portarng lint-dag` runs it across every
+//! platform spec, and the pool counts reports into the telemetry `hazards`
+//! block.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::jsonlite::Value;
+
+use super::event::{Access, AccessKind, CommandClass, CommandRecord};
+
+/// Taxonomy of diagnostics the analyzer emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HazardKind {
+    /// Read-after-write with no ordering path from the writer.
+    Raw,
+    /// Write-after-read with no ordering path from the reader.
+    War,
+    /// Write-after-write with no ordering path between the writers.
+    Waw,
+    /// A D2H readback not ordered after the kernel producing its data —
+    /// the RAW special case the serving path's reply buffers ride on.
+    UnorderedD2h,
+    /// Two commands touched the same arena allocation under *different*
+    /// lease generations with no ordering path: a recycled lease whose
+    /// pending events the next checkout did not inherit.
+    LeaseReuse,
+    /// A later command used an *older* lease generation than an earlier
+    /// one — someone kept a stale handle across a recycle (flagged even
+    /// when an ordering path exists; the handle itself is invalid).
+    StaleLease,
+    /// A dependency edge pointing at a command id that is neither in the
+    /// window nor below its floor (a forged or corrupted edge).
+    DanglingDep,
+    /// Two records share a command id (ids are submission-unique; a
+    /// collision means the record stream itself is corrupt).
+    DuplicateId,
+}
+
+impl HazardKind {
+    /// All kinds, report order.
+    pub const ALL: [HazardKind; 8] = [
+        HazardKind::Raw,
+        HazardKind::War,
+        HazardKind::Waw,
+        HazardKind::UnorderedD2h,
+        HazardKind::LeaseReuse,
+        HazardKind::StaleLease,
+        HazardKind::DanglingDep,
+        HazardKind::DuplicateId,
+    ];
+
+    /// Stable token for reports and telemetry.
+    pub fn token(self) -> &'static str {
+        match self {
+            HazardKind::Raw => "raw",
+            HazardKind::War => "war",
+            HazardKind::Waw => "waw",
+            HazardKind::UnorderedD2h => "unordered-d2h",
+            HazardKind::LeaseReuse => "lease-reuse",
+            HazardKind::StaleLease => "stale-lease",
+            HazardKind::DanglingDep => "dangling-dep",
+            HazardKind::DuplicateId => "duplicate-id",
+        }
+    }
+
+    fn index(self) -> usize {
+        HazardKind::ALL.iter().position(|&k| k == self).unwrap()
+    }
+}
+
+/// One diagnostic: a pair of commands (or one command and a bad edge)
+/// violating the race-freedom proof.
+#[derive(Debug, Clone)]
+pub struct Hazard {
+    /// Diagnostic type.
+    pub kind: HazardKind,
+    /// Earlier command id of the pair (the record owning the bad edge for
+    /// [`HazardKind::DanglingDep`] / the colliding record for
+    /// [`HazardKind::DuplicateId`]).
+    pub first: u64,
+    /// Later command id of the pair (the missing dependency id for
+    /// [`HazardKind::DanglingDep`]).
+    pub second: u64,
+    /// Allocation the conflict is on, when the diagnostic concerns one.
+    pub access: Option<(AccessKind, u64)>,
+    /// Human-readable explanation.
+    pub detail: String,
+}
+
+/// Structured result of one [`analyze_hazards`] pass.
+#[derive(Debug, Clone, Default)]
+pub struct HazardReport {
+    /// Commands analyzed.
+    pub commands: usize,
+    /// Dependency edges satisfied by commands drained before this window
+    /// (ids below the window floor — sound because ids are monotonic and
+    /// execution is eager).
+    pub external_deps: usize,
+    /// Diagnostics, submission order.
+    pub hazards: Vec<Hazard>,
+}
+
+impl HazardReport {
+    /// True when the window proved race-free.
+    pub fn is_clean(&self) -> bool {
+        self.hazards.is_empty()
+    }
+
+    /// Diagnostics of one kind.
+    pub fn count_of(&self, kind: HazardKind) -> u64 {
+        self.hazards.iter().filter(|h| h.kind == kind).count() as u64
+    }
+
+    /// Per-kind counts in [`HazardKind::ALL`] order.
+    pub fn counts(&self) -> [u64; 8] {
+        let mut counts = [0u64; 8];
+        for h in &self.hazards {
+            counts[h.kind.index()] += 1;
+        }
+        counts
+    }
+
+    /// Serialize for `lint-dag --json` style consumers.
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("commands".into(), Value::Number(self.commands as f64));
+        m.insert("external_deps".into(), Value::Number(self.external_deps as f64));
+        m.insert("clean".into(), Value::Bool(self.is_clean()));
+        let mut counts = BTreeMap::new();
+        for (kind, n) in HazardKind::ALL.iter().zip(self.counts()) {
+            counts.insert(kind.token().into(), Value::Number(n as f64));
+        }
+        m.insert("counts".into(), Value::Object(counts));
+        m.insert(
+            "hazards".into(),
+            Value::Array(
+                self.hazards
+                    .iter()
+                    .map(|h| {
+                        let mut hm = BTreeMap::new();
+                        hm.insert("kind".into(), Value::String(h.kind.token().into()));
+                        hm.insert("first".into(), Value::Number(h.first as f64));
+                        hm.insert("second".into(), Value::Number(h.second as f64));
+                        if let Some((kind, id)) = h.access {
+                            hm.insert("alloc_kind".into(), Value::String(kind.token().into()));
+                            hm.insert("alloc_id".into(), Value::Number(id as f64));
+                        }
+                        hm.insert("detail".into(), Value::String(h.detail.clone()));
+                        Value::Object(hm)
+                    })
+                    .collect(),
+            ),
+        );
+        Value::Object(m)
+    }
+
+    /// Multi-line human-readable rendering (lint-dag, panic messages).
+    pub fn pretty(&self) -> String {
+        let mut out = format!(
+            "{} command(s), {} external dep(s), {} diagnostic(s)",
+            self.commands,
+            self.external_deps,
+            self.hazards.len()
+        );
+        for h in &self.hazards {
+            out.push_str(&format!("\n  [{}] {}", h.kind.token(), h.detail));
+        }
+        out
+    }
+}
+
+/// Per-allocation occurrence of an access: which window index touched it.
+struct Touch {
+    idx: usize,
+    access: Access,
+}
+
+/// Prove every conflicting access pair in `records` is connected by an
+/// ordering path; see the module docs for the windowed-analysis contract.
+/// Records need not be sorted (the analyzer orders them by id), but ids
+/// must be unique — collisions are reported, with later duplicates
+/// excluded from the pair analysis.
+pub fn analyze_hazards(records: &[CommandRecord]) -> HazardReport {
+    let mut report = HazardReport { commands: records.len(), ..Default::default() };
+
+    // Deduplicate ids (first occurrence wins) and order by id, so "earlier"
+    // below always means "submitted earlier".
+    let mut recs: Vec<&CommandRecord> = Vec::with_capacity(records.len());
+    let mut seen: HashMap<u64, ()> = HashMap::with_capacity(records.len());
+    for r in records {
+        if seen.insert(r.id, ()).is_some() {
+            report.hazards.push(Hazard {
+                kind: HazardKind::DuplicateId,
+                first: r.id,
+                second: r.id,
+                access: None,
+                detail: format!("command id {} (`{}`) recorded more than once", r.id, r.name),
+            });
+        } else {
+            recs.push(r);
+        }
+    }
+    recs.sort_by_key(|r| r.id);
+    let Some(floor) = recs.first().map(|r| r.id) else {
+        return report;
+    };
+    let pos: HashMap<u64, usize> = recs.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+
+    // Resolve dependency edges: in-window predecessors, window-external
+    // (drained, already satisfied), or dangling.
+    let n = recs.len();
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, r) in recs.iter().enumerate() {
+        for &d in &r.dep_ids {
+            match pos.get(&d) {
+                Some(&j) if recs[j].id < r.id => preds[i].push(j),
+                Some(_) => report.hazards.push(Hazard {
+                    kind: HazardKind::DanglingDep,
+                    first: r.id,
+                    second: d,
+                    access: None,
+                    detail: format!(
+                        "command {} (`{}`) has a non-causal edge to command {}",
+                        r.id, r.name, d
+                    ),
+                }),
+                None if d < floor => report.external_deps += 1,
+                None => report.hazards.push(Hazard {
+                    kind: HazardKind::DanglingDep,
+                    first: r.id,
+                    second: d,
+                    access: None,
+                    detail: format!(
+                        "command {} (`{}`) depends on unknown command {}",
+                        r.id, r.name, d
+                    ),
+                }),
+            }
+        }
+    }
+
+    // Group accesses by allocation.
+    let mut groups: BTreeMap<(u8, u64), Vec<Touch>> = BTreeMap::new();
+    let kind_key = |k: AccessKind| match k {
+        AccessKind::Buffer => 0u8,
+        AccessKind::Usm => 1,
+        AccessKind::HostSlice => 2,
+    };
+    for (i, r) in recs.iter().enumerate() {
+        for &a in &r.accesses {
+            groups
+                .entry((kind_key(a.kind), a.id))
+                .or_default()
+                .push(Touch { idx: i, access: a });
+        }
+    }
+
+    // Reachability (ancestor bitsets) is only paid for when some
+    // allocation actually has a potentially conflicting pair — windows of
+    // access-free commands (host tasks without accessors) stay O(n).
+    let needs_reachability = groups.values().any(|g| {
+        g.len() >= 2
+            && (g.iter().any(|t| t.access.mode.writes())
+                || g
+                    .iter()
+                    .filter_map(|t| t.access.generation)
+                    .collect::<std::collections::HashSet<_>>()
+                    .len()
+                    > 1)
+    });
+    let words = n.div_ceil(64);
+    let mut anc: Vec<u64> = Vec::new();
+    if needs_reachability {
+        anc = vec![0u64; n * words];
+        for i in 0..n {
+            let (lo, hi) = anc.split_at_mut(i * words);
+            let row = &mut hi[..words];
+            for &j in &preds[i] {
+                let prow = &lo[j * words..(j + 1) * words];
+                for (w, p) in row.iter_mut().zip(prow) {
+                    *w |= p;
+                }
+                row[j / 64] |= 1u64 << (j % 64);
+            }
+        }
+    }
+    let ordered =
+        |i: usize, j: usize| anc[j * words + i / 64] >> (i % 64) & 1 == 1;
+
+    // Pairwise conflict check per allocation. Touches are in id order
+    // (records were walked sorted), so `a` is always the earlier command.
+    for ((_, alloc_id), touches) in &groups {
+        for (x, ta) in touches.iter().enumerate() {
+            for tb in &touches[x + 1..] {
+                let (i, a) = (ta.idx, ta.access);
+                let (j, b) = (tb.idx, tb.access);
+                if i == j {
+                    continue; // two accessors of one command never race
+                }
+                let cross_gen =
+                    matches!((a.generation, b.generation), (Some(ga), Some(gb)) if ga != gb);
+                let stale =
+                    matches!((a.generation, b.generation), (Some(ga), Some(gb)) if gb < ga);
+                if !cross_gen && !a.mode.writes() && !b.mode.writes() {
+                    continue; // concurrent same-generation reads are fine
+                }
+                let (ra, rb) = (recs[i], recs[j]);
+                let where_ = format!(
+                    "command {} (`{}`) vs command {} (`{}`) on {} {}",
+                    ra.id,
+                    ra.name,
+                    rb.id,
+                    rb.name,
+                    a.kind.token(),
+                    alloc_id
+                );
+                if stale {
+                    // Invalid regardless of ordering: the later command
+                    // held a handle from before the recycle.
+                    report.hazards.push(Hazard {
+                        kind: HazardKind::StaleLease,
+                        first: ra.id,
+                        second: rb.id,
+                        access: Some((a.kind, *alloc_id)),
+                        detail: format!(
+                            "{where_}: later command used stale lease generation {} (current {})",
+                            b.generation.unwrap(),
+                            a.generation.unwrap()
+                        ),
+                    });
+                    continue;
+                }
+                if ordered(i, j) {
+                    continue;
+                }
+                let kind = if cross_gen {
+                    HazardKind::LeaseReuse
+                } else if rb.class == CommandClass::TransferD2H
+                    && b.mode.reads()
+                    && a.mode.writes()
+                {
+                    HazardKind::UnorderedD2h
+                } else if a.mode.writes() && b.mode.writes() {
+                    HazardKind::Waw
+                } else if a.mode.writes() {
+                    HazardKind::Raw
+                } else {
+                    HazardKind::War
+                };
+                let why = match kind {
+                    HazardKind::LeaseReuse => format!(
+                        "lease generation {} reused after generation {} \
+                         without inheriting its pending events",
+                        b.generation.unwrap(),
+                        a.generation.unwrap()
+                    ),
+                    HazardKind::UnorderedD2h => {
+                        "D2H readback is not ordered after the producing command".into()
+                    }
+                    _ => "no ordering path between conflicting accesses".into(),
+                };
+                report.hazards.push(Hazard {
+                    kind,
+                    first: ra.id,
+                    second: rb.id,
+                    access: Some((a.kind, *alloc_id)),
+                    detail: format!("{where_}: {why}"),
+                });
+            }
+        }
+    }
+
+    // Deterministic output order: by earlier command id, then kind.
+    report
+        .hazards
+        .sort_by_key(|h| (h.first, h.second, h.kind.index()));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sycl::AccessMode;
+
+    fn rec(id: u64, deps: &[u64], accesses: Vec<Access>) -> CommandRecord {
+        CommandRecord {
+            id,
+            name: format!("c{id}"),
+            class: CommandClass::Other,
+            dep_ids: deps.to_vec(),
+            virt_start_ns: id * 10,
+            virt_end_ns: id * 10 + 5,
+            wall_ns: 0,
+            tpb: None,
+            occupancy: None,
+            accesses,
+        }
+    }
+
+    #[test]
+    fn empty_window_is_clean() {
+        let report = analyze_hazards(&[]);
+        assert!(report.is_clean());
+        assert_eq!(report.commands, 0);
+    }
+
+    #[test]
+    fn ordered_chain_is_clean_and_transitive() {
+        // w(0) -> rw(1) -> r(2): the 0->2 RAW is covered transitively.
+        let records = [
+            rec(0, &[], vec![Access::usm(7, AccessMode::Write)]),
+            rec(1, &[0], vec![Access::usm(7, AccessMode::ReadWrite)]),
+            rec(2, &[1], vec![Access::usm(7, AccessMode::Read)]),
+        ];
+        assert!(analyze_hazards(&records).is_clean());
+    }
+
+    #[test]
+    fn unordered_conflicts_classify_raw_war_waw() {
+        let records = [
+            rec(0, &[], vec![Access::usm(1, AccessMode::Write)]),
+            rec(1, &[], vec![Access::usm(1, AccessMode::Read)]),
+            rec(2, &[], vec![Access::usm(2, AccessMode::Read)]),
+            rec(3, &[], vec![Access::usm(2, AccessMode::Write)]),
+            rec(4, &[], vec![Access::usm(3, AccessMode::Write)]),
+            rec(5, &[], vec![Access::usm(3, AccessMode::Write)]),
+        ];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.hazards.len(), 3);
+        assert_eq!(report.count_of(HazardKind::Raw), 1);
+        assert_eq!(report.count_of(HazardKind::War), 1);
+        assert_eq!(report.count_of(HazardKind::Waw), 1);
+    }
+
+    #[test]
+    fn concurrent_reads_do_not_conflict() {
+        let records = [
+            rec(0, &[], vec![Access::usm(1, AccessMode::Read)]),
+            rec(1, &[], vec![Access::usm(1, AccessMode::Read)]),
+        ];
+        assert!(analyze_hazards(&records).is_clean());
+    }
+
+    #[test]
+    fn d2h_read_gets_the_specific_diagnostic() {
+        let mut d2h = rec(1, &[], vec![Access::usm(9, AccessMode::Read)]);
+        d2h.class = CommandClass::TransferD2H;
+        let records = [rec(0, &[], vec![Access::usm(9, AccessMode::Write)]), d2h];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::UnorderedD2h);
+        assert_eq!(report.hazards[0].access, Some((AccessKind::Usm, 9)));
+    }
+
+    #[test]
+    fn cross_generation_unordered_is_lease_reuse() {
+        let records = [
+            rec(0, &[], vec![Access::usm_leased(5, AccessMode::Write, Some(0))]),
+            rec(1, &[], vec![Access::usm_leased(5, AccessMode::Write, Some(1))]),
+        ];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::LeaseReuse);
+        // The same pair *with* the edge is clean: reuse is fine when the
+        // next checkout chains behind the previous lease's events.
+        let chained = [
+            rec(0, &[], vec![Access::usm_leased(5, AccessMode::Write, Some(0))]),
+            rec(1, &[0], vec![Access::usm_leased(5, AccessMode::Write, Some(1))]),
+        ];
+        assert!(analyze_hazards(&chained).is_clean());
+    }
+
+    #[test]
+    fn generation_going_backwards_is_stale_even_when_ordered() {
+        let records = [
+            rec(0, &[], vec![Access::usm_leased(5, AccessMode::Write, Some(3))]),
+            rec(1, &[0], vec![Access::usm_leased(5, AccessMode::Write, Some(2))]),
+        ];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::StaleLease);
+    }
+
+    #[test]
+    fn window_floor_externalizes_drained_deps() {
+        // Window starts at id 10; deps on 3 are drained predecessors, a
+        // dep on 11 from id 12 is fine, a dep on 999 is dangling.
+        let records = [
+            rec(10, &[3], vec![]),
+            rec(11, &[10], vec![]),
+            rec(12, &[11, 999], vec![]),
+        ];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.external_deps, 1);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::DanglingDep);
+        assert_eq!(report.hazards[0].second, 999);
+    }
+
+    #[test]
+    fn duplicate_ids_are_reported_and_excluded() {
+        let records = [rec(0, &[], vec![]), rec(0, &[], vec![]), rec(1, &[0], vec![])];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::DuplicateId);
+    }
+
+    #[test]
+    fn report_json_has_counts_and_hazard_entries() {
+        let records = [
+            rec(0, &[], vec![Access::usm(1, AccessMode::Write)]),
+            rec(1, &[], vec![Access::usm(1, AccessMode::Write)]),
+        ];
+        let report = analyze_hazards(&records);
+        let v = report.to_json();
+        assert_eq!(v.get("clean"), Some(&Value::Bool(false)));
+        assert_eq!(v.get("counts").and_then(|c| c.get("waw")).and_then(Value::as_f64), Some(1.0));
+        assert_eq!(v.get("hazards").and_then(Value::as_array).map(<[Value]>::len), Some(1));
+        // Round-trips through the serializer.
+        assert!(Value::parse(&v.to_json()).is_ok());
+        assert!(report.pretty().contains("waw"));
+    }
+}

@@ -23,11 +23,17 @@
 //! independent commands overlap on the virtual timeline, an in-order queue
 //! serialises them. Profiling info on [`Event`]s mirrors
 //! `info::event_profiling`.
+//!
+//! Every command additionally records its *access set* ([`Access`]), and
+//! the [`hazard`] analyzer proves each recorded DAG race-free — see
+//! [`analyze_hazards`], [`Dag::analyze_hazards`], and the enforcement
+//! hooks in [`Queue::wait`]/[`Queue::drain_records`] (S14).
 
 mod arena;
 mod buffer;
 mod dag;
 mod event;
+pub mod hazard;
 mod interop;
 mod profile;
 mod queue;
@@ -36,7 +42,8 @@ mod usm;
 pub use arena::{ArenaStats, UsmArena, UsmLease};
 pub use buffer::{AccessMode, Buffer};
 pub use dag::{Dag, DagStats};
-pub use event::{CommandClass, CommandRecord, Event};
+pub use event::{Access, AccessKind, CommandClass, CommandRecord, Event};
+pub use hazard::{analyze_hazards, Hazard, HazardKind, HazardReport};
 pub use interop::InteropHandle;
 pub use profile::SyclRuntimeProfile;
 pub use queue::{CommandGroupHandler, Queue};

@@ -1,12 +1,13 @@
 //! Queues and command groups: eager execution, virtual-time scheduling.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::platform::{jitter_from, CommandCost, PerfModel, PlatformId, PlatformSpec};
 
 use super::buffer::{AccessMode, Buffer, BufferDeps};
-use super::event::{CommandClass, CommandRecord, Event, EventInner};
+use super::event::{Access, CommandClass, CommandRecord, Event, EventInner};
+use super::hazard::analyze_hazards;
 use super::interop::InteropHandle;
 use super::profile::SyclRuntimeProfile;
 use super::usm::UsmBuffer;
@@ -147,6 +148,10 @@ struct QueueState {
     channel_end_ns: std::collections::HashMap<Channel, u64>,
     records: Vec<CommandRecord>,
     noise_salt: u64,
+    /// Record-log length already proven hazard-free (enforcement memo:
+    /// records are append-only between drains, so a clean prefix stays
+    /// clean and `wait()` only re-analyzes when the log has grown).
+    hazard_verified_len: usize,
 }
 
 /// A SYCL queue bound to one device and one runtime profile.
@@ -239,6 +244,7 @@ impl Queue {
                         dir: crate::platform::TransferDir::H2D,
                     },
                     &self.buffer_deps(decl, /*transfer*/ true),
+                    vec![Access::buffer(decl.buffer_id, AccessMode::Write)],
                     0,
                 );
                 let mut d = decl.deps.lock().unwrap();
@@ -262,7 +268,12 @@ impl Queue {
         task(&ih);
         let wall_ns = wall_start.elapsed().as_nanos() as u64;
 
-        let ev = self.record_command(&mut st, name, class, cost, &deps, wall_ns);
+        let accesses = cgh
+            .accessors
+            .iter()
+            .map(|decl| Access::buffer(decl.buffer_id, decl.mode))
+            .collect();
+        let ev = self.record_command(&mut st, name, class, cost, &deps, accesses, wall_ns);
 
         // Update buffer hazard state.
         for decl in &cgh.accessors {
@@ -279,13 +290,16 @@ impl Queue {
 
     /// USM-path submission: no accessors, explicit event dependencies only
     /// (paper §4.1: "it is the user's responsibility to ensure dependencies
-    /// are met").
+    /// are met"). `accesses` declares which allocations the command touches
+    /// — the runtime cannot derive it without accessors, and the hazard
+    /// analyzer uses it to prove the explicit `deps` are sufficient.
     pub fn submit_usm(
         &self,
         name: impl Into<String>,
         class: CommandClass,
         cost: CommandCost,
         deps: &[Event],
+        accesses: Vec<Access>,
         f: impl FnOnce(&InteropHandle),
     ) -> Event {
         let mut st = self.state.lock().unwrap();
@@ -298,7 +312,7 @@ impl Queue {
         f(&ih);
         let wall_ns = wall_start.elapsed().as_nanos() as u64;
 
-        self.record_command(&mut st, name.into(), class, cost, deps, wall_ns)
+        self.record_command(&mut st, name.into(), class, cost, deps, accesses, wall_ns)
     }
 
     /// Allocate device USM (`malloc_device`) — a blocking host call.
@@ -324,6 +338,7 @@ impl Queue {
             CommandClass::TransferD2H,
             CommandCost::Transfer { bytes, dir: crate::platform::TransferDir::D2H },
             &deps,
+            vec![Access::buffer(buf.id(), AccessMode::Read)],
             0,
         );
         // Blocking: the host waits for the copy.
@@ -348,6 +363,7 @@ impl Queue {
             CommandClass::TransferD2H,
             CommandCost::Transfer { bytes, dir: crate::platform::TransferDir::D2H },
             deps,
+            vec![Access::usm(usm.id(), AccessMode::Read)],
             0,
         );
         st.host_now_ns = st.host_now_ns.max(ev.profiling_command_end());
@@ -371,12 +387,19 @@ impl Queue {
         let bytes = (len * std::mem::size_of::<T>()) as u64;
         let mut st = self.state.lock().unwrap();
         st.host_now_ns += self.profile.usm_dep_wait_ns() * deps.len() as u64;
+        // The copy reads the USM source and writes a per-command host reply
+        // slice (the next command id doubles as a unique slice id).
+        let accesses = vec![
+            Access::usm(usm.id(), AccessMode::Read),
+            Access::host_slice(st.next_id),
+        ];
         let ev = self.record_command(
             &mut st,
             format!("d2h:usm{}+{offset}", usm.id()),
             CommandClass::TransferD2H,
             CommandCost::Transfer { bytes, dir: crate::platform::TransferDir::D2H },
             deps,
+            accesses,
             0,
         );
         drop(st);
@@ -389,12 +412,58 @@ impl Queue {
         self.state.lock().unwrap().host_now_ns += ns;
     }
 
+    /// Whether hazard enforcement is on for this process: `wait()` and
+    /// [`Queue::drain_records`] run the analyzer and panic on any
+    /// diagnostic. Controlled by `PORTARNG_HAZARD_CHECK` (`"0"` or empty
+    /// disables, any other value enables); when unset, enforcement follows
+    /// `cfg(debug_assertions)` — debug test runs get race detection for
+    /// free, release benchmarks stay unperturbed.
+    pub fn hazard_check_enabled() -> bool {
+        static ENABLED: OnceLock<bool> = OnceLock::new();
+        *ENABLED.get_or_init(|| match std::env::var("PORTARNG_HAZARD_CHECK") {
+            Ok(v) => !(v.is_empty() || v == "0"),
+            Err(_) => cfg!(debug_assertions),
+        })
+    }
+
+    /// Enforcement helper: analyze the retained records if enabled and the
+    /// log grew since the last clean pass. Returns the failure message
+    /// instead of panicking so callers can release the state lock first
+    /// (panicking under the lock would poison the queue for unwinding
+    /// observers). In-order queues are skipped: same-queue commands
+    /// serialise by construction, so unordered record pairs are not races.
+    fn hazard_violation(&self, st: &mut QueueState) -> Option<String> {
+        if self.in_order
+            || !Queue::hazard_check_enabled()
+            || st.records.len() == st.hazard_verified_len
+        {
+            return None;
+        }
+        let report = analyze_hazards(&st.records);
+        if report.is_clean() {
+            st.hazard_verified_len = st.records.len();
+            None
+        } else {
+            Some(format!("hazard check failed (PORTARNG_HAZARD_CHECK):\n{}", report.pretty()))
+        }
+    }
+
     /// Block until all submitted commands complete; returns total virtual
     /// elapsed ns (the paper's "total execution time" clock).
+    ///
+    /// Under hazard enforcement ([`Queue::hazard_check_enabled`]) the
+    /// retained records are analyzed first — a sync point is exactly where
+    /// a race would be observed — and any diagnostic panics.
     pub fn wait(&self) -> u64 {
         let mut st = self.state.lock().unwrap();
         st.host_now_ns = st.host_now_ns.max(st.last_end_ns) + self.profile.sync_ns();
-        st.host_now_ns
+        let now = st.host_now_ns;
+        let violation = self.hazard_violation(&mut st);
+        drop(st);
+        if let Some(msg) = violation {
+            panic!("{msg}");
+        }
+        now
     }
 
     /// Current virtual host time (ns) without synchronising.
@@ -433,8 +502,25 @@ impl Queue {
     /// log empty (timeline state — virtual clocks, channel availability,
     /// command ids — is unaffected). Long-lived worker queues drain after
     /// every flush so the log never grows with uptime.
+    ///
+    /// Under hazard enforcement ([`Queue::hazard_check_enabled`]) the
+    /// drained window is analyzed and any diagnostic panics — for a
+    /// flush-per-drain worker this checks exactly one flush's DAG.
     pub fn drain_records(&self) -> Vec<CommandRecord> {
-        std::mem::take(&mut self.state.lock().unwrap().records)
+        let (records, in_order) = {
+            let mut st = self.state.lock().unwrap();
+            st.hazard_verified_len = 0;
+            (std::mem::take(&mut st.records), self.in_order)
+        };
+        if !in_order && Queue::hazard_check_enabled() {
+            let report = analyze_hazards(&records);
+            assert!(
+                report.is_clean(),
+                "hazard check failed (PORTARNG_HAZARD_CHECK):\n{}",
+                report.pretty()
+            );
+        }
+        records
     }
 
     fn buffer_deps(&self, decl: &AccessorDecl, for_transfer: bool) -> Vec<Event> {
@@ -452,6 +538,7 @@ impl Queue {
         deps
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn record_command(
         &self,
         st: &mut QueueState,
@@ -459,6 +546,7 @@ impl Queue {
         class: CommandClass,
         cost: CommandCost,
         deps: &[Event],
+        accesses: Vec<Access>,
         wall_ns: u64,
     ) -> Event {
         let id = st.next_id;
@@ -516,6 +604,7 @@ impl Queue {
             wall_ns,
             tpb,
             occupancy: occ,
+            accesses,
         });
         ev
     }
@@ -661,12 +750,20 @@ mod tests {
     #[test]
     fn usm_explicit_deps_enforced() {
         let queue = q();
-        let e1 = queue.submit_usm("gen", CommandClass::Generate, kernel_cost(1 << 16), &[], |_| {});
+        let e1 = queue.submit_usm(
+            "gen",
+            CommandClass::Generate,
+            kernel_cost(1 << 16),
+            &[],
+            vec![],
+            |_| {},
+        );
         let e2 = queue.submit_usm(
             "xform",
             CommandClass::Transform,
             kernel_cost(1 << 16),
             std::slice::from_ref(&e1),
+            vec![],
             |_| {},
         );
         assert!(e2.profiling_command_start() >= e1.profiling_command_end());
@@ -678,12 +775,20 @@ mod tests {
         // readback may start while the producing kernel still runs.
         // (hipSYCL profile: cheap USM submits, so the overlap is visible.)
         let queue = Queue::new(PlatformId::Vega56, SyclRuntimeProfile::HipSycl);
-        let e1 = queue.submit_usm("gen", CommandClass::Generate, kernel_cost(1 << 22), &[], |_| {});
+        let e1 = queue.submit_usm(
+            "gen",
+            CommandClass::Generate,
+            kernel_cost(1 << 22),
+            &[],
+            vec![],
+            |_| {},
+        );
         let e2 = queue.submit_usm(
             "d2h",
             CommandClass::TransferD2H,
             CommandCost::Transfer { bytes: 4 << 22, dir: TransferDir::D2H },
             &[],
+            vec![],
             |_| {},
         );
         assert!(e2.profiling_command_start() < e1.profiling_command_end());
@@ -782,7 +887,8 @@ mod tests {
         assert_eq!(queue.records_len(), 0);
         // Draining does not reset the timeline: new commands keep fresh
         // ids and start no earlier than the drained ones ended.
-        let ev = queue.submit_usm("k2", CommandClass::Generate, kernel_cost(16), &[], |_| {});
+        let ev =
+            queue.submit_usm("k2", CommandClass::Generate, kernel_cost(16), &[], vec![], |_| {});
         assert!(ev.id() > drained.last().unwrap().id);
         assert_eq!(queue.records_len(), 1);
     }
@@ -792,7 +898,14 @@ mod tests {
         let queue = q();
         let usm = queue.malloc_device::<f32>(64);
         usm.lock()[10] = 5.0;
-        let gen = queue.submit_usm("gen", CommandClass::Generate, kernel_cost(64), &[], |_| {});
+        let gen = queue.submit_usm(
+            "gen",
+            CommandClass::Generate,
+            kernel_cost(64),
+            &[],
+            vec![Access::usm(usm.id(), AccessMode::Write)],
+            |_| {},
+        );
         let host_before = queue.virtual_now_ns();
         let (data, ev) = queue.usm_slice_to_host(&usm, 10, 4, std::slice::from_ref(&gen));
         assert_eq!(data, vec![5.0, 0.0, 0.0, 0.0]);

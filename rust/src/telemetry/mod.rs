@@ -6,8 +6,9 @@
 //! pool workers with relaxed atomics (nothing on the request hot path
 //! takes a lock or allocates), and read through cheap [`snapshot`]
 //! copies that serialize through `jsonlite` (schema
-//! `portarng-telemetry-v2`: adds per-command-class virtual timings and
-//! worker-arena counters; v1 superseded). The
+//! `portarng-telemetry-v3`: per-command-class virtual timings,
+//! worker-arena counters, and per-shard DAG-hazard counters
+//! [`HazardCounters`]; v1/v2 superseded). The
 //! [`autotune`](crate::autotune) controller
 //! closes the loop by turning snapshot deltas into
 //! [`DispatchPolicy`](crate::coordinator::DispatchPolicy) retunes.
@@ -19,6 +20,6 @@ mod registry;
 
 pub use histogram::{HistogramSnapshot, Log2Histogram, BUCKETS};
 pub use registry::{
-    ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, Lane, ShardSnapshot,
-    ShardTelemetry, TelemetryRegistry, TelemetrySnapshot, TELEMETRY_SCHEMA,
+    ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, HazardCounters, Lane,
+    ShardSnapshot, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot, TELEMETRY_SCHEMA,
 };

@@ -10,12 +10,14 @@
 //!
 //! [`TelemetryRegistry::snapshot`] copies everything into a plain
 //! [`TelemetrySnapshot`] that serializes through `jsonlite`
-//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v2`, see
-//! README "Telemetry snapshot schema"). v2 adds per-command-class virtual
+//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v3`, see
+//! README "Telemetry snapshot schema"). v2 added per-command-class virtual
 //! timings ([`CommandTiming`]: generate / transform / d2h / other, fed
 //! from drained queue records) and the worker arena's allocation counters
 //! ([`ArenaCounters`]) to every shard — what the autotuner and the Fig. 4
-//! style breakdown read; v1 (counters + histograms only) is superseded.
+//! style breakdown read. v3 adds the per-shard `hazards` block
+//! ([`HazardCounters`]: per-flush DAG hazard-analysis results — see
+//! DESIGN.md S14) and the arena `leaked` counter; v1/v2 are superseded.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,8 +31,9 @@ use crate::platform::PlatformId;
 use super::histogram::{HistogramSnapshot, Log2Histogram};
 
 /// Telemetry snapshot schema identifier (bump on breaking changes).
-/// v1 (no per-command-class timings, no arena counters) is superseded.
-pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v2";
+/// v1 (no per-command-class timings, no arena counters) and v2 (no
+/// hazard counters, no arena `leaked`) are superseded.
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v3";
 
 /// Command classes the serving path times. Mirrors
 /// `sycl::CommandClass` for the classes the pool's flushes issue —
@@ -121,6 +124,9 @@ pub struct ArenaCounters {
     pub misses: u64,
     /// Leases returned to the free lists.
     pub recycles: u64,
+    /// Leases dropped without recycling (allocation freed, pending events
+    /// discarded) — nonzero means a worker is burning warm allocations.
+    pub leaked: u64,
     /// Allocations parked in the free lists.
     pub pooled: u64,
     /// Bytes parked in the free lists.
@@ -143,6 +149,7 @@ impl ArenaCounters {
             hits: self.hits + other.hits,
             misses: self.misses + other.misses,
             recycles: self.recycles + other.recycles,
+            leaked: self.leaked + other.leaked,
             pooled: self.pooled + other.pooled,
             pooled_bytes: self.pooled_bytes + other.pooled_bytes,
         }
@@ -154,6 +161,7 @@ impl ArenaCounters {
         m.insert("hits".into(), Value::Number(self.hits as f64));
         m.insert("misses".into(), Value::Number(self.misses as f64));
         m.insert("recycles".into(), Value::Number(self.recycles as f64));
+        m.insert("leaked".into(), Value::Number(self.leaked as f64));
         m.insert("pooled".into(), Value::Number(self.pooled as f64));
         m.insert("pooled_bytes".into(), Value::Number(self.pooled_bytes as f64));
         Value::Object(m)
@@ -171,8 +179,133 @@ impl ArenaCounters {
             hits: num("hits")?,
             misses: num("misses")?,
             recycles: num("recycles")?,
+            leaked: num("leaked")?,
             pooled: num("pooled")?,
             pooled_bytes: num("pooled_bytes")?,
+        })
+    }
+}
+
+/// Accumulated DAG hazard-analysis results for one shard (mirror of the
+/// `sycl::hazard` report counts, defined here to keep the layer
+/// independent of the substrate). Workers fold one window in per flush —
+/// on a healthy pool every diagnostic counter stays zero and `windows`
+/// tracks `launches`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HazardCounters {
+    /// Record windows analyzed (one per drained flush).
+    pub windows: u64,
+    /// Commands covered across all windows.
+    pub commands: u64,
+    /// Dependency edges satisfied by earlier (drained) windows.
+    pub external_deps: u64,
+    /// Read-after-write hazards (no ordering path).
+    pub raw: u64,
+    /// Write-after-read hazards.
+    pub war: u64,
+    /// Write-after-write hazards.
+    pub waw: u64,
+    /// D2H readbacks not ordered after their producer.
+    pub unordered_d2h: u64,
+    /// Arena-lease generations reused without inheriting pending events.
+    pub lease_reuse: u64,
+    /// Commands holding a stale lease generation.
+    pub stale_lease: u64,
+    /// Dependency edges pointing at unknown commands.
+    pub dangling_dep: u64,
+    /// Duplicate command ids in one window.
+    pub duplicate_id: u64,
+}
+
+impl HazardCounters {
+    /// One analyzed window with per-kind diagnostic counts in
+    /// `sycl::HazardKind::ALL` order (raw, war, waw, unordered-d2h,
+    /// lease-reuse, stale-lease, dangling-dep, duplicate-id) — the layout
+    /// `sycl::HazardReport::counts` produces.
+    pub fn from_window(commands: u64, external_deps: u64, counts: [u64; 8]) -> HazardCounters {
+        HazardCounters {
+            windows: 1,
+            commands,
+            external_deps,
+            raw: counts[0],
+            war: counts[1],
+            waw: counts[2],
+            unordered_d2h: counts[3],
+            lease_reuse: counts[4],
+            stale_lease: counts[5],
+            dangling_dep: counts[6],
+            duplicate_id: counts[7],
+        }
+    }
+
+    /// Total diagnostics of any kind.
+    pub fn total(&self) -> u64 {
+        self.raw
+            + self.war
+            + self.waw
+            + self.unordered_d2h
+            + self.lease_reuse
+            + self.stale_lease
+            + self.dangling_dep
+            + self.duplicate_id
+    }
+
+    /// True when every analyzed window was race-free.
+    pub fn clean(&self) -> bool {
+        self.total() == 0
+    }
+
+    fn merged(self, other: HazardCounters) -> HazardCounters {
+        HazardCounters {
+            windows: self.windows + other.windows,
+            commands: self.commands + other.commands,
+            external_deps: self.external_deps + other.external_deps,
+            raw: self.raw + other.raw,
+            war: self.war + other.war,
+            waw: self.waw + other.waw,
+            unordered_d2h: self.unordered_d2h + other.unordered_d2h,
+            lease_reuse: self.lease_reuse + other.lease_reuse,
+            stale_lease: self.stale_lease + other.stale_lease,
+            dangling_dep: self.dangling_dep + other.dangling_dep,
+            duplicate_id: self.duplicate_id + other.duplicate_id,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("windows".into(), Value::Number(self.windows as f64));
+        m.insert("commands".into(), Value::Number(self.commands as f64));
+        m.insert("external_deps".into(), Value::Number(self.external_deps as f64));
+        m.insert("raw".into(), Value::Number(self.raw as f64));
+        m.insert("war".into(), Value::Number(self.war as f64));
+        m.insert("waw".into(), Value::Number(self.waw as f64));
+        m.insert("unordered_d2h".into(), Value::Number(self.unordered_d2h as f64));
+        m.insert("lease_reuse".into(), Value::Number(self.lease_reuse as f64));
+        m.insert("stale_lease".into(), Value::Number(self.stale_lease as f64));
+        m.insert("dangling_dep".into(), Value::Number(self.dangling_dep as f64));
+        m.insert("duplicate_id".into(), Value::Number(self.duplicate_id as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<HazardCounters> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("hazard counters missing `{key}`")))
+        };
+        Ok(HazardCounters {
+            windows: num("windows")?,
+            commands: num("commands")?,
+            external_deps: num("external_deps")?,
+            raw: num("raw")?,
+            war: num("war")?,
+            waw: num("waw")?,
+            unordered_d2h: num("unordered_d2h")?,
+            lease_reuse: num("lease_reuse")?,
+            stale_lease: num("stale_lease")?,
+            dangling_dep: num("dangling_dep")?,
+            duplicate_id: num("duplicate_id")?,
         })
     }
 }
@@ -231,6 +364,9 @@ pub struct ShardTelemetry {
     /// flushes (hits from one, checkouts from another would make the
     /// allocation gate's deltas lie).
     arena: std::sync::Mutex<ArenaCounters>,
+    /// Accumulated hazard-analysis results, folded in once per drained
+    /// flush window (same one-lock-per-flush pattern as `arena`).
+    hazards: std::sync::Mutex<HazardCounters>,
 }
 
 impl ShardTelemetry {
@@ -250,6 +386,7 @@ impl ShardTelemetry {
             command_cmds: std::array::from_fn(|_| AtomicU64::new(0)),
             command_virt_ns: std::array::from_fn(|_| AtomicU64::new(0)),
             arena: std::sync::Mutex::new(ArenaCounters::default()),
+            hazards: std::sync::Mutex::new(HazardCounters::default()),
         }
     }
 
@@ -297,6 +434,14 @@ impl ShardTelemetry {
         *self.arena.lock().unwrap() = c;
     }
 
+    /// Fold one flush window's hazard-analysis results in (counts are
+    /// cumulative, unlike the absolute arena publish — each drained window
+    /// is analyzed exactly once).
+    pub fn record_hazards(&self, window: HazardCounters) {
+        let mut h = self.hazards.lock().unwrap();
+        *h = h.merged(window);
+    }
+
     /// Copy this shard's counters out.
     pub fn snapshot(&self) -> ShardSnapshot {
         let timing = |k: CommandKind| CommandTiming {
@@ -304,6 +449,7 @@ impl ShardTelemetry {
             virt_ns: self.command_virt_ns[k.index()].load(Ordering::Relaxed),
         };
         let arena = *self.arena.lock().unwrap();
+        let hazards = *self.hazards.lock().unwrap();
         ShardSnapshot {
             shard: self.shard,
             lane: self.lane,
@@ -321,6 +467,7 @@ impl ShardTelemetry {
             d2h: timing(CommandKind::TransferD2H),
             other: timing(CommandKind::Other),
             arena,
+            hazards,
         }
     }
 }
@@ -427,6 +574,8 @@ pub struct ShardSnapshot {
     pub other: CommandTiming,
     /// Worker USM-arena counters at snapshot time.
     pub arena: ArenaCounters,
+    /// Accumulated hazard-analysis results for this shard's flushes.
+    pub hazards: HazardCounters,
 }
 
 impl ShardSnapshot {
@@ -450,6 +599,7 @@ impl ShardSnapshot {
         commands.insert("other".into(), self.other.to_json());
         m.insert("commands".into(), Value::Object(commands));
         m.insert("arena".into(), self.arena.to_json());
+        m.insert("hazards".into(), self.hazards.to_json());
         Value::Object(m)
     }
 
@@ -502,6 +652,10 @@ impl ShardSnapshot {
             arena: ArenaCounters::from_json(
                 v.get("arena")
                     .ok_or_else(|| Error::Json("shard snapshot missing `arena`".into()))?,
+            )?,
+            hazards: HazardCounters::from_json(
+                v.get("hazards")
+                    .ok_or_else(|| Error::Json("shard snapshot missing `hazards`".into()))?,
             )?,
         })
     }
@@ -596,7 +750,16 @@ impl TelemetrySnapshot {
             .fold(ArenaCounters::default(), ArenaCounters::merged)
     }
 
-    /// Serialize (schema `portarng-telemetry-v2`).
+    /// Hazard-analysis results summed across shards — on a healthy pool
+    /// `total()` is zero and `windows` equals [`Self::total_launches`].
+    pub fn hazard_totals(&self) -> HazardCounters {
+        self.shards
+            .iter()
+            .map(|s| s.hazards)
+            .fold(HazardCounters::default(), HazardCounters::merged)
+    }
+
+    /// Serialize (schema `portarng-telemetry-v3`).
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
@@ -679,9 +842,12 @@ mod tests {
             hits: 9,
             misses: 1,
             recycles: 10,
+            leaked: 0,
             pooled: 1,
             pooled_bytes: 4096,
         });
+        s0.record_hazards(HazardCounters::from_window(4, 2, [0; 8]));
+        s0.record_hazards(HazardCounters::from_window(6, 3, [0, 0, 0, 1, 0, 0, 0, 0]));
         let s1 = reg.shard(1);
         s1.set_backend("cuRAND");
         s1.record_request(5000);
@@ -728,6 +894,23 @@ mod tests {
         // Shard 1 never published arena counters: all-zero, rate 0.
         assert_eq!(snap.shards[1].arena, ArenaCounters::default());
         assert_eq!(snap.shards[1].arena.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn hazard_windows_accumulate_and_aggregate() {
+        let snap = sample_registry().snapshot();
+        let h0 = snap.shards[0].hazards;
+        assert_eq!(h0.windows, 2);
+        assert_eq!(h0.commands, 10);
+        assert_eq!(h0.external_deps, 5);
+        assert_eq!(h0.unordered_d2h, 1);
+        assert_eq!(h0.total(), 1);
+        assert!(!h0.clean());
+        // Shard 1 analyzed nothing: zero windows, trivially clean.
+        assert!(snap.shards[1].hazards.clean());
+        let totals = snap.hazard_totals();
+        assert_eq!(totals.windows, 2);
+        assert_eq!(totals.total(), 1);
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Hazard-analyzer integration suite (DESIGN.md S14): the existing
+//! generate corpus must prove race-free, deliberately broken submissions
+//! must yield exactly the expected typed diagnostics, and debug-mode
+//! enforcement must turn a dirty window into a panic at the sync point.
+
+use portarng::backends::{CurandBackend, RngBackend};
+use portarng::platform::{CommandCost, PlatformId};
+use portarng::rng::{
+    generate_batch_usm, generate_buffer, generate_usm, BatchSlice, Distribution, EngineKind,
+};
+use portarng::sycl::{
+    analyze_hazards, Access, AccessMode, CommandClass, Dag, HazardKind, Queue,
+    SyclRuntimeProfile, UsmArena,
+};
+use portarng::testkit;
+
+fn queue() -> Queue {
+    Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp)
+}
+
+fn philox(seed: u64) -> Box<dyn portarng::backends::VendorGenerator> {
+    CurandBackend::new().create_generator(EngineKind::Philox4x32x10, seed).unwrap()
+}
+
+fn kernel_cost(items: u64) -> CommandCost {
+    CommandCost::Kernel { bytes_read: 0, bytes_written: items * 4, items, tpb: 0 }
+}
+
+// ---------------------------------------------------------------------------
+// The existing corpus proves race-free.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn buffer_generate_corpus_is_clean() {
+    let q = queue();
+    let mut gen = philox(7);
+    let buf = portarng::sycl::Buffer::<f32>::new(1024);
+    generate_buffer(&q, &mut gen, Distribution::uniform(-1.0, 1.0), 1024, &buf).unwrap();
+    let _ = q.host_read(&buf);
+    q.wait(); // panics here under enforcement if the accessor-derived DAG raced
+    let records = q.drain_records();
+    let dag = Dag::new(&records);
+    dag.validate().unwrap();
+    assert!(dag.analyze_hazards().is_clean());
+}
+
+#[test]
+fn usm_generate_corpus_is_clean() {
+    let q = queue();
+    let mut gen = philox(8);
+    let usm = q.malloc_device::<f32>(1024);
+    let ev = generate_usm(&q, &mut gen, Distribution::uniform(0.0, 4.0), 1024, &usm, &[]).unwrap();
+    let _ = q.usm_to_host(&usm, std::slice::from_ref(&ev));
+    q.wait();
+    let report = analyze_hazards(&q.drain_records());
+    assert!(report.is_clean(), "{}", report.pretty());
+}
+
+// ---------------------------------------------------------------------------
+// Negative suite: each broken shape yields exactly its typed diagnostic.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn omitted_depends_on_is_exactly_one_unordered_d2h() {
+    let q = queue();
+    let mut gen = philox(9);
+    let usm = q.malloc_device::<f32>(256);
+    // Canonical range: the generate kernel is the only producer.
+    let _ev = generate_usm(&q, &mut gen, Distribution::uniform(0.0, 1.0), 256, &usm, &[]).unwrap();
+    // The §4.1 footgun: reading back without the event chain.
+    let _ = q.usm_to_host(&usm, &[]);
+    let report = analyze_hazards(&q.records());
+    assert_eq!(report.hazards.len(), 1, "{}", report.pretty());
+    assert_eq!(report.count_of(HazardKind::UnorderedD2h), 1);
+}
+
+#[test]
+fn forged_lease_generation_is_exactly_one_lease_reuse() {
+    let q = queue();
+    let usm = q.malloc_device::<f32>(64);
+    // Two writers claiming different lease generations with no ordering
+    // path: a recycled buffer whose pending events were never inherited.
+    q.submit_usm(
+        "flush0",
+        CommandClass::Generate,
+        kernel_cost(64),
+        &[],
+        vec![Access::usm_leased(usm.id(), AccessMode::Write, Some(0))],
+        |_| {},
+    );
+    q.submit_usm(
+        "flush1",
+        CommandClass::Generate,
+        kernel_cost(64),
+        &[],
+        vec![Access::usm_leased(usm.id(), AccessMode::Write, Some(1))],
+        |_| {},
+    );
+    let report = analyze_hazards(&q.records());
+    assert_eq!(report.hazards.len(), 1, "{}", report.pretty());
+    assert_eq!(report.count_of(HazardKind::LeaseReuse), 1);
+}
+
+#[test]
+fn stale_generation_is_flagged_even_with_an_ordering_path() {
+    let q = queue();
+    let usm = q.malloc_device::<f32>(64);
+    let ev = q.submit_usm(
+        "current",
+        CommandClass::Generate,
+        kernel_cost(64),
+        &[],
+        vec![Access::usm_leased(usm.id(), AccessMode::Write, Some(2))],
+        |_| {},
+    );
+    // Properly chained, but holding a handle from before the recycle.
+    q.submit_usm(
+        "stale-holder",
+        CommandClass::Generate,
+        kernel_cost(64),
+        std::slice::from_ref(&ev),
+        vec![Access::usm_leased(usm.id(), AccessMode::Write, Some(1))],
+        |_| {},
+    );
+    let report = analyze_hazards(&q.records());
+    assert_eq!(report.hazards.len(), 1, "{}", report.pretty());
+    assert_eq!(report.count_of(HazardKind::StaleLease), 1);
+}
+
+#[test]
+fn missing_pending_inheritance_across_recycle_classifies_all_three_ways() {
+    // Two single-member canonical flushes through one recycled launch
+    // buffer, with the second flush *dropping* the lease's pending events:
+    // gen0 -> d2h0 (chained), gen1 -> d2h1 (chained), nothing across.
+    let q = queue();
+    let mut gen = philox(10);
+    let arena: UsmArena<f32> = UsmArena::new();
+    let member = |off: u64| BatchSlice {
+        buffer_offset: 0,
+        stream_offset: off,
+        n: 128,
+        range: (0.0, 1.0),
+    };
+
+    let mut lease = arena.checkout(&q, 128);
+    let batch = generate_batch_usm(
+        &q,
+        gen.as_mut(),
+        &[member(0)],
+        128,
+        lease.buffer(),
+        Some(lease.generation()),
+        &[],
+    )
+    .unwrap();
+    lease.set_pending(batch.last_events());
+    lease.recycle();
+
+    let lease = arena.checkout(&q, 128);
+    assert_eq!(lease.generation(), 1);
+    let _ = generate_batch_usm(
+        &q,
+        gen.as_mut(),
+        &[member(128)],
+        128,
+        lease.buffer(),
+        Some(lease.generation()),
+        &[], // BUG under test: lease.deps() discarded
+    )
+    .unwrap();
+    lease.recycle();
+
+    let report = analyze_hazards(&q.records());
+    // gen0 vs gen1: cross-generation writers -> LeaseReuse.
+    assert_eq!(report.count_of(HazardKind::LeaseReuse), 1, "{}", report.pretty());
+    // gen0 (write) vs flush-1's D2H slice read -> the D2H special case.
+    assert_eq!(report.count_of(HazardKind::UnorderedD2h), 1, "{}", report.pretty());
+    // flush-0's D2H slice read vs gen1 (write) -> WAR.
+    assert_eq!(report.count_of(HazardKind::War), 1, "{}", report.pretty());
+    assert_eq!(report.hazards.len(), 3, "{}", report.pretty());
+}
+
+#[test]
+fn dangling_and_duplicate_edges_are_detected() {
+    use portarng::sycl::CommandRecord;
+    let rec = |id: u64, deps: &[u64]| CommandRecord {
+        id,
+        name: format!("c{id}"),
+        class: CommandClass::Other,
+        dep_ids: deps.to_vec(),
+        virt_start_ns: id * 10,
+        virt_end_ns: id * 10 + 5,
+        wall_ns: 0,
+        tpb: None,
+        occupancy: None,
+        accesses: vec![],
+    };
+    // Window floor is 20: the dep on 4 is an external (drained) edge, the
+    // dep on 777 is dangling, and the repeated id 21 is a collision.
+    let records =
+        [rec(20, &[4]), rec(21, &[20]), rec(21, &[20]), rec(22, &[21, 777])];
+    let report = analyze_hazards(&records);
+    assert_eq!(report.external_deps, 1);
+    assert_eq!(report.count_of(HazardKind::DanglingDep), 1);
+    assert_eq!(report.count_of(HazardKind::DuplicateId), 1);
+    assert_eq!(report.hazards.len(), 2, "{}", report.pretty());
+
+    let dag = Dag::new(&records);
+    assert!(dag.validate().unwrap_err().contains("duplicate command id"));
+}
+
+// ---------------------------------------------------------------------------
+// Enforcement: dirty windows panic at sync points when the check is on.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn enforcement_panics_on_wait_over_a_dirty_window() {
+    if !Queue::hazard_check_enabled() {
+        return; // release run without PORTARNG_HAZARD_CHECK=1
+    }
+    let q = queue();
+    let mut gen = philox(11);
+    let usm = q.malloc_device::<f32>(128);
+    let _ = generate_usm(&q, &mut gen, Distribution::uniform(0.0, 1.0), 128, &usm, &[]).unwrap();
+    let _ = q.usm_to_host(&usm, &[]); // missing event chain
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        q.wait();
+    }))
+    .unwrap_err();
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("unordered-d2h"), "unexpected panic payload: {msg}");
+}
+
+#[test]
+fn in_order_queues_are_exempt_from_enforcement() {
+    // Same dirty shape, but an in-order queue serialises submissions by
+    // construction — unordered record pairs are not races there, and the
+    // sync point must not panic.
+    let q = Queue::in_order(PlatformId::Rome7742, SyclRuntimeProfile::Dpcpp);
+    let mut gen = philox(12);
+    let usm = q.malloc_device::<f32>(128);
+    let _ = generate_usm(&q, &mut gen, Distribution::uniform(0.0, 1.0), 128, &usm, &[]).unwrap();
+    let _ = q.usm_to_host(&usm, &[]);
+    q.wait();
+    let _ = q.drain_records();
+}
+
+// ---------------------------------------------------------------------------
+// Satellite (c): arena checkout/recycle under stale pending events, pinned
+// by the analyzer as a property over random flush sequences.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_arena_flush_sequences_prove_race_free() {
+    testkit::forall("arena-flush-hazards", 20, |g| {
+        let q = queue();
+        let mut gen = philox(g.u64());
+        let arena: UsmArena<f32> = UsmArena::new();
+        let flushes = g.usize_in(2, 5);
+        let mut offset = 0u64;
+        for _ in 0..flushes {
+            let members: Vec<BatchSlice> = (0..g.usize_in(1, 4))
+                .map(|i| {
+                    let n = g.usize_in(16, 256);
+                    let m = BatchSlice {
+                        buffer_offset: i * 256,
+                        stream_offset: offset,
+                        n,
+                        range: if g.bool_with(0.5) { (0.0, 1.0) } else { (-2.0, 2.0) },
+                    };
+                    offset += n as u64;
+                    m
+                })
+                .collect();
+            let launch_n = members.len() * 256;
+            let mut lease = arena.checkout(&q, launch_n);
+            // The lease carries the previous tenant's pending events even
+            // when they are long finished ("stale" in wall time) — the
+            // chain must still be threaded for the proof to hold.
+            let deps = lease.deps().to_vec();
+            let batch = generate_batch_usm(
+                &q,
+                gen.as_mut(),
+                &members,
+                launch_n,
+                lease.buffer(),
+                Some(lease.generation()),
+                &deps,
+            )
+            .map_err(|e| e.to_string())?;
+            for p in &batch.payloads {
+                if let Err(e) = p {
+                    return Err(format!("member failed: {e}"));
+                }
+            }
+            lease.set_pending(batch.last_events());
+            lease.recycle();
+        }
+        q.wait(); // enforcement sync point (debug builds)
+        let records = q.drain_records();
+        let report = analyze_hazards(&records);
+        if !report.is_clean() {
+            return Err(format!("chained flush sequence reported: {}", report.pretty()));
+        }
+        let dag = Dag::new(&records);
+        dag.validate()?;
+
+        // Adversarial twin: replay the same shape with the pending chain
+        // severed at one random flush — the analyzer must notice.
+        let q2 = queue();
+        let mut gen2 = philox(g.u64());
+        let arena2: UsmArena<f32> = UsmArena::new();
+        let broken_at = g.usize_in(1, flushes - 1);
+        for flush in 0..flushes {
+            let mut lease = arena2.checkout(&q2, 256);
+            let deps = if flush == broken_at { Vec::new() } else { lease.deps().to_vec() };
+            let batch = generate_batch_usm(
+                &q2,
+                gen2.as_mut(),
+                &[BatchSlice {
+                    buffer_offset: 0,
+                    stream_offset: flush as u64 * 256,
+                    n: 256,
+                    range: (0.0, 1.0),
+                }],
+                256,
+                lease.buffer(),
+                Some(lease.generation()),
+                &deps,
+            )
+            .map_err(|e| e.to_string())?;
+            lease.set_pending(batch.last_events());
+            lease.recycle();
+        }
+        let report = analyze_hazards(&q2.records());
+        if report.count_of(HazardKind::LeaseReuse) == 0 {
+            return Err(format!(
+                "severed chain at flush {broken_at} went undetected: {}",
+                report.pretty()
+            ));
+        }
+        Ok(())
+    });
+}

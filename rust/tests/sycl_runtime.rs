@@ -120,6 +120,7 @@ fn prop_usm_dependency_chains_respected() {
                 CommandClass::Other,
                 kernel(g.range(1, 1 << 18)),
                 &deps,
+                vec![],
                 |_| {},
             );
             for d in &deps {
