@@ -1,0 +1,138 @@
+//! Bench: chaos soak — the resilience layer's acceptance gates (S15).
+//!
+//! Drives the pooled burner workload twice through a 4-shard pool: once
+//! fault-free (control) and once under a deterministic chaos plan that
+//! injects transient faults at ~5% per op across all three transient
+//! sites AND kills two shard workers outright at scheduled message ops.
+//! The plan's decision indices were chosen so faults are *structurally*
+//! guaranteed: shard 3's first submit op always trips (a whole flush is
+//! retried), and both kill points land well inside each victim's message
+//! stream.
+//!
+//! Acceptance gates:
+//!   * bit-identical recovery: the chaos run's request-stream checksum
+//!     equals the fault-free control's — every retried, re-dispatched,
+//!     or respawn-replayed request delivered its exact fault-free
+//!     payload;
+//!   * zero hung callers: replies are drained with a 60 s timeout inside
+//!     `run_burner_pooled_chaos`, so a stranded caller fails the run
+//!     instead of wedging it;
+//!   * live counters: faults.injected, shard.respawns and
+//!     requests.retried are all nonzero under chaos and all zero in the
+//!     control run;
+//!   * the `portarng-telemetry-v4` snapshot round-trips through JSON
+//!     with the resilience block intact;
+//!   * inert-path overhead: with no plan installed, `fault::trip` costs
+//!     under 200 ns per call (one thread-local read + a `None` check).
+
+use portarng::benchkit::{BenchConfig, BenchGroup};
+use portarng::burner::{run_burner_pooled_chaos, BurnerApi, BurnerConfig, PoolBurnerReport};
+use portarng::fault::{self, FaultSite, FaultSpec};
+use portarng::platform::PlatformId;
+use portarng::telemetry::TelemetrySnapshot;
+
+const BATCH: usize = 4096;
+const REQUESTS: usize = 160;
+const SHARDS: usize = 4;
+
+/// Seed 7 at rate 0.05 was chosen against the (pure) decision function:
+/// every batched shard trips at least once inside the op range this
+/// workload consumes, with no back-to-back fire runs long enough to
+/// exhaust the retry budget. The kills hit shard 0 at its 3rd message and
+/// shard 2 at its 5th.
+const CHAOS: &str = "seed=7,rate=0.05,sites=generate+submit+d2h,kill=0@3+2@5";
+
+fn run(chaos: Option<&FaultSpec>) -> PoolBurnerReport {
+    let cfg = BurnerConfig::paper_default(PlatformId::A100, BurnerApi::SyclUsm, BATCH);
+    run_burner_pooled_chaos(&cfg, SHARDS, REQUESTS, chaos).unwrap()
+}
+
+fn main() {
+    let spec = FaultSpec::parse(CHAOS).unwrap();
+    println!(
+        "chaos soak: {REQUESTS} requests x {BATCH} numbers, {SHARDS} shards\n  plan: {spec}\n"
+    );
+
+    let mut g = BenchGroup::new("chaos").config(BenchConfig { warmup: 1, samples: 5 });
+
+    // Control: the same workload with no plan installed. Every resilience
+    // counter must read zero — proof the fault layer is inert when
+    // unconfigured.
+    let mut control: Option<PoolBurnerReport> = None;
+    g.bench_items(&format!("fault-free/{REQUESTS}x{BATCH}"), (REQUESTS * BATCH) as u64, || {
+        control = Some(run(None));
+    });
+    let control = control.unwrap();
+    let res = control.telemetry.resilience_totals();
+    assert!(
+        !res.any(),
+        "fault-free run reported nonzero resilience counters: {res:?}"
+    );
+    println!(
+        "    -> checksum {:016x}, resilience counters all zero: OK",
+        control.checksum
+    );
+
+    // Chaos: same workload under the plan. Each sample spawns a fresh
+    // pool (fresh per-shard plans), so the kills fire in every sample.
+    let mut soaked: Option<PoolBurnerReport> = None;
+    g.bench_items(&format!("chaos-5pct/{REQUESTS}x{BATCH}"), (REQUESTS * BATCH) as u64, || {
+        soaked = Some(run(Some(&spec)));
+    });
+    let soaked = soaked.unwrap();
+
+    // Gate 1: bit-identical recovery. Completed replies under chaos fold
+    // to the exact fault-free checksum (counter-based streams addressed
+    // by global offset make the re-dispatch a pure replay).
+    assert_eq!(
+        soaked.checksum, control.checksum,
+        "chaos run diverged from the fault-free stream"
+    );
+    assert_eq!(soaked.numbers, control.numbers, "chaos run dropped replies");
+    println!("\nbit-identical under chaos: OK (checksum {:016x})", soaked.checksum);
+
+    // Gate 2: the injected faults actually happened and were absorbed.
+    let res = soaked.telemetry.resilience_totals();
+    assert!(res.faults_injected >= 3, "plan injected only {} fault(s)", res.faults_injected);
+    assert!(res.shard_respawns >= 2, "expected both scheduled kills to respawn a worker");
+    assert!(res.requests_retried >= 1, "no request was retried despite transient faults");
+    println!(
+        "resilience counters: {} injected, {} respawns, {} retried, {} shed, \
+         {} deadline-exceeded: OK",
+        res.faults_injected,
+        res.shard_respawns,
+        res.requests_retried,
+        res.requests_shed,
+        res.deadline_exceeded
+    );
+
+    // Gate 3: the v4 snapshot survives a JSON round-trip with the
+    // resilience block intact.
+    let json = soaked.telemetry.to_json().to_json();
+    assert!(json.contains("portarng-telemetry-v4"), "snapshot lost its schema tag");
+    let back = TelemetrySnapshot::from_json(
+        &portarng::jsonlite::Value::parse(&json).expect("snapshot JSON must parse"),
+    )
+    .expect("snapshot must round-trip");
+    let back_res = back.resilience_totals();
+    assert_eq!(back_res.faults_injected, res.faults_injected, "round-trip lost fault counts");
+    assert_eq!(back_res.shard_respawns, res.shard_respawns, "round-trip lost respawn counts");
+    println!("telemetry v4 round-trip with resilience block: OK");
+
+    // Gate 4: inert-path overhead. No plan is installed on this thread,
+    // so trip() must reduce to a thread-local read + None check.
+    const TRIPS: u32 = 1_000_000;
+    let t0 = std::time::Instant::now();
+    for _ in 0..TRIPS {
+        std::hint::black_box(fault::trip(std::hint::black_box(FaultSite::Generate)).is_ok());
+    }
+    let ns_per_trip = t0.elapsed().as_nanos() as f64 / TRIPS as f64;
+    assert!(
+        ns_per_trip < 200.0,
+        "uninstalled fault::trip costs {ns_per_trip:.1} ns/call (want < 200)"
+    );
+    println!("inert trip overhead: {ns_per_trip:.1} ns/call (< 200): OK");
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_chaos_soak.csv", g.to_csv()).unwrap();
+}

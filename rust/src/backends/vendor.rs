@@ -73,6 +73,10 @@ impl VendorGenerator for VendorGeneratorImpl {
 
     fn generate_canonical(&mut self, distr: &Distribution, out: &mut [f32]) -> Result<()> {
         self.check_live()?;
+        // The resilience layer's vendor-call fault seam: a thread-level
+        // chaos plan can refuse this generation op (modelling e.g. a
+        // curandGenerate* status error). Inert without a plan.
+        crate::fault::trip(crate::fault::FaultSite::Generate)?;
         match distr {
             Distribution::Uniform { .. } => {
                 self.engine.fill_uniform_f32(out);

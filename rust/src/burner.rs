@@ -21,6 +21,7 @@ use crate::backends::{
 };
 use crate::coordinator::{PoolConfig, PoolStats, ServicePool};
 use crate::error::{Error, Result};
+use crate::fault::FaultSpec;
 use crate::platform::{CommandCost, PlatformId, PlatformKind, TransferDir};
 use crate::rng::engines::EngineKind;
 use crate::rng::{generate_buffer, generate_usm, Distribution};
@@ -588,6 +589,22 @@ pub fn run_burner_pooled(
     shards: usize,
     requests: usize,
 ) -> Result<PoolBurnerReport> {
+    run_burner_pooled_chaos(cfg, shards, requests, None)
+}
+
+/// [`run_burner_pooled`] with an optional deterministic chaos plan
+/// (`burner --pool --chaos <spec>`, DESIGN.md S15). The plan injects
+/// transient faults and worker kills at seeded op counts; the resilience
+/// layer must absorb them, so the report's checksum is required to equal
+/// the fault-free run's. Replies are drained with a timeout so an injected
+/// fault that *did* strand a caller fails the run with a typed error
+/// instead of hanging it.
+pub fn run_burner_pooled_chaos(
+    cfg: &BurnerConfig,
+    shards: usize,
+    requests: usize,
+    chaos: Option<&FaultSpec>,
+) -> Result<PoolBurnerReport> {
     if !matches!(cfg.api, BurnerApi::SyclBuffer | BurnerApi::SyclUsm) {
         return Err(Error::InvalidArgument(format!(
             "pooled burner serves through the SYCL runtime (USM batch path); \
@@ -609,6 +626,13 @@ pub fn run_burner_pooled(
     // every shard count so scaling comparisons are apples-to-apples.
     pool_cfg.max_batch = cfg.batch.saturating_mul(4).max(1);
     pool_cfg.max_requests = 4;
+    if let Some(spec) = chaos {
+        pool_cfg.fault = Some(spec.clone());
+        // A soak at rate ~5% can re-trip an already-retried request; give
+        // the supervisor enough attempts that only a deterministic
+        // always-fail plan surfaces as a typed error.
+        pool_cfg.ingress.max_retries = 12;
+    }
     let pool = ServicePool::spawn(pool_cfg);
 
     let wall_start = std::time::Instant::now();
@@ -618,7 +642,7 @@ pub fn run_burner_pooled(
     let mut checksum = 0xcbf2_9ce4_8422_2325u64;
     for rx in rxs {
         let reply = rx
-            .recv()
+            .recv_timeout(std::time::Duration::from_secs(60))
             .map_err(|_| Error::Coordinator("pool worker dropped reply".into()))??;
         numbers += reply.len() as u64;
         checksum = checksum_fold(checksum, &reply);

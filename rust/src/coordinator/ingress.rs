@@ -1,0 +1,274 @@
+//! Ingress gate and in-flight ledger for the service pool (DESIGN.md S15).
+//!
+//! Every request accepted by [`super::ServicePool::generate`] is recorded
+//! in an [`InflightTable`] entry *before* it is handed to a shard: the
+//! entry carries the request's global stream offset and a clone of the
+//! caller's reply sender. That ledger is what makes the pool supervisable
+//! — a dead worker takes its queued `ServiceRequest`s down with it, but
+//! the table still knows everything needed to re-dispatch them
+//! bit-identically (the offset addresses the stream; the cloned sender
+//! keeps the caller's receiver open no matter how many workers die).
+//!
+//! [`IngressConfig`] bounds the admission side: queue depth (typed
+//! shedding with [`Error::Overloaded`]), per-request deadline budgets
+//! ([`Error::DeadlineExceeded`]) and the bounded-exponential retry policy
+//! the supervisor applies to transient injected faults.
+//!
+//! [`Error::Overloaded`]: crate::error::Error::Overloaded
+//! [`Error::DeadlineExceeded`]: crate::error::Error::DeadlineExceeded
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+
+use super::heuristic::{Route, TuningHandle};
+use super::pool::ServiceRequest;
+
+/// Admission and retry policy for a pool's ingress gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngressConfig {
+    /// Shed (reply [`Error::Overloaded`]) when this many requests are
+    /// already in flight. Default: unbounded.
+    ///
+    /// [`Error::Overloaded`]: crate::error::Error::Overloaded
+    pub max_inflight: usize,
+    /// Wall-clock budget per request, checked at worker dequeue and at
+    /// supervisor redispatch. Default: none.
+    pub deadline: Option<Duration>,
+    /// Retry re-dispatches allowed per request for transient faults
+    /// before the caller gets the fault as a typed error.
+    pub max_retries: u32,
+    /// First-retry backoff; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling (bounded exponential).
+    pub backoff_cap: Duration,
+}
+
+impl Default for IngressConfig {
+    fn default() -> IngressConfig {
+        IngressConfig {
+            max_inflight: usize::MAX,
+            deadline: None,
+            max_retries: 4,
+            backoff_base: Duration::from_micros(50),
+            backoff_cap: Duration::from_millis(2),
+        }
+    }
+}
+
+impl IngressConfig {
+    /// Backoff before retry number `attempt` (1-based):
+    /// `base * 2^(attempt-1)`, capped.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        (self.backoff_base * 2u32.pow(shift)).min(self.backoff_cap)
+    }
+}
+
+/// One accepted, not-yet-answered request.
+pub(crate) struct Inflight {
+    pub(crate) n: usize,
+    pub(crate) range: (f32, f32),
+    /// Absolute offset in the global engine stream — assigned once at
+    /// admission; every re-dispatch reuses it, which is the whole
+    /// bit-identical-retry argument.
+    pub(crate) offset: u64,
+    /// Shard currently responsible for the entry.
+    pub(crate) shard: usize,
+    /// Retry re-dispatches performed so far.
+    pub(crate) attempts: u32,
+    pub(crate) deadline: Option<Instant>,
+    /// Clone of the caller's reply sender. The caller's receiver stays
+    /// open as long as this entry lives, even when the worker holding the
+    /// other clone dies.
+    pub(crate) reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// The pool's in-flight ledger. Entries are added at admission, removed
+/// when a reply is sent, and re-issued (same offset, fresh message) by the
+/// supervisor after a worker death or a transient fault.
+pub(crate) struct InflightTable {
+    entries: Mutex<HashMap<u64, Inflight>>,
+    next_id: AtomicU64,
+}
+
+impl InflightTable {
+    pub(crate) fn new() -> Arc<InflightTable> {
+        Arc::new(InflightTable {
+            entries: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Live entries (the ingress depth the shed gate compares against).
+    pub(crate) fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Admit a request; returns its pool-global id.
+    pub(crate) fn register(
+        &self,
+        n: usize,
+        range: (f32, f32),
+        offset: u64,
+        shard: usize,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    ) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.entries.lock().unwrap().insert(
+            id,
+            Inflight { n, range, offset, shard, attempts: 0, deadline, reply },
+        );
+        id
+    }
+
+    /// Remove a completed entry (a reply was sent). Idempotent: a worker
+    /// that died between send and complete leaves the entry to the
+    /// supervisor, whose re-dispatch produces a second, bit-identical
+    /// reply — benign, because the caller reads exactly one.
+    pub(crate) fn complete(&self, id: u64) {
+        self.entries.lock().unwrap().remove(&id);
+    }
+
+    /// Remove and return an entry for a terminal (error) reply.
+    pub(crate) fn take(&self, id: u64) -> Option<Inflight> {
+        self.entries.lock().unwrap().remove(&id)
+    }
+
+    /// Peek the retry-relevant fields: (attempts so far, deadline, n).
+    pub(crate) fn retry_info(&self, id: u64) -> Option<(u32, Option<Instant>, usize)> {
+        let entries = self.entries.lock().unwrap();
+        entries.get(&id).map(|e| (e.attempts, e.deadline, e.n))
+    }
+
+    /// Rebuild the wire request for a live entry, reassigning it to
+    /// `shard` (and bumping its attempt count when `bump` — supervisor
+    /// retries bump; post-respawn redispatches of untouched entries do
+    /// not). The offset is the one assigned at admission.
+    pub(crate) fn reissue(&self, id: u64, shard: usize, bump: bool) -> Option<ServiceRequest> {
+        let mut entries = self.entries.lock().unwrap();
+        let e = entries.get_mut(&id)?;
+        if bump {
+            e.attempts += 1;
+        }
+        e.shard = shard;
+        Some(ServiceRequest {
+            id,
+            n: e.n,
+            range: e.range,
+            offset: e.offset,
+            deadline: e.deadline,
+            attempt: e.attempts,
+            reply: e.reply.clone(),
+        })
+    }
+
+    /// Ids of every live entry assigned to `shard` (ascending, so
+    /// redispatch order is deterministic).
+    pub(crate) fn assigned_to(&self, shard: usize) -> Vec<u64> {
+        let entries = self.entries.lock().unwrap();
+        let mut ids: Vec<u64> =
+            entries.iter().filter(|(_, e)| e.shard == shard).map(|(&id, _)| id).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Drain every live entry (terminal shutdown sweep).
+    pub(crate) fn drain_all(&self) -> Vec<Inflight> {
+        self.entries.lock().unwrap().drain().map(|(_, e)| e).collect()
+    }
+}
+
+/// The dispatcher's routing state, shared between the pool handle (fresh
+/// admissions) and the supervisor (retry re-dispatches): size-aware
+/// overflow routing through the live [`TuningHandle`] plus the
+/// round-robin cursor over batched shards.
+pub(crate) struct Router {
+    n_batched: usize,
+    overflow: Option<usize>,
+    tuning: Arc<TuningHandle>,
+    next: AtomicUsize,
+}
+
+impl Router {
+    pub(crate) fn new(
+        n_batched: usize,
+        overflow: Option<usize>,
+        tuning: Arc<TuningHandle>,
+    ) -> Arc<Router> {
+        Arc::new(Router { n_batched, overflow, tuning, next: AtomicUsize::new(0) })
+    }
+
+    /// Pick the shard for an `n`-number request; the bool is true when the
+    /// overflow lane took it.
+    pub(crate) fn route(&self, n: usize) -> (usize, bool) {
+        match (self.overflow, self.tuning.policy().route(n)) {
+            (Some(ov), Route::Overflow) => (ov, true),
+            _ => (self.next.fetch_add(1, Ordering::Relaxed) % self.n_batched, false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_exponential() {
+        let cfg = IngressConfig {
+            backoff_base: Duration::from_micros(100),
+            backoff_cap: Duration::from_micros(650),
+            ..IngressConfig::default()
+        };
+        assert_eq!(cfg.backoff(1), Duration::from_micros(100));
+        assert_eq!(cfg.backoff(2), Duration::from_micros(200));
+        assert_eq!(cfg.backoff(3), Duration::from_micros(400));
+        assert_eq!(cfg.backoff(4), Duration::from_micros(650)); // capped
+        assert_eq!(cfg.backoff(40), Duration::from_micros(650)); // shift clamped
+        assert_eq!(cfg.backoff(0), Duration::from_micros(100)); // defensive
+    }
+
+    #[test]
+    fn ledger_register_reissue_complete() {
+        let table = InflightTable::new();
+        let (tx, rx) = mpsc::channel();
+        let id = table.register(64, (0.0, 1.0), 1000, 2, None, tx);
+        assert_eq!(table.len(), 1);
+        assert_eq!(table.retry_info(id), Some((0, None, 64)));
+        assert_eq!(table.assigned_to(2), vec![id]);
+        assert!(table.assigned_to(0).is_empty());
+
+        // A bumping reissue moves the entry and increments attempts, but
+        // keeps the admission-time offset.
+        let req = table.reissue(id, 0, true).unwrap();
+        assert_eq!((req.id, req.offset, req.attempt), (id, 1000, 1));
+        assert_eq!(table.retry_info(id), Some((1, None, 64)));
+        assert_eq!(table.assigned_to(0), vec![id]);
+
+        // The reissued sender reaches the caller's receiver.
+        req.reply.send(Ok(vec![1.0])).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![1.0]);
+
+        table.complete(id);
+        assert_eq!(table.len(), 0);
+        assert!(table.reissue(id, 0, true).is_none());
+        table.complete(id); // idempotent
+    }
+
+    #[test]
+    fn redispatch_order_is_deterministic() {
+        let table = InflightTable::new();
+        let mut ids = Vec::new();
+        for i in 0..5 {
+            let (tx, _rx) = mpsc::channel();
+            ids.push(table.register(8, (0.0, 1.0), i * 8, 1, None, tx));
+        }
+        assert_eq!(table.assigned_to(1), ids); // ascending admission order
+        assert_eq!(table.drain_all().len(), 5);
+        assert_eq!(table.len(), 0);
+    }
+}

@@ -15,15 +15,26 @@
 //! a [`telemetry`](crate::telemetry) registry, and the
 //! [`autotune`](crate::autotune) controller closes the measure→retune
 //! loop (DESIGN.md S11–S12).
+//!
+//! The pool is also *supervised* (DESIGN.md S15): an ingress gate bounds
+//! admission ([`IngressConfig`]), an in-flight ledger records every
+//! accepted request before it reaches a shard, and a supervisor thread
+//! respawns dead workers and re-dispatches their requests bit-identically
+//! — with transient [`crate::fault`] injections retried under bounded
+//! exponential backoff. Every caller gets its exact fault-free payload or
+//! a typed error, never a hang.
 
 mod batcher;
 mod heuristic;
+mod ingress;
 mod pool;
 mod registry;
 mod service;
+mod supervisor;
 
 pub use batcher::{BatchMember, BatchOutcome, PendingRequest, RequestBatcher};
 pub use heuristic::{BackendHeuristic, DispatchPolicy, Route, TuningHandle, TuningParams};
+pub use ingress::IngressConfig;
 pub use pool::{PoolConfig, PoolStats, ServicePool, ServiceRequest, ServiceStats};
 pub use registry::{BackendRegistry, ShardBackendSet};
 pub use service::RngService;

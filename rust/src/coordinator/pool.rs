@@ -45,13 +45,33 @@
 //! (DESIGN.md S11) shared between workers and the pool handle — which is
 //! also why shutdown can never drop in-flight counts: the registry
 //! outlives the workers' ack channels.
+//!
+//! ## The resilience layer (DESIGN.md S15)
+//!
+//! The pool is *supervised*. Admission runs through an ingress gate
+//! ([`IngressConfig`]: bounded depth → [`Error::Overloaded`], deadline
+//! budgets → [`Error::DeadlineExceeded`]) and every accepted request is
+//! recorded in an in-flight ledger
+//! ([`super::ingress::InflightTable`]) — global stream offset plus a
+//! clone of the caller's reply sender — *before* it reaches a shard. A
+//! [`Supervisor`] thread reaps workers that die (panic, or a
+//! [`crate::fault`] injected kill), respawns the shard, and re-dispatches
+//! its ledger entries at their recorded offsets; because a stream is
+//! addressed by offset rather than generator state, the re-delivered
+//! payload is bit-identical to the fault-free answer. Transient injected
+//! faults ([`Error::Injected`]) are retried through the supervisor with
+//! bounded exponential backoff instead of surfacing to the caller. The
+//! guarantee the chaos soak pins: every caller gets exactly the fault-free
+//! bytes or a typed error — never a hang.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::fault::{self, FaultSpec, ShardFaultPlan};
 use crate::platform::PlatformId;
 use crate::rng::engines::EngineKind;
 use crate::rng::{generate_batch_usm, BatchSlice};
@@ -63,21 +83,30 @@ use crate::telemetry::{
 
 use super::batcher::{BatchOutcome, PendingRequest, RequestBatcher};
 use super::heuristic::{DispatchPolicy, Route, TuningHandle, TuningParams};
+use super::ingress::{InflightTable, IngressConfig, Router};
 use super::registry::BackendRegistry;
+use super::supervisor::{SupMsg, Supervisor};
 
 /// A generate request, as delivered to a shard worker.
 pub struct ServiceRequest {
+    /// Pool-global request id (the in-flight ledger key). Distinct from
+    /// the batcher's shard-local positional id.
+    pub id: u64,
     /// Numbers wanted.
     pub n: usize,
     /// Range [a, b).
     pub range: (f32, f32),
     /// Absolute offset of this request in the global engine stream.
     pub offset: u64,
+    /// Admission-time deadline, if the ingress gate set one.
+    pub deadline: Option<Instant>,
+    /// Retry re-dispatches already performed for this request.
+    pub attempt: u32,
     /// Reply channel.
     pub reply: mpsc::Sender<Result<Vec<f32>>>,
 }
 
-enum Msg {
+pub(crate) enum Msg {
     Generate(ServiceRequest),
     Flush,
     Shutdown(mpsc::Sender<()>),
@@ -113,6 +142,11 @@ pub struct PoolStats {
     /// One entry per shard, dispatch order (batched shards first, then the
     /// overflow lane if configured).
     pub shards: Vec<ServiceStats>,
+    /// Shards whose worker failed the shutdown handshake (died and was
+    /// never respawned). Their counters are still present above — the
+    /// registry outlives the workers — so the stats are *partial* only in
+    /// the sense that those shards stopped counting early.
+    pub lost_shards: u64,
 }
 
 impl PoolStats {
@@ -136,6 +170,7 @@ impl PoolStats {
                     numbers: s.numbers,
                 })
                 .collect(),
+            lost_shards: 0,
         }
     }
 }
@@ -160,11 +195,18 @@ pub struct PoolConfig {
     /// later [`ServicePool::retune`] can enable size-aware routing without
     /// respawning the pool (the autotuner sets this).
     pub adaptive: bool,
+    /// Deterministic fault-injection plan (`serve --chaos`); each shard
+    /// derives its own [`ShardFaultPlan`] from it. `None` (the default)
+    /// costs one thread-local null check per seam.
+    pub fault: Option<FaultSpec>,
+    /// Admission and retry policy (depth bound, deadlines, backoff).
+    pub ingress: IngressConfig,
 }
 
 impl PoolConfig {
     /// Defaults: 1 MiB-numbers batches, 16 requests per batch, no
-    /// overflow lane, no adaptive headroom.
+    /// overflow lane, no adaptive headroom, no fault plan, unbounded
+    /// ingress.
     pub fn new(platform: PlatformId, seed: u64, shards: usize) -> PoolConfig {
         PoolConfig {
             platform,
@@ -174,165 +216,237 @@ impl PoolConfig {
             max_requests: 16,
             policy: DispatchPolicy::disabled(),
             adaptive: false,
+            fault: None,
+            ingress: IngressConfig::default(),
         }
     }
 }
 
-struct ShardHandle {
+/// Everything a shard worker needs, bundled so the supervisor can respawn
+/// the worker with the *same* identity (shard id, lane, seed, telemetry,
+/// fault plan, ledger) after a death — only the queue/arena/generator are
+/// rebuilt, and those don't carry stream state (offsets do).
+#[derive(Clone)]
+pub(crate) struct WorkerCtx {
+    platform: PlatformId,
+    seed: u64,
+    lane: Route,
+    tuning: Arc<TuningHandle>,
+    telemetry: Arc<ShardTelemetry>,
+    fault: Option<Arc<ShardFaultPlan>>,
+    inflight: Arc<InflightTable>,
+    retry_tx: mpsc::Sender<SupMsg>,
+    max_retries: u32,
+}
+
+struct ShardLink {
     tx: mpsc::Sender<Msg>,
     worker: Option<JoinHandle<()>>,
 }
 
-impl ShardHandle {
-    /// Spawn one worker shard. The worker builds its own engine/backends
-    /// (they are not `Send`). `lane` picks which half of the shard's
-    /// backend set generates: batched (small-request) lanes run on the
-    /// host backend, the overflow lane on the device-native backend — the
-    /// paper's §8 "host for small workloads, GPU for larger ones" applied
-    /// at the service layer. Both halves are bit-exact Philox, so the
-    /// stream invariant is unaffected by the lane choice. Counters go to
-    /// `telemetry` (shared with the pool); batcher limits are re-read from
-    /// `tuning` on every request so retunes apply without a round-trip.
-    fn spawn(
-        platform: PlatformId,
-        seed: u64,
-        tuning: Arc<TuningHandle>,
-        telemetry: Arc<ShardTelemetry>,
-        lane: Route,
-    ) -> Self {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || {
-            let set = BackendRegistry::new().shard_set(platform);
-            let backend = match lane {
-                Route::Batched => set.host,
-                Route::Overflow => set.native,
-            };
-            telemetry.set_backend(backend.name());
-            let mut gen = match backend.create_generator(EngineKind::Philox4x32x10, seed) {
-                Ok(g) => g,
-                Err(e) => {
-                    // Degraded mode: the backend refused a generator; fail
-                    // every request with a coordinator error. Requests are
-                    // still counted so submitted-vs-served reconciles.
-                    let why = e.to_string();
-                    while let Ok(msg) = rx.recv() {
-                        match msg {
-                            Msg::Generate(req) => {
-                                telemetry.record_request(req.n);
-                                telemetry.record_failure();
-                                let _ = req.reply.send(Err(Error::Coordinator(format!(
-                                    "shard backend unavailable: {why}"
-                                ))));
-                            }
-                            Msg::Flush => {}
-                            Msg::Shutdown(ack) => {
-                                let _ = ack.send(());
-                                break;
-                            }
-                        }
-                    }
-                    return;
-                }
-            };
-            // Worker-owned SYCL runtime state, reused across requests
-            // (DESIGN.md S13): a queue on the lane's generating platform
-            // and a USM arena of recycled launch allocations. `slices` is
-            // the flush scratch — capacity is retained, so steady-state
-            // flushes allocate nothing.
-            let queue_platform = backend.platform();
-            let queue = Queue::new(
-                queue_platform,
-                SyclRuntimeProfile::for_platform(&queue_platform.spec()),
-            );
-            let arena: UsmArena<f32> = UsmArena::new();
-            let mut slices: Vec<BatchSlice> = Vec::new();
+/// A shard's stable slot in the pool: the respawnable link to its current
+/// worker thread plus the identity ([`WorkerCtx`]) every incarnation
+/// shares. The dispatcher sends through it; the supervisor reaps and
+/// respawns through it.
+pub(crate) struct ShardSlot {
+    /// Shard index (telemetry row, ledger assignment key).
+    pub(crate) idx: usize,
+    ctx: WorkerCtx,
+    link: Mutex<ShardLink>,
+}
 
-            // The overflow lane launches every request immediately; batched
-            // lanes track the live tuning limits.
-            let fixed_flush = matches!(lane, Route::Overflow).then_some(1);
-            let mut batcher = RequestBatcher::new(
-                tuning.max_batch(),
-                fixed_flush.unwrap_or_else(|| tuning.flush_requests()),
-                4,
-            );
-            let mut waiting: Vec<ServiceRequest> = Vec::new();
+fn spawn_worker(ctx: &WorkerCtx) -> ShardLink {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let ctx = ctx.clone();
+    let worker = std::thread::spawn(move || {
+        // Contain both genuine worker panics and injected kills: the
+        // thread finishes instead of unwinding into the runtime, the
+        // supervisor's sweep observes `is_finished` and respawns.
+        let _ = catch_unwind(AssertUnwindSafe(|| worker_main(&ctx, &rx)));
+    });
+    ShardLink { tx, worker: Some(worker) }
+}
 
+impl ShardSlot {
+    fn spawn(idx: usize, ctx: WorkerCtx) -> Arc<ShardSlot> {
+        let link = spawn_worker(&ctx);
+        Arc::new(ShardSlot { idx, ctx, link: Mutex::new(link) })
+    }
+
+    /// Deliver a message to the current worker; false if its channel is
+    /// closed (worker dead — the ledger still covers its requests).
+    pub(crate) fn send(&self, msg: Msg) -> bool {
+        self.link.lock().unwrap().tx.send(msg).is_ok()
+    }
+
+    /// Reap a worker thread that finished without a shutdown handshake.
+    /// True exactly when a dead worker was collected (caller respawns).
+    pub(crate) fn reap_dead_worker(&self) -> bool {
+        let mut link = self.link.lock().unwrap();
+        let finished = link.worker.as_ref().is_some_and(|w| w.is_finished());
+        if finished {
+            if let Some(w) = link.worker.take() {
+                let _ = w.join();
+            }
+        }
+        finished
+    }
+
+    /// Replace a reaped worker with a fresh incarnation of the same shard.
+    pub(crate) fn respawn(&self) {
+        let mut link = self.link.lock().unwrap();
+        *link = spawn_worker(&self.ctx);
+    }
+
+    /// Handshake the worker down. True on a clean drain (flush + ack +
+    /// join); false when the worker was already dead — robust either way,
+    /// and idempotent (a second call is a no-op success).
+    pub(crate) fn shutdown_worker(&self) -> bool {
+        let mut link = self.link.lock().unwrap();
+        let Some(worker) = link.worker.take() else {
+            return true; // already shut down (or reaped and never respawned)
+        };
+        let (ack, rx) = mpsc::channel();
+        let clean = link.tx.send(Msg::Shutdown(ack)).is_ok() && rx.recv().is_ok();
+        let _ = worker.join();
+        clean
+    }
+
+    /// The shard's fault plan, if the pool runs under chaos.
+    pub(crate) fn fault_plan(&self) -> Option<Arc<ShardFaultPlan>> {
+        self.ctx.fault.clone()
+    }
+}
+
+impl Drop for ShardSlot {
+    fn drop(&mut self) {
+        self.shutdown_worker();
+    }
+}
+
+/// One worker incarnation. The worker builds its own engine/backends
+/// (they are not `Send`). `ctx.lane` picks which half of the shard's
+/// backend set generates: batched (small-request) lanes run on the host
+/// backend, the overflow lane on the device-native backend — the paper's
+/// §8 "host for small workloads, GPU for larger ones" applied at the
+/// service layer. Both halves are bit-exact Philox, so the stream
+/// invariant is unaffected by the lane choice. Counters go to
+/// `ctx.telemetry` (shared with the pool); batcher limits are re-read
+/// from `ctx.tuning` on every request so retunes apply without a
+/// round-trip.
+fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
+    // Arm (or explicitly disarm) this worker thread's fault seams.
+    fault::install(ctx.fault.clone());
+    let set = BackendRegistry::new().shard_set(ctx.platform);
+    let backend = match ctx.lane {
+        Route::Batched => set.host,
+        Route::Overflow => set.native,
+    };
+    ctx.telemetry.set_backend(backend.name());
+    let mut gen = match backend.create_generator(EngineKind::Philox4x32x10, ctx.seed) {
+        Ok(g) => g,
+        Err(e) => {
+            // Degraded mode: the backend refused a generator; fail every
+            // request with a coordinator error. Requests are still counted
+            // so submitted-vs-served reconciles, and ledger entries are
+            // completed so the supervisor never re-dispatches them into
+            // the same dead end.
+            let why = e.to_string();
             while let Ok(msg) = rx.recv() {
                 match msg {
                     Msg::Generate(req) => {
-                        if fixed_flush.is_none() {
-                            batcher.set_limits(tuning.max_batch(), tuning.flush_requests());
-                        }
-                        let pending = PendingRequest {
-                            id: waiting.len() as u64,
-                            n: req.n,
-                            stream_offset: req.offset,
-                        };
-                        telemetry.record_request(req.n);
-                        waiting.push(req);
-                        if let Some(batch) = batcher.push(pending) {
-                            launch(
-                                gen.as_mut(),
-                                &queue,
-                                &arena,
-                                &mut slices,
-                                &batch,
-                                &mut waiting,
-                                &telemetry,
-                            );
-                        }
+                        ctx.telemetry.record_request(req.n);
+                        ctx.telemetry.record_failure();
+                        ctx.inflight.complete(req.id);
+                        let _ = req.reply.send(Err(Error::Coordinator(format!(
+                            "shard backend unavailable: {why}"
+                        ))));
                     }
-                    Msg::Flush => {
-                        if let Some(batch) = batcher.flush() {
-                            launch(
-                                gen.as_mut(),
-                                &queue,
-                                &arena,
-                                &mut slices,
-                                &batch,
-                                &mut waiting,
-                                &telemetry,
-                            );
-                        }
-                    }
+                    Msg::Flush => {}
                     Msg::Shutdown(ack) => {
-                        if let Some(batch) = batcher.flush() {
-                            launch(
-                                gen.as_mut(),
-                                &queue,
-                                &arena,
-                                &mut slices,
-                                &batch,
-                                &mut waiting,
-                                &telemetry,
-                            );
-                        }
                         let _ = ack.send(());
                         break;
                     }
                 }
             }
-        });
-        ShardHandle { tx, worker: Some(worker) }
-    }
-
-    /// Drain and stop the worker. Counter-safe by construction: stats live
-    /// in the shared telemetry registry, so a worker that died (closed ack
-    /// channel) loses no counts — we just join and move on.
-    fn shutdown(&mut self) {
-        let (ack, rx) = mpsc::channel();
-        if self.tx.send(Msg::Shutdown(ack)).is_ok() {
-            let _ = rx.recv();
+            return;
         }
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+    };
+    // Worker-owned SYCL runtime state, reused across requests
+    // (DESIGN.md S13): a queue on the lane's generating platform
+    // and a USM arena of recycled launch allocations. `slices` is
+    // the flush scratch — capacity is retained, so steady-state
+    // flushes allocate nothing.
+    let queue_platform = backend.platform();
+    let queue = Queue::new(
+        queue_platform,
+        SyclRuntimeProfile::for_platform(&queue_platform.spec()),
+    );
+    let arena: UsmArena<f32> = UsmArena::new();
+    let mut slices: Vec<BatchSlice> = Vec::new();
+
+    // The overflow lane launches every request immediately; batched
+    // lanes track the live tuning limits.
+    let fixed_flush = matches!(ctx.lane, Route::Overflow).then_some(1);
+    let mut batcher = RequestBatcher::new(
+        ctx.tuning.max_batch(),
+        fixed_flush.unwrap_or_else(|| ctx.tuning.flush_requests()),
+        4,
+    );
+    let mut waiting: Vec<ServiceRequest> = Vec::new();
+
+    while let Ok(msg) = rx.recv() {
+        // Injected worker kill: scheduled by absolute message op on the
+        // shard's (respawn-surviving) plan, so each kill fires exactly
+        // once. The dropped message's requests live on in the ledger.
+        if let Some(plan) = &ctx.fault {
+            if plan.trip_kill() {
+                panic!("portarng: injected worker kill (chaos plan)");
+            }
+        }
+        match msg {
+            Msg::Generate(req) => {
+                if req.deadline.is_some_and(|dl| Instant::now() > dl) {
+                    ctx.telemetry.record_request(req.n);
+                    ctx.telemetry.record_deadline_exceeded();
+                    ctx.inflight.complete(req.id);
+                    let _ = req.reply.send(Err(Error::DeadlineExceeded));
+                    continue;
+                }
+                if fixed_flush.is_none() {
+                    batcher.set_limits(ctx.tuning.max_batch(), ctx.tuning.flush_requests());
+                }
+                let pending = PendingRequest {
+                    id: waiting.len() as u64,
+                    n: req.n,
+                    stream_offset: req.offset,
+                };
+                ctx.telemetry.record_request(req.n);
+                waiting.push(req);
+                if let Some(batch) = batcher.push(pending) {
+                    launch(gen.as_mut(), &queue, &arena, &mut slices, &batch, &mut waiting, ctx);
+                }
+            }
+            Msg::Flush => {
+                if let Some(batch) = batcher.flush() {
+                    launch(gen.as_mut(), &queue, &arena, &mut slices, &batch, &mut waiting, ctx);
+                }
+            }
+            Msg::Shutdown(ack) => {
+                if let Some(batch) = batcher.flush() {
+                    launch(gen.as_mut(), &queue, &arena, &mut slices, &batch, &mut waiting, ctx);
+                }
+                let _ = ack.send(());
+                break;
+            }
         }
     }
-}
-
-impl Drop for ShardHandle {
-    fn drop(&mut self) {
-        self.shutdown();
+    // Graceful-exit drain (channel closed with requests still queued —
+    // only reachable when the pool handle vanished without a handshake):
+    // typed errors, never leaked reply channels.
+    for req in waiting.drain(..) {
+        ctx.inflight.complete(req.id);
+        let _ = req.reply.send(Err(Error::ShardLost));
     }
 }
 
@@ -353,8 +467,9 @@ fn launch(
     slices: &mut Vec<BatchSlice>,
     batch: &BatchOutcome,
     waiting: &mut Vec<ServiceRequest>,
-    telemetry: &ShardTelemetry,
+    ctx: &WorkerCtx,
 ) {
+    let telemetry = &ctx.telemetry;
     let wall_start = Instant::now();
     slices.clear();
     slices.extend(batch.members.iter().map(|m| BatchSlice {
@@ -383,15 +498,20 @@ fn launch(
             (b.payloads, pending)
         }
         Err(e) => {
-            // Defensive whole-flush failure (empty batches never reach
-            // here): fail every member rather than dropping replies.
-            // Nothing was submitted, so the allocation's inherited
-            // hazards stay pending for its next user.
+            // Whole-flush failure (empty batches never reach here): fail
+            // every member rather than dropping replies — preserving
+            // transiency, so an injected submit fault stays retryable
+            // per member. Nothing was submitted, so the allocation's
+            // inherited hazards stay pending for its next user.
+            let injected = e.injected_site();
             let why = e.to_string();
             let fail: Vec<Result<Vec<f32>>> = batch
                 .members
                 .iter()
-                .map(|_| Err(Error::Coordinator(why.clone())))
+                .map(|_| match injected {
+                    Some(site) => Err(Error::Injected { site }),
+                    None => Err(Error::Coordinator(why.clone())),
+                })
                 .collect();
             (fail, lease.deps().to_vec())
         }
@@ -401,9 +521,8 @@ fn launch(
 
     let mut payload = 0u64;
     for r in &results {
-        match r {
-            Ok(v) => payload += v.len() as u64,
-            Err(_) => telemetry.record_failure(),
+        if let Ok(v) = r {
+            payload += v.len() as u64;
         }
     }
 
@@ -411,7 +530,7 @@ fn launch(
     // cloned) so a long-lived worker queue's record log stays bounded.
     let records = queue.drain_records();
     // Prove the flush race-free (the analyzer's per-kind counts feed the
-    // v3 `hazards` telemetry block; under PORTARNG_HAZARD_CHECK the drain
+    // `hazards` telemetry block; under PORTARNG_HAZARD_CHECK the drain
     // above already panicked on any diagnostic).
     let hazard_report = crate::sycl::analyze_hazards(&records);
     telemetry.record_hazards(HazardCounters::from_window(
@@ -438,6 +557,9 @@ fn launch(
         pooled: a.pooled,
         pooled_bytes: a.pooled_bytes,
     });
+    if let Some(plan) = &ctx.fault {
+        telemetry.set_faults_injected(plan.injected());
+    }
 
     // Record BEFORE sending any reply: a requester that has its numbers
     // must be able to see this launch in a snapshot (otherwise
@@ -449,26 +571,59 @@ fn launch(
         wall_start.elapsed().as_nanos() as u64,
     );
     for (m, reply) in batch.members.iter().zip(results) {
-        let _ = waiting[m.id as usize].reply.send(reply);
+        let req = &waiting[m.id as usize];
+        match reply {
+            Ok(v) => {
+                // Send THEN complete: a worker dying between the two
+                // leaves the entry to the supervisor, whose re-dispatch
+                // duplicates a bit-identical reply — benign, the caller
+                // reads exactly one.
+                let _ = req.reply.send(Ok(v));
+                ctx.inflight.complete(req.id);
+            }
+            Err(e) => {
+                let site = e.injected_site();
+                if e.is_transient() && req.attempt < ctx.max_retries {
+                    // Hand the request to the supervisor (no reply — the
+                    // ledger entry stays live for the re-dispatch). If the
+                    // supervisor is gone (pool shutting down), fall
+                    // through to a direct typed error instead of hanging
+                    // the caller.
+                    let retry = SupMsg::Retry {
+                        id: req.id,
+                        site: site.unwrap_or("generate"),
+                    };
+                    if ctx.retry_tx.send(retry).is_ok() {
+                        continue;
+                    }
+                }
+                telemetry.record_failure();
+                let _ = req.reply.send(Err(e));
+                ctx.inflight.complete(req.id);
+            }
+        }
     }
     waiting.clear();
 }
 
 /// Handle to a running sharded RNG service pool.
 pub struct ServicePool {
-    shards: Vec<ShardHandle>,
+    slots: Vec<Arc<ShardSlot>>,
     n_batched: usize,
     overflow: Option<usize>,
     tuning: Arc<TuningHandle>,
     telemetry: Arc<TelemetryRegistry>,
-    next: AtomicUsize,
+    router: Arc<Router>,
+    inflight: Arc<InflightTable>,
+    ingress: IngressConfig,
+    supervisor: Option<Supervisor>,
     cursor: AtomicU64,
 }
 
 impl ServicePool {
     /// Spawn the pool: `cfg.shards` batched round-robin workers plus (when
     /// the policy is enabled or `cfg.adaptive` is set) one unbatched
-    /// overflow worker.
+    /// overflow worker, plus the supervisor thread watching them all.
     pub fn spawn(cfg: PoolConfig) -> ServicePool {
         let n_batched = cfg.shards.max(1);
         let want_overflow = cfg.policy.is_enabled() || cfg.adaptive;
@@ -482,28 +637,50 @@ impl ServicePool {
             cfg.max_requests,
             cfg.max_batch,
         )));
-        let mut shards = Vec::with_capacity(lanes.len());
+        let inflight = InflightTable::new();
+        let (sup_tx, sup_rx) = mpsc::channel();
+        let mut slots = Vec::with_capacity(lanes.len());
         for (i, &lane) in lanes.iter().enumerate() {
             let route = match lane {
                 Lane::Batched => Route::Batched,
                 Lane::Overflow => Route::Overflow,
             };
-            shards.push(ShardHandle::spawn(
-                cfg.platform,
-                cfg.seed,
-                tuning.clone(),
-                telemetry.shard(i),
-                route,
+            slots.push(ShardSlot::spawn(
+                i,
+                WorkerCtx {
+                    platform: cfg.platform,
+                    seed: cfg.seed,
+                    lane: route,
+                    tuning: tuning.clone(),
+                    telemetry: telemetry.shard(i),
+                    fault: cfg.fault.as_ref().map(|spec| spec.shard_plan(i)),
+                    inflight: inflight.clone(),
+                    retry_tx: sup_tx.clone(),
+                    max_retries: cfg.ingress.max_retries,
+                },
             ));
         }
-        let overflow = want_overflow.then(|| shards.len() - 1);
+        let overflow = want_overflow.then(|| slots.len() - 1);
+        let router = Router::new(n_batched, overflow, tuning.clone());
+        let supervisor = Supervisor::spawn(
+            slots.clone(),
+            inflight.clone(),
+            telemetry.clone(),
+            router.clone(),
+            cfg.ingress,
+            sup_tx,
+            sup_rx,
+        );
         ServicePool {
-            shards,
+            slots,
             n_batched,
             overflow,
             tuning,
             telemetry,
-            next: AtomicUsize::new(0),
+            router,
+            inflight,
+            ingress: cfg.ingress,
+            supervisor: Some(supervisor),
             cursor: AtomicU64::new(0),
         }
     }
@@ -528,6 +705,12 @@ impl ServicePool {
         &self.tuning
     }
 
+    /// Requests admitted but not yet answered (the depth the shed gate
+    /// compares against).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
     /// Publish new tuning parameters (threshold + batcher limits). Takes
     /// effect for subsequent requests without blocking in-flight ones;
     /// per-request streams are unaffected (offsets are assigned before
@@ -541,30 +724,49 @@ impl ServicePool {
 
     /// Submit a request; returns the receiver for the reply. The reply is
     /// exactly the sub-stream a dedicated engine skipped to this request's
-    /// global offset would produce.
+    /// global offset would produce — or a typed error
+    /// ([`Error::Overloaded`] at admission, [`Error::DeadlineExceeded`] /
+    /// [`Error::ShardLost`] later); the receiver always yields exactly one
+    /// of the two, never a hang.
     pub fn generate(&self, n: usize, range: (f32, f32)) -> mpsc::Receiver<Result<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
+        let in_flight = self.inflight.len();
+        if in_flight >= self.ingress.max_inflight {
+            // Shed before touching the cursor or dispatch counters: a
+            // rejected request must not perturb the global stream.
+            self.telemetry.record_shed();
+            let _ = reply.send(Err(Error::Overloaded {
+                in_flight,
+                limit: self.ingress.max_inflight,
+            }));
+            return rx;
+        }
+        let deadline = self.ingress.deadline.map(|d| Instant::now() + d);
         let offset = self.cursor.fetch_add(n as u64, Ordering::Relaxed);
-        let idx = match (self.overflow, self.tuning.policy().route(n)) {
-            (Some(ov), Route::Overflow) => {
-                self.telemetry.record_dispatch(true);
-                ov
-            }
-            _ => {
-                self.telemetry.record_dispatch(false);
-                self.next.fetch_add(1, Ordering::Relaxed) % self.n_batched
-            }
-        };
-        let _ = self.shards[idx]
-            .tx
-            .send(Msg::Generate(ServiceRequest { n, range, offset, reply }));
+        let (idx, overflow) = self.router.route(n);
+        self.telemetry.record_dispatch(overflow);
+        let id = self
+            .inflight
+            .register(n, range, offset, idx, deadline, reply.clone());
+        // A failed send means the worker died between routing and
+        // delivery: the ledger entry stays, and the supervisor's sweep
+        // respawns the shard and re-dispatches it.
+        let _ = self.slots[idx].send(Msg::Generate(ServiceRequest {
+            id,
+            n,
+            range,
+            offset,
+            deadline,
+            attempt: 0,
+            reply,
+        }));
         rx
     }
 
     /// Force pending requests out of every shard.
     pub fn flush(&self) {
-        for shard in &self.shards {
-            let _ = shard.tx.send(Msg::Flush);
+        for slot in &self.slots {
+            let _ = slot.send(Msg::Flush);
         }
     }
 
@@ -573,14 +775,44 @@ impl ServicePool {
         PoolStats::from_snapshot(&self.telemetry.snapshot())
     }
 
-    /// Stop all workers, returning per-shard counters. Counts come from
-    /// the shared telemetry registry, so a shard whose ack channel closed
-    /// early (worker panic) still reports everything it recorded.
+    /// Stop the supervisor, then all workers, returning per-shard counters
+    /// (with `lost_shards` counting workers that failed the handshake).
+    /// Counts come from the shared telemetry registry, so a shard whose
+    /// ack channel closed early (worker panic) still reports everything it
+    /// recorded; any ledger straggler is failed with a typed error rather
+    /// than left hanging.
     pub fn shutdown(mut self) -> Result<PoolStats> {
-        for shard in &mut self.shards {
-            shard.shutdown();
+        Ok(self.shutdown_inner())
+    }
+
+    /// Idempotent teardown shared by [`ServicePool::shutdown`] and `Drop`.
+    /// Ordering is load-bearing (see the supervisor module docs): stop the
+    /// supervisor (drains queued retries with typed errors), handshake the
+    /// workers (flushes batchers), then sweep the ledger so no caller can
+    /// be left holding a channel nobody will answer.
+    fn shutdown_inner(&mut self) -> PoolStats {
+        if let Some(mut sup) = self.supervisor.take() {
+            sup.stop();
         }
-        Ok(self.stats_now())
+        let mut lost = 0u64;
+        for slot in &self.slots {
+            if !slot.shutdown_worker() {
+                lost += 1;
+            }
+        }
+        for e in self.inflight.drain_all() {
+            self.telemetry.shard(e.shard).record_failure();
+            let _ = e.reply.send(Err(Error::ShardLost));
+        }
+        let mut stats = self.stats_now();
+        stats.lost_shards = lost;
+        stats
+    }
+}
+
+impl Drop for ServicePool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
     }
 }
 
@@ -588,6 +820,7 @@ impl ServicePool {
 mod tests {
     use super::*;
     use crate::rng::{Engine, PhiloxEngine};
+    use std::time::Duration;
 
     fn dedicated(seed: u64, offset: u64, n: usize) -> Vec<f32> {
         let mut e = PhiloxEngine::with_offset(seed, offset);
@@ -608,10 +841,11 @@ mod tests {
             assert_eq!(got, dedicated(42, offset, n));
             offset += n as u64;
         }
-        let stats = pool.shutdown().unwrap().total();
-        assert_eq!(stats.requests, 3);
-        assert_eq!(stats.launches, 1);
-        assert_eq!(stats.numbers, 344);
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.total().requests, 3);
+        assert_eq!(stats.total().launches, 1);
+        assert_eq!(stats.total().numbers, 344);
+        assert_eq!(stats.lost_shards, 0);
     }
 
     #[test]
@@ -677,6 +911,54 @@ mod tests {
     }
 
     #[test]
+    fn exact_threshold_routes_overflow_with_exact_offsets() {
+        // Boundary bookkeeping: a request of exactly `threshold` numbers
+        // goes to the overflow lane, one number under stays batched, and
+        // the global offsets reflect pure submission order either way.
+        let mut cfg = PoolConfig::new(PlatformId::A100, 21, 1);
+        cfg.policy = DispatchPolicy::fixed(1000);
+        let pool = ServicePool::spawn(cfg);
+        let under = pool.generate(999, (0.0, 1.0)); // offset 0, batched
+        let at = pool.generate(1000, (0.0, 1.0)); // offset 999, overflow
+        assert_eq!(at.recv().unwrap().unwrap(), dedicated(21, 999, 1000));
+        pool.flush();
+        assert_eq!(under.recv().unwrap().unwrap(), dedicated(21, 0, 999));
+
+        let snap = pool.telemetry().snapshot();
+        assert_eq!(snap.dispatched_batched, 1);
+        assert_eq!(snap.dispatched_overflow, 1);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn zero_sized_requests_are_served_and_do_not_shift_streams() {
+        let pool = ServicePool::spawn(PoolConfig::new(PlatformId::A100, 17, 1));
+        let empty = pool.generate(0, (0.0, 1.0));
+        let after = pool.generate(32, (0.0, 1.0));
+        pool.flush();
+        assert_eq!(empty.recv().unwrap().unwrap(), Vec::<f32>::new());
+        // n == 0 advances the cursor by zero: the next request still
+        // starts at offset 0.
+        assert_eq!(after.recv().unwrap().unwrap(), dedicated(17, 0, 32));
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn max_requests_one_degenerates_to_immediate_launches() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 23, 1);
+        cfg.max_requests = 1;
+        let pool = ServicePool::spawn(cfg);
+        // Every request closes its own batch: replies arrive without any
+        // flush, and offsets still follow submission order.
+        let a = pool.generate(7, (0.0, 1.0));
+        let b = pool.generate(9, (0.0, 1.0));
+        assert_eq!(a.recv().unwrap().unwrap(), dedicated(23, 0, 7));
+        assert_eq!(b.recv().unwrap().unwrap(), dedicated(23, 7, 9));
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.total().launches, 2);
+    }
+
+    #[test]
     fn range_transform_applied_per_request() {
         let pool = ServicePool::spawn(PoolConfig::new(PlatformId::Rome7742, 3, 2));
         let rx = pool.generate(64, (2.0, 4.0));
@@ -715,6 +997,8 @@ mod tests {
         assert_eq!(snap.shards[1].delivered, 2000);
         assert_eq!(snap.shards[1].launch_ns.count, 1);
         assert_eq!(snap.total_failures(), 0);
+        // Fault-free pool: the resilience block stays all-zero.
+        assert!(!snap.resilience_totals().any());
         pool.shutdown().unwrap();
     }
 
@@ -818,5 +1102,87 @@ mod tests {
         // The registry outlives the pool: counts are never dropped with
         // the workers' channels.
         assert_eq!(keep.snapshot().total_requests(), 6);
+    }
+
+    #[test]
+    fn shed_gate_rejects_at_capacity_without_advancing_the_stream() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 31, 1);
+        cfg.ingress.max_inflight = 2;
+        let pool = ServicePool::spawn(cfg);
+        // Two admitted requests sit in the batcher (default flush limits
+        // are far away), so the third hits the depth bound.
+        let a = pool.generate(10, (0.0, 1.0));
+        let b = pool.generate(10, (0.0, 1.0));
+        let shed = pool.generate(10, (0.0, 1.0));
+        match shed.recv().unwrap() {
+            Err(Error::Overloaded { in_flight, limit }) => {
+                assert_eq!((in_flight, limit), (2, 2));
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        pool.flush();
+        // The shed request never touched the cursor: the admitted pair
+        // still covers offsets 0..20.
+        assert_eq!(a.recv().unwrap().unwrap(), dedicated(31, 0, 10));
+        assert_eq!(b.recv().unwrap().unwrap(), dedicated(31, 10, 10));
+        let snap = pool.telemetry().snapshot();
+        assert_eq!(snap.requests_shed, 1);
+        assert_eq!(snap.total_requests(), 2);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadlines_fail_typed_at_the_worker() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 33, 1);
+        cfg.ingress.deadline = Some(Duration::ZERO);
+        let pool = ServicePool::spawn(cfg);
+        let rx = pool.generate(10, (0.0, 1.0));
+        pool.flush();
+        match rx.recv().unwrap() {
+            Err(Error::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let snap = pool.telemetry().snapshot();
+        assert_eq!(snap.resilience_totals().deadline_exceeded, 1);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn injected_worker_kill_respawns_and_replies_bit_identically() {
+        let mut cfg = PoolConfig::new(PlatformId::A100, 77, 1);
+        // First worker message triggers the kill; the plan survives the
+        // respawn, so the re-dispatched message (op 2) sails through.
+        cfg.fault = Some(FaultSpec::parse("kill=0@1").unwrap());
+        let pool = ServicePool::spawn(cfg);
+        let rx = pool.generate(64, (0.0, 1.0));
+        pool.flush();
+        let got = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("supervisor must re-dispatch, not hang the caller")
+            .unwrap();
+        assert_eq!(got, dedicated(77, 0, 64));
+        let snap = pool.telemetry().snapshot();
+        assert!(snap.resilience_totals().shard_respawns >= 1);
+        assert!(snap.resilience_totals().faults_injected >= 1);
+        let stats = pool.shutdown().unwrap();
+        assert_eq!(stats.lost_shards, 0); // respawned shard shuts down cleanly
+    }
+
+    #[test]
+    fn reply_channels_never_leak_on_early_worker_exit() {
+        // Regression for the early-exit reply leak: requests queued behind
+        // a batcher when the pool goes away must see a typed error (or
+        // their payload), never a disconnected channel.
+        let pool = ServicePool::spawn(PoolConfig::new(PlatformId::A100, 55, 2));
+        let rxs: Vec<_> = (0..4).map(|_| pool.generate(25, (0.0, 1.0))).collect();
+        drop(pool); // no explicit flush/shutdown: Drop must drain
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(payload)) => assert_eq!(payload.len(), 25),
+                Ok(Err(Error::ShardLost)) => {}
+                Ok(Err(other)) => panic!("unexpected error: {other:?}"),
+                Err(_) => panic!("reply channel leaked: caller would hang"),
+            }
+        }
     }
 }

@@ -1,0 +1,191 @@
+//! Shard supervision: detect dead workers, respawn, re-dispatch
+//! bit-identically (DESIGN.md S15).
+//!
+//! One supervisor thread per pool runs a two-part loop:
+//!
+//! * **Retry handling** — workers forward transient injected faults here
+//!   ([`SupMsg::Retry`]) instead of failing the caller. The supervisor
+//!   checks the deadline and retry budgets against the in-flight ledger,
+//!   sleeps the bounded-exponential backoff, re-routes the request
+//!   through the live dispatch policy and re-issues it (same pool-global
+//!   id, same global stream offset) followed by a flush so a lone retry
+//!   never strands in a batcher.
+//! * **Health sweep** — every loop tick it reaps worker threads that
+//!   finished without a shutdown handshake (panic — injected or genuine —
+//!   or injected kill), respawns the shard with the same shard id, lane,
+//!   seed, telemetry and fault plan but a fresh queue + arena, and
+//!   re-dispatches every ledger entry still assigned to that shard by its
+//!   recorded offset.
+//!
+//! Determinism argument, in one line: a request's payload is a pure
+//! function of `(pool seed, offset, n, range)` — the ledger preserves all
+//! four across any number of deaths and retries, so a re-dispatched reply
+//! is bit-identical to the fault-free one. A worker that died *between*
+//! sending a reply and completing the ledger entry causes one duplicate
+//! reply — benign for the same reason (the caller reads exactly one, and
+//! both are identical).
+//!
+//! Shutdown ordering matters: [`ServicePool::shutdown`] stops the
+//! supervisor *first* (draining queued retries with typed errors), then
+//! handshakes the workers, then fails any ledger stragglers — so no
+//! retry can race a dying pool into a hung caller.
+//!
+//! [`ServicePool::shutdown`]: super::ServicePool::shutdown
+
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::Error;
+use crate::telemetry::TelemetryRegistry;
+
+use super::ingress::{InflightTable, IngressConfig, Router};
+use super::pool::{Msg, ShardSlot};
+
+/// Messages workers (and the pool) send the supervisor.
+pub(crate) enum SupMsg {
+    /// A transient injected fault hit request `id`; re-dispatch it after
+    /// backoff, or fail it with the site's typed error when budgets are
+    /// exhausted.
+    Retry {
+        /// Pool-global request id (ledger key).
+        id: u64,
+        /// Injection-site token, for the exhaustion error.
+        site: &'static str,
+    },
+    /// Stop the supervisor loop.
+    Shutdown,
+}
+
+/// Handle to the supervisor thread.
+pub(crate) struct Supervisor {
+    tx: mpsc::Sender<SupMsg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Start supervising `slots`. `tx`/`rx` are the pre-built channel
+    /// whose sender clones the slots already hold as their retry path.
+    pub(crate) fn spawn(
+        slots: Vec<Arc<ShardSlot>>,
+        inflight: Arc<InflightTable>,
+        registry: Arc<TelemetryRegistry>,
+        router: Arc<Router>,
+        cfg: IngressConfig,
+        tx: mpsc::Sender<SupMsg>,
+        rx: mpsc::Receiver<SupMsg>,
+    ) -> Supervisor {
+        let worker = std::thread::spawn(move || {
+            let state = State { slots, inflight, registry, router, cfg };
+            loop {
+                match rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(SupMsg::Retry { id, site }) => state.handle_retry(id, site),
+                    Ok(SupMsg::Shutdown) | Err(RecvTimeoutError::Disconnected) => break,
+                    Err(RecvTimeoutError::Timeout) => {}
+                }
+                state.sweep();
+            }
+            // The pool is shutting down: answer queued retries with the
+            // fault they hit rather than re-dispatching into dying shards
+            // — typed errors, never hangs.
+            while let Ok(msg) = rx.try_recv() {
+                if let SupMsg::Retry { id, site } = msg {
+                    if let Some(e) = state.inflight.take(id) {
+                        state.registry.shard(e.shard).record_failure();
+                        let _ = e.reply.send(Err(Error::Injected { site }));
+                    }
+                }
+            }
+        });
+        Supervisor { tx, worker: Some(worker) }
+    }
+
+    /// Stop the loop and join the thread (idempotent).
+    pub(crate) fn stop(&mut self) {
+        let _ = self.tx.send(SupMsg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+struct State {
+    slots: Vec<Arc<ShardSlot>>,
+    inflight: Arc<InflightTable>,
+    registry: Arc<TelemetryRegistry>,
+    router: Arc<Router>,
+    cfg: IngressConfig,
+}
+
+impl State {
+    /// Re-dispatch one transient-faulted request, or fail it when its
+    /// deadline or retry budget ran out.
+    fn handle_retry(&self, id: u64, site: &'static str) {
+        // Entry already answered (e.g. a duplicate retry) — nothing to do.
+        let Some((attempts, deadline, n)) = self.inflight.retry_info(id) else { return };
+        if deadline.is_some_and(|dl| Instant::now() > dl) {
+            if let Some(e) = self.inflight.take(id) {
+                self.registry.shard(e.shard).record_deadline_exceeded();
+                let _ = e.reply.send(Err(Error::DeadlineExceeded));
+            }
+            return;
+        }
+        if attempts >= self.cfg.max_retries {
+            // Budget exhausted: the caller gets the fault as a typed
+            // error (the worker-side check usually catches this first;
+            // this is the backstop for stale retry messages).
+            if let Some(e) = self.inflight.take(id) {
+                self.registry.shard(e.shard).record_failure();
+                let _ = e.reply.send(Err(Error::Injected { site }));
+            }
+            return;
+        }
+        std::thread::sleep(self.cfg.backoff(attempts + 1));
+        let (idx, _overflow) = self.router.route(n);
+        if let Some(req) = self.inflight.reissue(id, idx, true) {
+            self.registry.record_retry();
+            // A failed send means the target worker just died: the entry
+            // stays assigned to `idx` in the ledger, and the next sweep
+            // respawns that shard and re-dispatches it.
+            if self.slots[idx].send(Msg::Generate(req)) {
+                let _ = self.slots[idx].send(Msg::Flush);
+            }
+        }
+    }
+
+    /// Reap and respawn any worker thread that exited without a shutdown
+    /// handshake, then re-dispatch its ledger entries.
+    fn sweep(&self) {
+        for slot in &self.slots {
+            if !slot.reap_dead_worker() {
+                continue;
+            }
+            let telemetry = self.registry.shard(slot.idx);
+            telemetry.record_respawn();
+            if let Some(plan) = slot.fault_plan() {
+                // The dead worker can't publish its final fault count
+                // (an injected kill is itself an injected fault) — the
+                // supervisor publishes on its behalf.
+                telemetry.set_faults_injected(plan.injected());
+            }
+            slot.respawn();
+            for id in self.inflight.assigned_to(slot.idx) {
+                // Same shard, no attempt bump: a worker death is not the
+                // request's fault. Deadlines are re-checked at dequeue.
+                if let Some(req) = self.inflight.reissue(id, slot.idx, false) {
+                    let _ = slot.send(Msg::Generate(req));
+                }
+            }
+            // Flush so redispatched requests can't strand in the batcher
+            // waiting for traffic that may never come.
+            let _ = slot.send(Msg::Flush);
+        }
+    }
+}

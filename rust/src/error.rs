@@ -40,6 +40,32 @@ pub enum Error {
 
     /// Coordinator/service errors (channel closed, worker panicked).
     Coordinator(String),
+
+    /// Ingress gate shed the request: the pool already carries `in_flight`
+    /// requests against a configured depth bound of `limit`.
+    Overloaded {
+        /// In-flight requests at the moment the request was shed.
+        in_flight: usize,
+        /// Configured bound (`IngressConfig::max_inflight`).
+        limit: usize,
+    },
+
+    /// The request's deadline budget expired before a shard produced its
+    /// payload (checked at worker dequeue and at supervisor redispatch).
+    DeadlineExceeded,
+
+    /// The owning shard died and the request could not be re-dispatched
+    /// (pool shutting down, or the caller raced a terminal sweep).
+    ShardLost,
+
+    /// A fault deliberately injected by the active chaos plan
+    /// ([`crate::fault`]). Transient by construction: the ingress retry
+    /// policy may re-dispatch the request, and the counter-based stream
+    /// addressing guarantees the retried payload is bit-identical.
+    Injected {
+        /// Injection-site token (`"generate"`, `"submit"`, `"d2h"`).
+        site: &'static str,
+    },
 }
 
 impl fmt::Display for Error {
@@ -55,6 +81,12 @@ impl fmt::Display for Error {
             Error::Json(msg) => write!(f, "json error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Overloaded { in_flight, limit } => {
+                write!(f, "overloaded: {in_flight} requests in flight (limit {limit})")
+            }
+            Error::DeadlineExceeded => write!(f, "deadline exceeded"),
+            Error::ShardLost => write!(f, "shard lost"),
+            Error::Injected { site } => write!(f, "injected fault at {site}"),
         }
     }
 }
@@ -89,6 +121,22 @@ impl Error {
     pub fn unsupported(backend: &'static str, what: impl Into<String>) -> Self {
         Error::Unsupported { backend, what: what.into() }
     }
+
+    /// `true` for failures that a retry can plausibly clear without any
+    /// operator action. Today that is exactly the injected chaos faults:
+    /// real backend/queue failures are treated as persistent so a broken
+    /// device cannot melt into a silent retry storm.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::Injected { .. })
+    }
+
+    /// Injection-site token when this error is an injected fault.
+    pub fn injected_site(&self) -> Option<&'static str> {
+        match self {
+            Error::Injected { site } => Some(site),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -108,6 +156,33 @@ mod tests {
         assert!(Error::from(crate::xla::Error("x".into()))
             .to_string()
             .starts_with("xla error"));
+    }
+
+    #[test]
+    fn resilience_variant_displays_are_stable() {
+        assert_eq!(
+            Error::Overloaded { in_flight: 9, limit: 8 }.to_string(),
+            "overloaded: 9 requests in flight (limit 8)"
+        );
+        assert_eq!(Error::DeadlineExceeded.to_string(), "deadline exceeded");
+        assert_eq!(Error::ShardLost.to_string(), "shard lost");
+        assert_eq!(Error::Injected { site: "d2h" }.to_string(), "injected fault at d2h");
+    }
+
+    #[test]
+    fn only_injected_faults_are_transient() {
+        assert!(Error::Injected { site: "generate" }.is_transient());
+        assert_eq!(Error::Injected { site: "generate" }.injected_site(), Some("generate"));
+        for e in [
+            Error::DeadlineExceeded,
+            Error::ShardLost,
+            Error::Overloaded { in_flight: 1, limit: 1 },
+            Error::Coordinator("x".into()),
+            Error::Sycl("x".into()),
+        ] {
+            assert!(!e.is_transient(), "{e} must not be retried");
+            assert_eq!(e.injected_site(), None);
+        }
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! Deterministic, seeded fault injection for chaos soaks.
+//!
+//! The resilience layer is only testable if failures are reproducible, so
+//! nothing in this module consults a wall clock or an OS entropy source.
+//! A [`FaultSpec`] (parsed from `serve --chaos <spec>` or the
+//! `PORTARNG_FAULT_PLAN` env var) expands into one [`ShardFaultPlan`] per
+//! pool shard; each plan decides every injection *by op count*: the k-th
+//! operation a shard performs at a given [`FaultSite`] either always fires
+//! or never fires for a given `(seed, shard, site, k)` — independent of
+//! timing, interleaving, or how often telemetry is read. Re-running the
+//! same spec against the same request sequence reproduces the same faults,
+//! which is what lets `benches/chaos_soak.rs` assert bit-identical output
+//! under a 5% fault rate.
+//!
+//! Hot-path cost when chaos is *not* configured: the hooks below reduce to
+//! one thread-local read and a `None` check — no plan is ever installed on
+//! threads outside a chaos-configured pool, so the fault layer is inert
+//! for every existing benchmark and test.
+//!
+//! Injection seams (the four that exist in the serving stack today):
+//!
+//! | site                  | hook                                          |
+//! |-----------------------|-----------------------------------------------|
+//! | [`FaultSite::Generate`] | vendor backend `generate_canonical`         |
+//! | [`FaultSite::Submit`]   | `Queue::submit_usm_checked` (flush DAG)     |
+//! | [`FaultSite::D2h`]      | `Queue::usm_slice_to_host_checked`          |
+//! | [`FaultSite::WorkerKill`] | shard worker loop (whole-worker panic)    |
+
+mod plan;
+mod spec;
+
+pub use plan::ShardFaultPlan;
+pub use spec::{FaultSpec, KillPoint};
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+/// One of the four seams a chaos plan can break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Vendor backend `generate` call inside the interop host task.
+    Generate,
+    /// Queue submission of the flush's generate command group.
+    Submit,
+    /// Per-member device-to-host slice copy.
+    D2h,
+    /// Whole-worker panic at the message-dequeue boundary (not a
+    /// transient site: scheduled by `kill=<shard>@<op>`, not by rate).
+    WorkerKill,
+}
+
+impl FaultSite {
+    /// The three rate-driven sites (everything except [`FaultSite::WorkerKill`]).
+    pub const TRANSIENT: [FaultSite; 3] = [FaultSite::Generate, FaultSite::Submit, FaultSite::D2h];
+
+    /// Stable token used in spec grammar, error messages, and telemetry.
+    pub fn token(self) -> &'static str {
+        match self {
+            FaultSite::Generate => "generate",
+            FaultSite::Submit => "submit",
+            FaultSite::D2h => "d2h",
+            FaultSite::WorkerKill => "worker-kill",
+        }
+    }
+
+    /// Index into the per-site op counters for transient sites.
+    pub(crate) fn transient_lane(self) -> Option<usize> {
+        match self {
+            FaultSite::Generate => Some(0),
+            FaultSite::Submit => Some(1),
+            FaultSite::D2h => Some(2),
+            FaultSite::WorkerKill => None,
+        }
+    }
+
+    /// Inverse of [`FaultSite::token`] for the spec grammar's `sites=` list.
+    fn parse_token(s: &str) -> Option<FaultSite> {
+        match s {
+            "generate" => Some(FaultSite::Generate),
+            "submit" => Some(FaultSite::Submit),
+            "d2h" => Some(FaultSite::D2h),
+            _ => None,
+        }
+    }
+}
+
+thread_local! {
+    /// The plan governing the current thread, if any. Shard workers install
+    /// their plan at thread entry; every other thread stays at `None`, so
+    /// [`trip`] is a no-op outside a chaos-configured pool.
+    static ACTIVE: RefCell<Option<Arc<ShardFaultPlan>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the fault plan for the current thread.
+pub fn install(plan: Option<Arc<ShardFaultPlan>>) {
+    ACTIVE.with(|a| *a.borrow_mut() = plan);
+}
+
+/// Consume one op at `site` against the current thread's plan. Returns
+/// `Err(Error::Injected)` when the plan fires; `Ok(())` when no plan is
+/// installed, the site is disabled, or this op is scheduled to survive.
+pub fn trip(site: FaultSite) -> Result<()> {
+    ACTIVE.with(|a| match a.borrow().as_ref() {
+        Some(plan) if plan.trip(site) => Err(Error::Injected { site: site.token() }),
+        _ => Ok(()),
+    })
+}

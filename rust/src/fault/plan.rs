@@ -1,0 +1,171 @@
+//! Per-shard fault plan: pure-function fault decisions keyed by op count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::spec::FaultSpec;
+use super::FaultSite;
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// splitmix64 finalizer — a strong 64-bit mixer, used here as a keyed
+/// decision function, never as a sequential stream (every call mixes the
+/// full `(seed, shard, site, k)` coordinate, so decisions are independent
+/// of evaluation order).
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One shard's slice of a [`FaultSpec`]: op counters plus the pure
+/// decision function. Shared (`Arc`) between the worker thread and the
+/// supervisor, and deliberately *reused across respawns* so op counts —
+/// and therefore kill schedules — survive a worker death.
+#[derive(Debug)]
+pub struct ShardFaultPlan {
+    shard: usize,
+    seed: u64,
+    /// `rate` mapped into the 53-bit decision space; 0 disables all
+    /// transient sites, `1 << 53` fires every op.
+    threshold: u64,
+    enabled: [bool; 3],
+    /// Ops consumed so far per transient site (generate / submit / d2h).
+    ops: [AtomicU64; 3],
+    /// Sorted 1-based worker message-op indices scheduled to kill this
+    /// shard's worker.
+    kill_at: Vec<u64>,
+    msg_ops: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl ShardFaultPlan {
+    pub(super) fn new(spec: &FaultSpec, shard: usize) -> ShardFaultPlan {
+        let mut enabled = [false; 3];
+        for site in &spec.sites {
+            if let Some(lane) = site.transient_lane() {
+                enabled[lane] = true;
+            }
+        }
+        let mut kill_at: Vec<u64> =
+            spec.kills.iter().filter(|k| k.shard == shard).map(|k| k.op).collect();
+        kill_at.sort_unstable();
+        kill_at.dedup();
+        ShardFaultPlan {
+            shard,
+            seed: spec.seed,
+            threshold: (spec.rate * (1u64 << 53) as f64) as u64,
+            enabled,
+            ops: std::array::from_fn(|_| AtomicU64::new(0)),
+            kill_at,
+            msg_ops: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Shard this plan governs.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Consume one op at `site`; `true` means the op must fail. The
+    /// decision is a pure function of `(seed, shard, site, k)` where `k`
+    /// is this shard's op count at the site — never of time or thread
+    /// interleaving. [`FaultSite::WorkerKill`] is schedule-driven and
+    /// always returns `false` here.
+    pub fn trip(&self, site: FaultSite) -> bool {
+        let Some(lane) = site.transient_lane() else { return false };
+        if !self.enabled[lane] || self.threshold == 0 {
+            return false;
+        }
+        let k = self.ops[lane].fetch_add(1, Ordering::Relaxed);
+        let key = self.seed
+            ^ (self.shard as u64).wrapping_mul(GOLDEN)
+            ^ ((lane as u64 + 1) << 56)
+            ^ k.wrapping_mul(0x94D0_49BB_1331_11EB);
+        let fire = (mix(key) >> 11) < self.threshold;
+        if fire {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Advance the worker's message-op counter; `true` when this op is a
+    /// scheduled kill point. Counts continue across respawns (the pool
+    /// re-installs the same plan), so each kill point fires exactly once.
+    pub fn trip_kill(&self) -> bool {
+        let op = self.msg_ops.fetch_add(1, Ordering::Relaxed) + 1;
+        let fire = self.kill_at.binary_search(&op).is_ok();
+        if fire {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Total faults (transient trips + kills) injected by this plan.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(spec: &str, shard: usize) -> ShardFaultPlan {
+        ShardFaultPlan::new(&FaultSpec::parse(spec).unwrap(), shard)
+    }
+
+    #[test]
+    fn decisions_are_reproducible_per_op_index() {
+        let a = plan("seed=42,rate=0.25", 1);
+        let b = plan("seed=42,rate=0.25", 1);
+        let fired_a: Vec<bool> = (0..256).map(|_| a.trip(FaultSite::Generate)).collect();
+        let fired_b: Vec<bool> = (0..256).map(|_| b.trip(FaultSite::Generate)).collect();
+        assert_eq!(fired_a, fired_b);
+        assert!(fired_a.iter().any(|&f| f), "25% over 256 ops must fire at least once");
+        assert!(fired_a.iter().any(|&f| !f), "25% over 256 ops must also pass ops through");
+        assert_eq!(a.injected(), fired_a.iter().filter(|&&f| f).count() as u64);
+    }
+
+    #[test]
+    fn sites_and_shards_decide_independently() {
+        let p = plan("seed=7,rate=0.5", 0);
+        let gen: Vec<bool> = (0..64).map(|_| p.trip(FaultSite::Generate)).collect();
+        let d2h: Vec<bool> = (0..64).map(|_| p.trip(FaultSite::D2h)).collect();
+        assert_ne!(gen, d2h, "sites must not share a decision stream");
+        let other = plan("seed=7,rate=0.5", 3);
+        let gen3: Vec<bool> = (0..64).map(|_| other.trip(FaultSite::Generate)).collect();
+        assert_ne!(gen, gen3, "shards must not share a decision stream");
+    }
+
+    #[test]
+    fn rate_extremes_and_disabled_sites() {
+        let never = plan("seed=1,rate=0.0", 0);
+        let always = plan("seed=1,rate=1.0", 0);
+        for _ in 0..64 {
+            assert!(!never.trip(FaultSite::Submit));
+            assert!(always.trip(FaultSite::Submit));
+        }
+        let gen_only = plan("seed=1,rate=1.0,sites=generate", 0);
+        assert!(gen_only.trip(FaultSite::Generate));
+        assert!(!gen_only.trip(FaultSite::Submit));
+        assert!(!gen_only.trip(FaultSite::D2h));
+    }
+
+    #[test]
+    fn kill_fires_exactly_once_at_the_scheduled_op() {
+        let p = plan("kill=2@3", 2);
+        let fired: Vec<bool> = (0..8).map(|_| p.trip_kill()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false, false, false]);
+        assert_eq!(p.injected(), 1);
+        let other_shard = plan("kill=2@3", 0);
+        assert!((0..8).all(|_| !other_shard.trip_kill()));
+    }
+
+    #[test]
+    fn worker_kill_never_trips_the_transient_path() {
+        let p = plan("seed=9,rate=1.0", 0);
+        assert!(!p.trip(FaultSite::WorkerKill));
+    }
+}

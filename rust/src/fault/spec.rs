@@ -1,0 +1,199 @@
+//! Chaos-spec grammar: the `--chaos` / `PORTARNG_FAULT_PLAN` surface.
+//!
+//! A spec is a comma-separated list of `key=value` fields:
+//!
+//! ```text
+//! seed=42,rate=0.05,sites=generate+submit+d2h,kill=0@17+1@9
+//! ```
+//!
+//! * `seed=<u64>` — decision seed (default `0xFA17`);
+//! * `rate=<f64 in [0,1]>` — transient-fault probability per op (default 0);
+//! * `sites=<site>+<site>...` — transient sites to arm, from `generate`,
+//!   `submit`, `d2h` (default: all three);
+//! * `kill=<shard>@<op>[+<shard>@<op>...]` — kill shard `<shard>`'s worker
+//!   at its `<op>`-th message (1-based), repeatable.
+//!
+//! Unknown keys, malformed values, and out-of-range rates are rejected
+//! with `Error::InvalidArgument` so a typo'd soak fails loudly instead of
+//! silently running fault-free.
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::plan::ShardFaultPlan;
+use super::FaultSite;
+use crate::error::{Error, Result};
+
+/// One scheduled whole-worker kill: shard `shard`'s worker panics when it
+/// dequeues its `op`-th message (1-based, counted across respawns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillPoint {
+    /// Target shard index.
+    pub shard: usize,
+    /// 1-based message-op index at which the worker dies.
+    pub op: u64,
+}
+
+/// A parsed chaos plan, shared by every shard of a pool. Expand with
+/// [`FaultSpec::shard_plan`] to get the per-shard decision state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Decision seed mixed into every fault decision.
+    pub seed: u64,
+    /// Per-op transient-fault probability in `[0, 1]`.
+    pub rate: f64,
+    /// Armed transient sites.
+    pub sites: Vec<FaultSite>,
+    /// Scheduled whole-worker kills.
+    pub kills: Vec<KillPoint>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 0xFA17,
+            rate: 0.0,
+            sites: FaultSite::TRANSIENT.to_vec(),
+            kills: Vec::new(),
+        }
+    }
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::InvalidArgument(format!("chaos spec: {}", msg.into()))
+}
+
+impl FaultSpec {
+    /// Parse the `--chaos` grammar (see module docs).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for field in s.split(',') {
+            let field = field.trim();
+            if field.is_empty() {
+                continue;
+            }
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| bad(format!("expected key=value, got `{field}`")))?;
+            let value = value.trim();
+            match key.trim() {
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|_| bad(format!("seed must be a u64, got `{value}`")))?;
+                }
+                "rate" => {
+                    let rate: f64 = value
+                        .parse()
+                        .map_err(|_| bad(format!("rate must be a float, got `{value}`")))?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(bad(format!("rate must be in [0, 1], got {rate}")));
+                    }
+                    spec.rate = rate;
+                }
+                "sites" => {
+                    spec.sites = value
+                        .split('+')
+                        .map(|tok| {
+                            FaultSite::parse_token(tok.trim()).ok_or_else(|| {
+                                bad(format!(
+                                    "unknown site `{tok}` (expected generate, submit, or d2h)"
+                                ))
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "kill" => {
+                    for k in value.split('+') {
+                        let (shard, op) = k
+                            .trim()
+                            .split_once('@')
+                            .ok_or_else(|| bad(format!("kill must be <shard>@<op>, got `{k}`")))?;
+                        let shard = shard
+                            .parse()
+                            .map_err(|_| bad(format!("kill shard must be a usize, got `{shard}`")))?;
+                        let op: u64 = op
+                            .parse()
+                            .map_err(|_| bad(format!("kill op must be a u64, got `{op}`")))?;
+                        if op == 0 {
+                            return Err(bad("kill op is 1-based; `@0` never fires"));
+                        }
+                        spec.kills.push(KillPoint { shard, op });
+                    }
+                }
+                other => return Err(bad(format!("unknown key `{other}`"))),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Expand this spec into shard `shard`'s decision state.
+    pub fn shard_plan(&self, shard: usize) -> Arc<ShardFaultPlan> {
+        Arc::new(ShardFaultPlan::new(self, shard))
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={},rate={}", self.seed, self.rate)?;
+        let sites: Vec<&str> = self.sites.iter().map(|s| s.token()).collect();
+        write!(f, ",sites={}", sites.join("+"))?;
+        if !self.kills.is_empty() {
+            let kills: Vec<String> =
+                self.kills.iter().map(|k| format!("{}@{}", k.shard, k.op)).collect();
+            write!(f, ",kill={}", kills.join("+"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grammar_round_trips() {
+        let spec = FaultSpec::parse("seed=42,rate=0.05,sites=generate+d2h,kill=0@17+1@9").unwrap();
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.rate, 0.05);
+        assert_eq!(spec.sites, vec![FaultSite::Generate, FaultSite::D2h]);
+        assert_eq!(
+            spec.kills,
+            vec![KillPoint { shard: 0, op: 17 }, KillPoint { shard: 1, op: 9 }]
+        );
+        assert_eq!(FaultSpec::parse(&spec.to_string()).unwrap(), spec);
+    }
+
+    #[test]
+    fn defaults_arm_all_transient_sites_fault_free() {
+        let spec = FaultSpec::parse("").unwrap();
+        assert_eq!(spec, FaultSpec::default());
+        assert_eq!(spec.rate, 0.0);
+        assert_eq!(spec.sites.len(), 3);
+        assert!(spec.kills.is_empty());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for s in [
+            "bogus",
+            "turbo=1",
+            "rate=1.5",
+            "rate=-0.1",
+            "rate=much",
+            "seed=-3",
+            "sites=generate+warp",
+            "sites=worker-kill",
+            "kill=0",
+            "kill=a@3",
+            "kill=0@x",
+            "kill=0@0",
+        ] {
+            let err = FaultSpec::parse(s).unwrap_err();
+            assert!(
+                err.to_string().contains("chaos spec"),
+                "`{s}` must fail with a chaos-spec error, got: {err}"
+            );
+        }
+    }
+}

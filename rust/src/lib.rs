@@ -41,6 +41,11 @@
 //!   calibration probes, persisted calibration profiles, and the online
 //!   controller that retunes the pool from telemetry (DESIGN.md S12,
 //!   below).
+//! * [`fault`] — deterministic, seeded fault injection (the chaos half of
+//!   the resilience layer, DESIGN.md S15): op-count-scheduled faults at
+//!   the four serving seams, armed via `serve --chaos` /
+//!   `PORTARNG_FAULT_PLAN` and inert (one thread-local null check) when
+//!   unconfigured.
 //! * [`repro`] — drivers that regenerate every table and figure.
 //! * [`benchkit`] / [`testkit`] / [`jsonlite`] / [`xla`] — in-tree
 //!   substrates for the criterion / proptest / serde_json / xla_extension
@@ -80,6 +85,17 @@
 //! [`coordinator::RngService`] remains as the single-shard facade over the
 //! same machinery.
 //!
+//! The same invariant is what makes the pool *supervisable* (DESIGN.md
+//! S15): every accepted request is recorded in an in-flight ledger with
+//! its global offset, a supervisor thread respawns dead shard workers and
+//! re-dispatches their ledger entries, and because a stream is addressed
+//! by offset — not by generator state — the redelivered payload is
+//! provably bit-identical to the fault-free answer. An ingress gate adds
+//! bounded depth ([`Error::Overloaded`]), deadline budgets
+//! ([`Error::DeadlineExceeded`]) and bounded-backoff retry of transient
+//! faults; `benches/chaos_soak.rs` gates the whole layer under an
+//! injected 5% fault rate.
+//!
 //! ## The telemetry → autotune loop
 //!
 //! The dispatch threshold is measured, not guessed. Every shard records
@@ -116,6 +132,7 @@ pub mod burner;
 pub mod coordinator;
 pub mod error;
 pub mod fastcalosim;
+pub mod fault;
 pub mod jsonlite;
 pub mod metrics;
 pub mod platform;

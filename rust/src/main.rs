@@ -23,6 +23,7 @@ use portarng::autotune::{calibrate, PoolAutoTuner, ProfileStore};
 use portarng::burner::{run_burner_auto, run_burner_with_runtime, BurnerApi, BurnerConfig};
 use portarng::coordinator::{DispatchPolicy, PoolConfig, ServicePool};
 use portarng::fastcalosim::{run_fastcalosim, FcsApi, Workload};
+use portarng::fault::FaultSpec;
 use portarng::platform::PlatformId;
 use portarng::repro::ExperimentId;
 use portarng::runtime::PjrtRuntime;
@@ -66,13 +67,13 @@ USAGE:
   portarng burner --platform <p> --api <native|sycl-buffer|sycl-usm|pjrt>
                   --batch <n> [--iters <n>] [--range a,b]
                   [--distr <name> --params a,b,..] [--pool <shards>]
-                  [--stats-json <path>]        (pooled mode only)
+                  [--stats-json <path>] [--chaos <spec>]   (pooled mode only)
   portarng fastcalosim --platform <p> --api <native|sycl>
                   --workload <single-e|ttbar> [--events <n>]
   portarng repro --experiment <table1|fig2|fig3|fig4|table2|fig5|ablation-heuristic|all>
                   [--quick] [--outdir <dir>]
   portarng serve [--platform <p>] [--batch-max <n>] [--demo-requests <n>]
-                 [--shards <n>] [--overflow-at <n>]
+                 [--shards <n>] [--overflow-at <n>] [--chaos <spec>]
   portarng serve --autotune [--platform <p>] [--shards <n>] [--windows <n>]
                  [--demo-requests <n>] [--profile <path>] [--save-profile]
   portarng calibrate --platform <p> [--shards <n>] [--profile <path>]
@@ -81,7 +82,9 @@ USAGE:
 
 Distributions: uniform a b | gaussian mean stddev | lognormal m s |
                exponential lambda | poisson lambda | bits
-Platforms: rome7742, i7-10875h, xeon5220, uhd630, vega56, a100";
+Platforms: rome7742, i7-10875h, xeon5220, uhd630, vega56, a100
+Chaos spec:  seed=<u64>,rate=<0..1>,sites=<generate+submit+d2h>,kill=<shard>@<op>+..
+             (also read from PORTARNG_FAULT_PLAN when --chaos is absent)";
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
@@ -105,6 +108,19 @@ fn parse_opts(args: &[String]) -> HashMap<String, String> {
 
 fn need<'a>(opts: &'a HashMap<String, String>, key: &str) -> Result<&'a str, String> {
     opts.get(key).map(String::as_str).ok_or_else(|| format!("missing --{key}"))
+}
+
+/// Resolve the deterministic chaos plan for a pooled command: an explicit
+/// `--chaos <spec>` wins; the `PORTARNG_FAULT_PLAN` environment variable
+/// is the fallback (so CI can chaos-wrap a job without editing every
+/// command line); neither means no plan.
+fn chaos_spec(opts: &HashMap<String, String>) -> Result<Option<FaultSpec>, String> {
+    let spec = match opts.get("chaos") {
+        Some(s) => Some(s.clone()),
+        None => std::env::var("PORTARNG_FAULT_PLAN").ok().filter(|s| !s.is_empty()),
+    };
+    spec.map(|s| FaultSpec::parse(&s).map_err(|e| format!("bad chaos spec `{s}`: {e}")))
+        .transpose()
 }
 
 fn cmd_platforms() -> CliResult {
@@ -148,11 +164,17 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
     if opts.contains_key("stats-json") && !opts.contains_key("pool") {
         return Err("--stats-json requires --pool <shards> (it dumps pool telemetry)".into());
     }
+    if opts.contains_key("chaos") && !opts.contains_key("pool") {
+        return Err(
+            "--chaos requires --pool <shards> (faults inject into the supervised pool)".into()
+        );
+    }
 
     // Pooled mode: drive the workload through the sharded service pool.
     if let Some(shards) = opts.get("pool") {
         let shards: usize = shards.parse()?;
-        let r = portarng::burner::run_burner_pooled(&cfg, shards, iters)?;
+        let chaos = chaos_spec(opts)?;
+        let r = portarng::burner::run_burner_pooled_chaos(&cfg, shards, iters, chaos.as_ref())?;
         println!(
             "pooled burner {} shards={} requests={} batch={}\n  \
              {:.1} M numbers/s wall ({:.2} ms total), {} launches, checksum {:016x}",
@@ -187,6 +209,18 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
             arena.misses,
             arena.pooled_bytes / 1024
         );
+        if let Some(spec) = &chaos {
+            let res = r.telemetry.resilience_totals();
+            println!(
+                "  chaos [{spec}]: {} fault(s) injected, {} respawn(s), {} retried, \
+                 {} shed, {} deadline-exceeded",
+                res.faults_injected,
+                res.shard_respawns,
+                res.requests_retried,
+                res.requests_shed,
+                res.deadline_exceeded
+            );
+        }
         if let Some(path) = opts.get("stats-json") {
             let json = r.telemetry.to_json().to_json();
             // Guarantee the documented round-trip property before writing.
@@ -314,6 +348,13 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
     if opts.contains_key("save-profile") && !opts.contains_key("profile") {
         return Err("--save-profile requires --profile <path> (nowhere to save)".into());
     }
+    if autotune && opts.contains_key("chaos") {
+        return Err(
+            "--autotune and --chaos conflict: injected faults would poison the tuner's \
+             throughput observations (chaos-test the fixed-threshold pool)"
+                .into(),
+        );
+    }
 
     let platform = match opts.get("platform") {
         Some(p) => PlatformId::parse(p).ok_or("unknown platform; see `portarng platforms`")?,
@@ -337,6 +378,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
     if let Some(t) = overflow_at {
         cfg.policy = DispatchPolicy::fixed(t);
     }
+    let chaos = chaos_spec(opts)?;
+    if chaos.is_some() {
+        cfg.fault = chaos.clone();
+        cfg.ingress.max_retries = 12;
+    }
     let pool = ServicePool::spawn(cfg);
     let mut receivers = Vec::new();
     for i in 0..n_req {
@@ -345,8 +391,9 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
     pool.flush();
     let mut total = 0usize;
     for rx in receivers {
-        total += rx.recv()??.len();
+        total += rx.recv_timeout(std::time::Duration::from_secs(60))??.len();
     }
+    let snapshot = pool.telemetry().snapshot();
     let stats = pool.shutdown()?;
     let t = stats.total();
     println!(
@@ -360,6 +407,19 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
         println!(
             "  shard {i}: {} requests, {} launches, {} numbers",
             s.requests, s.launches, s.numbers
+        );
+    }
+    if let Some(spec) = &chaos {
+        let res = snapshot.resilience_totals();
+        println!(
+            "  chaos [{spec}]: {} fault(s) injected, {} respawn(s), {} retried, \
+             {} shed, {} deadline-exceeded, {} shard(s) lost at shutdown",
+            res.faults_injected,
+            res.shard_respawns,
+            res.requests_retried,
+            res.requests_shed,
+            res.deadline_exceeded,
+            stats.lost_shards
         );
     }
     Ok(())

@@ -306,7 +306,11 @@ pub fn generate_batch_usm(
     let canonical = Distribution::uniform(0.0, 1.0);
     let mut member_res: Vec<Result<()>> = Vec::with_capacity(members.len());
     let name = format!("{}::generate_batch", generator.backend_name());
-    let gen_ev = queue.submit_usm(
+    // Submission runs through the queue's fault seam: under a chaos plan
+    // the whole flush can be refused before anything is recorded (the
+    // caller fails every member with the — transient — injected error).
+    // The per-member vendor seam lives inside `generate_canonical`.
+    let gen_ev = queue.submit_usm_checked(
         name,
         CommandClass::Generate,
         generate_kernel_cost(launch_n),
@@ -322,7 +326,7 @@ pub fn generate_batch_usm(
                 member_res.push(r);
             }
         },
-    );
+    )?;
 
     // One transform kernel for the whole flush: each member's own affine
     // range applied to its slice (skipped entirely when every member is
@@ -363,16 +367,21 @@ pub fn generate_batch_usm(
     let mut d2h = Vec::with_capacity(members.len());
     for (m, r) in members.iter().zip(member_res) {
         match r {
-            Ok(()) => {
-                let (data, ev) = queue.usm_slice_to_host(
-                    usm,
-                    m.buffer_offset,
-                    m.n,
-                    std::slice::from_ref(&last),
-                );
-                payloads.push(Ok(data));
-                d2h.push(ev);
-            }
+            // The readback runs through the D2H fault seam: a tripped
+            // member fails alone (no copy recorded, no event chained)
+            // while the rest of the flush delivers normally.
+            Ok(()) => match queue.usm_slice_to_host_checked(
+                usm,
+                m.buffer_offset,
+                m.n,
+                std::slice::from_ref(&last),
+            ) {
+                Ok((data, ev)) => {
+                    payloads.push(Ok(data));
+                    d2h.push(ev);
+                }
+                Err(e) => payloads.push(Err(e)),
+            },
             Err(e) => payloads.push(Err(e)),
         }
     }

@@ -407,6 +407,41 @@ impl Queue {
         (data, ev)
     }
 
+    /// [`Queue::submit_usm`] behind the submission fault seam: when the
+    /// calling thread runs under a [`crate::fault`] plan and the plan
+    /// trips, the submission is refused with
+    /// [`Error::Injected`](crate::error::Error::Injected) *before*
+    /// anything is recorded — modelling a queue that rejects the command
+    /// group. Costs one thread-local null check when no plan is armed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_usm_checked(
+        &self,
+        name: impl Into<String>,
+        class: CommandClass,
+        cost: CommandCost,
+        deps: &[Event],
+        accesses: Vec<Access>,
+        f: impl FnOnce(&InteropHandle),
+    ) -> crate::error::Result<Event> {
+        crate::fault::trip(crate::fault::FaultSite::Submit)?;
+        Ok(self.submit_usm(name, class, cost, deps, accesses, f))
+    }
+
+    /// [`Queue::usm_slice_to_host`] behind the D2H fault seam: a tripped
+    /// plan fails the copy with
+    /// [`Error::Injected`](crate::error::Error::Injected) before any
+    /// transfer is recorded.
+    pub fn usm_slice_to_host_checked<T: Clone + Default + Send + 'static>(
+        &self,
+        usm: &UsmBuffer<T>,
+        offset: usize,
+        len: usize,
+        deps: &[Event],
+    ) -> crate::error::Result<(Vec<T>, Event)> {
+        crate::fault::trip(crate::fault::FaultSite::D2h)?;
+        Ok(self.usm_slice_to_host(usm, offset, len, deps))
+    }
+
     /// Model host-side work of known duration between submissions.
     pub fn advance_host(&self, ns: u64) {
         self.state.lock().unwrap().host_now_ns += ns;

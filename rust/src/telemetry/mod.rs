@@ -6,9 +6,11 @@
 //! pool workers with relaxed atomics (nothing on the request hot path
 //! takes a lock or allocates), and read through cheap [`snapshot`]
 //! copies that serialize through `jsonlite` (schema
-//! `portarng-telemetry-v3`: per-command-class virtual timings,
-//! worker-arena counters, and per-shard DAG-hazard counters
-//! [`HazardCounters`]; v1/v2 superseded). The
+//! `portarng-telemetry-v4`: per-command-class virtual timings,
+//! worker-arena counters, per-shard DAG-hazard counters
+//! [`HazardCounters`], and the resilience layer's fault / respawn /
+//! retry / shed / deadline counters [`ResilienceTotals`]; v1–v3
+//! superseded). The
 //! [`autotune`](crate::autotune) controller
 //! closes the loop by turning snapshot deltas into
 //! [`DispatchPolicy`](crate::coordinator::DispatchPolicy) retunes.
@@ -21,5 +23,6 @@ mod registry;
 pub use histogram::{HistogramSnapshot, Log2Histogram, BUCKETS};
 pub use registry::{
     ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, HazardCounters, Lane,
-    ShardSnapshot, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot, TELEMETRY_SCHEMA,
+    ResilienceTotals, ShardSnapshot, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot,
+    TELEMETRY_SCHEMA,
 };

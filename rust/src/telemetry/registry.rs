@@ -17,7 +17,12 @@
 //! ([`ArenaCounters`]) to every shard — what the autotuner and the Fig. 4
 //! style breakdown read. v3 adds the per-shard `hazards` block
 //! ([`HazardCounters`]: per-flush DAG hazard-analysis results — see
-//! DESIGN.md S14) and the arena `leaked` counter; v1/v2 are superseded.
+//! DESIGN.md S14) and the arena `leaked` counter. v4 adds the resilience
+//! layer's counters (DESIGN.md S15): per-shard `faults_injected`,
+//! `respawns` and `deadline_exceeded`, plus the pool-level
+//! `requests_retried` / `requests_shed` ingress counters — all zero on a
+//! fault-free run, which is itself a chaos-soak gate. v1/v2/v3 are
+//! superseded.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -31,9 +36,10 @@ use crate::platform::PlatformId;
 use super::histogram::{HistogramSnapshot, Log2Histogram};
 
 /// Telemetry snapshot schema identifier (bump on breaking changes).
-/// v1 (no per-command-class timings, no arena counters) and v2 (no
-/// hazard counters, no arena `leaked`) are superseded.
-pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v3";
+/// v1 (no per-command-class timings, no arena counters), v2 (no hazard
+/// counters, no arena `leaked`) and v3 (no resilience counters) are
+/// superseded.
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v4";
 
 /// Command classes the serving path times. Mirrors
 /// `sycl::CommandClass` for the classes the pool's flushes issue —
@@ -352,6 +358,13 @@ pub struct ShardTelemetry {
     numbers: AtomicU64,
     delivered: AtomicU64,
     failures: AtomicU64,
+    /// Faults the chaos plan injected into this shard so far (absolute
+    /// publish from the plan's own counter, like `arena`).
+    faults_injected: AtomicU64,
+    /// Times the supervisor respawned this shard's worker.
+    respawns: AtomicU64,
+    /// Requests whose deadline budget expired before generation.
+    deadline_exceeded: AtomicU64,
     launch_ns: Log2Histogram,
     batch_fill: Log2Histogram,
     request_n: Log2Histogram,
@@ -380,6 +393,9 @@ impl ShardTelemetry {
             numbers: AtomicU64::new(0),
             delivered: AtomicU64::new(0),
             failures: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
             launch_ns: Log2Histogram::new(),
             batch_fill: Log2Histogram::new(),
             request_n: Log2Histogram::new(),
@@ -416,6 +432,23 @@ impl ShardTelemetry {
     /// One request failed (backend error / degraded shard).
     pub fn record_failure(&self) {
         self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the chaos plan's cumulative injected-fault count for this
+    /// shard (absolute value — the plan owns the counter; the worker and
+    /// the supervisor both push it, so last-writer-wins is correct).
+    pub fn set_faults_injected(&self, n: u64) {
+        self.faults_injected.store(n, Ordering::Relaxed);
+    }
+
+    /// One supervisor respawn of this shard's worker.
+    pub fn record_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request expired before this shard generated its payload.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Fold one executed command's virtual duration into the per-class
@@ -459,6 +492,9 @@ impl ShardTelemetry {
             numbers: self.numbers.load(Ordering::Relaxed),
             delivered: self.delivered.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
             launch_ns: self.launch_ns.snapshot(),
             batch_fill: self.batch_fill.snapshot(),
             request_n: self.request_n.snapshot(),
@@ -481,6 +517,8 @@ pub struct TelemetryRegistry {
     dispatched_batched: AtomicU64,
     dispatched_overflow: AtomicU64,
     retunes: AtomicU64,
+    requests_retried: AtomicU64,
+    requests_shed: AtomicU64,
     started: Instant,
 }
 
@@ -498,6 +536,8 @@ impl TelemetryRegistry {
             dispatched_batched: AtomicU64::new(0),
             dispatched_overflow: AtomicU64::new(0),
             retunes: AtomicU64::new(0),
+            requests_retried: AtomicU64::new(0),
+            requests_shed: AtomicU64::new(0),
             started: Instant::now(),
         })
     }
@@ -526,6 +566,16 @@ impl TelemetryRegistry {
         self.retunes.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one transient-fault retry re-dispatched by the supervisor.
+    pub fn record_retry(&self) {
+        self.requests_retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request shed at the ingress gate (depth bound hit).
+    pub fn record_shed(&self) {
+        self.requests_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Copy everything into a plain snapshot.
     pub fn snapshot(&self) -> TelemetrySnapshot {
         TelemetrySnapshot {
@@ -534,6 +584,8 @@ impl TelemetryRegistry {
             dispatched_batched: self.dispatched_batched.load(Ordering::Relaxed),
             dispatched_overflow: self.dispatched_overflow.load(Ordering::Relaxed),
             retunes: self.retunes.load(Ordering::Relaxed),
+            requests_retried: self.requests_retried.load(Ordering::Relaxed),
+            requests_shed: self.requests_shed.load(Ordering::Relaxed),
             shards: self.shards.iter().map(|s| s.snapshot()).collect(),
         }
     }
@@ -558,6 +610,12 @@ pub struct ShardSnapshot {
     pub delivered: u64,
     /// Failed requests.
     pub failures: u64,
+    /// Faults the chaos plan injected into this shard (0 without a plan).
+    pub faults_injected: u64,
+    /// Supervisor respawns of this shard's worker.
+    pub respawns: u64,
+    /// Requests expired before generation (deadline budget).
+    pub deadline_exceeded: u64,
     /// Real wall time per launch, ns.
     pub launch_ns: HistogramSnapshot,
     /// Requests per closed batch (batch occupancy).
@@ -589,6 +647,12 @@ impl ShardSnapshot {
         m.insert("numbers".into(), Value::Number(self.numbers as f64));
         m.insert("delivered".into(), Value::Number(self.delivered as f64));
         m.insert("failures".into(), Value::Number(self.failures as f64));
+        m.insert("faults_injected".into(), Value::Number(self.faults_injected as f64));
+        m.insert("respawns".into(), Value::Number(self.respawns as f64));
+        m.insert(
+            "deadline_exceeded".into(),
+            Value::Number(self.deadline_exceeded as f64),
+        );
         m.insert("launch_ns".into(), self.launch_ns.to_json());
         m.insert("batch_fill".into(), self.batch_fill.to_json());
         m.insert("request_n".into(), self.request_n.to_json());
@@ -642,6 +706,9 @@ impl ShardSnapshot {
             numbers: num("numbers")?,
             delivered: num("delivered")?,
             failures: num("failures")?,
+            faults_injected: num("faults_injected")?,
+            respawns: num("respawns")?,
+            deadline_exceeded: num("deadline_exceeded")?,
             launch_ns: hist("launch_ns")?,
             batch_fill: hist("batch_fill")?,
             request_n: hist("request_n")?,
@@ -688,8 +755,41 @@ pub struct TelemetrySnapshot {
     pub dispatched_overflow: u64,
     /// Policy retunes applied.
     pub retunes: u64,
+    /// Transient-fault retries re-dispatched by the supervisor.
+    pub requests_retried: u64,
+    /// Requests shed at the ingress gate (depth bound hit).
+    pub requests_shed: u64,
     /// Per-shard telemetry, dispatch order.
     pub shards: Vec<ShardSnapshot>,
+}
+
+/// Resilience-layer counters aggregated across the pool (see
+/// [`TelemetrySnapshot::resilience_totals`]) — the chaos soak's gate
+/// surface: all five are zero on a fault-free run and the first three are
+/// nonzero under an armed plan with kills.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceTotals {
+    /// Faults injected across all shards (`faults.injected`).
+    pub faults_injected: u64,
+    /// Worker respawns across all shards (`shard.respawns`).
+    pub shard_respawns: u64,
+    /// Supervisor retry re-dispatches (`requests.retried`).
+    pub requests_retried: u64,
+    /// Ingress sheds (`requests.shed`).
+    pub requests_shed: u64,
+    /// Deadline expiries across all shards (`requests.deadline_exceeded`).
+    pub deadline_exceeded: u64,
+}
+
+impl ResilienceTotals {
+    /// True when any resilience machinery fired at all.
+    pub fn any(&self) -> bool {
+        self.faults_injected != 0
+            || self.shard_respawns != 0
+            || self.requests_retried != 0
+            || self.requests_shed != 0
+            || self.deadline_exceeded != 0
+    }
 }
 
 impl TelemetrySnapshot {
@@ -750,6 +850,19 @@ impl TelemetrySnapshot {
             .fold(ArenaCounters::default(), ArenaCounters::merged)
     }
 
+    /// Resilience counters summed across shards plus the pool-level
+    /// ingress counters — all-zero on a fault-free run (itself a gate:
+    /// the fault layer must be inert when no plan is configured).
+    pub fn resilience_totals(&self) -> ResilienceTotals {
+        ResilienceTotals {
+            faults_injected: self.shards.iter().map(|s| s.faults_injected).sum(),
+            shard_respawns: self.shards.iter().map(|s| s.respawns).sum(),
+            requests_retried: self.requests_retried,
+            requests_shed: self.requests_shed,
+            deadline_exceeded: self.shards.iter().map(|s| s.deadline_exceeded).sum(),
+        }
+    }
+
     /// Hazard-analysis results summed across shards — on a healthy pool
     /// `total()` is zero and `windows` equals [`Self::total_launches`].
     pub fn hazard_totals(&self) -> HazardCounters {
@@ -759,7 +872,7 @@ impl TelemetrySnapshot {
             .fold(HazardCounters::default(), HazardCounters::merged)
     }
 
-    /// Serialize (schema `portarng-telemetry-v3`).
+    /// Serialize (schema `portarng-telemetry-v4`).
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
@@ -774,6 +887,11 @@ impl TelemetrySnapshot {
             Value::Number(self.dispatched_overflow as f64),
         );
         m.insert("retunes".into(), Value::Number(self.retunes as f64));
+        m.insert(
+            "requests_retried".into(),
+            Value::Number(self.requests_retried as f64),
+        );
+        m.insert("requests_shed".into(), Value::Number(self.requests_shed as f64));
         m.insert(
             "shards".into(),
             Value::Array(self.shards.iter().map(ShardSnapshot::to_json).collect()),
@@ -816,6 +934,8 @@ impl TelemetrySnapshot {
             dispatched_batched: num("dispatched_batched")?,
             dispatched_overflow: num("dispatched_overflow")?,
             retunes: num("retunes")?,
+            requests_retried: num("requests_retried")?,
+            requests_shed: num("requests_shed")?,
             shards,
         })
     }
@@ -854,10 +974,16 @@ mod tests {
         s1.record_launch(1, 5000, 5000, 90_000);
         s1.record_failure();
         s1.record_command(CommandKind::Generate, 9_000);
+        s1.set_faults_injected(3);
+        s1.record_respawn();
+        s1.record_deadline_exceeded();
         reg.record_dispatch(false);
         reg.record_dispatch(false);
         reg.record_dispatch(true);
         reg.record_retune();
+        reg.record_retry();
+        reg.record_retry();
+        reg.record_shed();
         reg
     }
 
@@ -894,6 +1020,35 @@ mod tests {
         // Shard 1 never published arena counters: all-zero, rate 0.
         assert_eq!(snap.shards[1].arena, ArenaCounters::default());
         assert_eq!(snap.shards[1].arena.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn resilience_counters_aggregate_and_stay_zero_untouched() {
+        let snap = sample_registry().snapshot();
+        // Shard 0 never saw resilience traffic: all-zero (the fault-free
+        // invariant every untouched shard must keep).
+        assert_eq!(snap.shards[0].faults_injected, 0);
+        assert_eq!(snap.shards[0].respawns, 0);
+        assert_eq!(snap.shards[0].deadline_exceeded, 0);
+        let r = snap.resilience_totals();
+        assert_eq!(
+            r,
+            ResilienceTotals {
+                faults_injected: 3,
+                shard_respawns: 1,
+                requests_retried: 2,
+                requests_shed: 1,
+                deadline_exceeded: 1,
+            }
+        );
+        assert!(r.any());
+        // A virgin registry reports all-zero totals.
+        let clean = TelemetryRegistry::new(PlatformId::A100, &[Lane::Batched]).snapshot();
+        assert!(!clean.resilience_totals().any());
+        // set_faults_injected is an absolute publish, not cumulative.
+        let reg = sample_registry();
+        reg.shard(1).set_faults_injected(7);
+        assert_eq!(reg.snapshot().resilience_totals().faults_injected, 7);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Resilience integration: deterministic chaos plans against the public
+//! pool API — bit-identical recovery across respawns and retries, typed
+//! errors on exhaustion, and an inert fault layer when unconfigured.
+//!
+//! Every reply here is drained with a timeout: the resilience layer's
+//! contract is "exact payload or typed error, never a hang", so a stuck
+//! receiver is itself a failure, not an excuse to wait.
+
+use std::time::Duration;
+
+use portarng::coordinator::{DispatchPolicy, PoolConfig, ServicePool};
+use portarng::error::Error;
+use portarng::fault::FaultSpec;
+use portarng::platform::PlatformId;
+use portarng::rng::{Engine, PhiloxEngine};
+use portarng::testkit;
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Pool under a chaos plan; retry budget sized so a ~5% transient rate
+/// cannot plausibly exhaust it (each retry redraws an independent
+/// decision index).
+fn chaos_pool(seed: u64, shards: usize, spec: &FaultSpec) -> ServicePool {
+    let mut cfg = PoolConfig::new(PlatformId::A100, seed, shards);
+    cfg.fault = Some(spec.clone());
+    cfg.ingress.max_retries = 12;
+    ServicePool::spawn(cfg)
+}
+
+#[test]
+fn prop_chaos_recovery_is_bit_identical_across_shard_counts() {
+    // The tentpole invariant: under transient faults AND forced worker
+    // kills, every completed reply equals the fault-free stream — for
+    // shard counts {1, 2, 4}, arbitrary request sizes, and arbitrary
+    // plan seeds. Offsets are assigned before routing, so the dedicated
+    // engine skipped to the request's global offset is the oracle.
+    testkit::forall("chaos-recovery-exact", 6, |g| {
+        let pool_seed = g.u64();
+        let plan_seed = g.range(1, 1 << 20);
+        let n_req = g.usize_in(6, 16);
+        let sizes: Vec<usize> = (0..n_req).map(|_| g.usize_in(1, 600)).collect();
+        for shards in [1usize, 2, 4] {
+            // Kill shard 0 early in every topology; with >= 2 batched
+            // shards schedule a second kill so respawn handling is
+            // exercised concurrently with live shards.
+            let kills =
+                if shards >= 2 { "kill=0@2+1@4".to_string() } else { "kill=0@2".to_string() };
+            let spec = FaultSpec::parse(&format!(
+                "seed={plan_seed},rate=0.05,sites=generate+submit+d2h,{kills}"
+            ))
+            .map_err(|e| e.to_string())?;
+            let mut cfg = PoolConfig::new(PlatformId::A100, pool_seed, shards);
+            cfg.fault = Some(spec.clone());
+            cfg.ingress.max_retries = 12;
+            // Pin routing so every request stays on the batched lane: the
+            // kill schedule targets batched shards, which must therefore
+            // see real message traffic in every topology.
+            cfg.policy = DispatchPolicy::fixed(800);
+            let pool = ServicePool::spawn(cfg);
+            let rxs: Vec<_> = sizes.iter().map(|&n| pool.generate(n, (0.0, 1.0))).collect();
+            pool.flush();
+            let mut offset = 0u64;
+            for (rx, &n) in rxs.iter().zip(&sizes) {
+                let got = rx
+                    .recv_timeout(RECV_TIMEOUT)
+                    .map_err(|_| format!("caller hung ({shards} shards, n={n})"))?
+                    .map_err(|e| format!("typed error under light chaos: {e}"))?;
+                let mut engine = PhiloxEngine::new(pool_seed);
+                engine.skip_ahead(offset);
+                let mut want = vec![0f32; n];
+                engine.fill_uniform_f32(&mut want);
+                if got != want {
+                    return Err(format!(
+                        "reply diverged at offset {offset} ({shards} shards, n={n})"
+                    ));
+                }
+                offset += n as u64;
+            }
+            let stats = pool.shutdown().map_err(|e| e.to_string())?;
+            if stats.lost_shards != 0 {
+                return Err(format!(
+                    "{} shard(s) still dead at shutdown despite supervision",
+                    stats.lost_shards
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exhausted_retries_surface_a_typed_injected_error() {
+    // rate=1.0 on the generate seam: every attempt fails, so after the
+    // retry budget every caller must hold Err(Injected) — promptly, not
+    // after a hang, and the pool must still shut down cleanly.
+    let spec = FaultSpec::parse("seed=3,rate=1.0,sites=generate").unwrap();
+    let mut cfg = PoolConfig::new(PlatformId::A100, 0xDEAD, 2);
+    cfg.fault = Some(spec);
+    cfg.ingress.max_retries = 2;
+    let pool = ServicePool::spawn(cfg);
+    let rxs: Vec<_> = (0..6).map(|i| pool.generate(64 + 8 * i, (0.0, 1.0))).collect();
+    pool.flush();
+    for rx in rxs {
+        let reply = rx.recv_timeout(RECV_TIMEOUT).expect("caller hung on a permanent fault");
+        match reply {
+            Err(Error::Injected { site }) => assert_eq!(site, "generate"),
+            other => panic!("want Err(Injected) after retry exhaustion, got {other:?}"),
+        }
+    }
+    let snap = pool.telemetry().snapshot();
+    let res = snap.resilience_totals();
+    assert!(res.faults_injected > 0, "permanent plan injected nothing");
+    assert!(res.requests_retried > 0, "exhaustion path must pass through the retry loop");
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn zero_rate_plan_with_no_kills_is_inert() {
+    // A configured-but-empty plan must not perturb output or counters:
+    // the fault layer's presence alone is free.
+    let spec = FaultSpec::parse("seed=1,rate=0.0").unwrap();
+    let clean = PoolConfig::new(PlatformId::A100, 0xBEEF, 2);
+    let pool_clean = ServicePool::spawn(clean);
+    let pool_chaos = chaos_pool(0xBEEF, 2, &spec);
+    let drain = |pool: &ServicePool| -> Vec<Vec<f32>> {
+        let rxs: Vec<_> = (0..8).map(|i| pool.generate(100 + 10 * i, (0.0, 1.0))).collect();
+        pool.flush();
+        rxs.into_iter()
+            .map(|rx| rx.recv_timeout(RECV_TIMEOUT).unwrap().unwrap())
+            .collect()
+    };
+    let a = drain(&pool_clean);
+    let b = drain(&pool_chaos);
+    assert_eq!(a, b, "an all-zero plan changed the output stream");
+    let res = pool_chaos.telemetry().snapshot().resilience_totals();
+    assert!(!res.any(), "an all-zero plan moved resilience counters: {res:?}");
+    pool_clean.shutdown().unwrap();
+    pool_chaos.shutdown().unwrap();
+}
