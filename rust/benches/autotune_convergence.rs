@@ -45,7 +45,13 @@ fn converge(platform: PlatformId, wl: &ProbeWorkload, start: TuningParams) -> (T
 fn main() {
     let platform = PlatformId::A100;
     let wl = ProbeWorkload::serving_mix(0xBE9C4, 192);
-    let defaults = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+    let defaults = TuningParams {
+        threshold: usize::MAX,
+        flush_requests: 16,
+        max_batch: 1 << 20,
+        tile_size: 0,
+        team_width: 1,
+    };
     let (oracle_t, oracle_tput) = best_fixed_threshold(platform, SHARDS, &defaults, &wl);
     println!(
         "oracle: best fixed threshold {} -> {:.1} M numbers/s (virtual)",

@@ -2,8 +2,9 @@
 //!
 //! [`AutoTuner`] is measurement-agnostic: feed it one delivered-throughput
 //! observation per window ([`AutoTuner::observe`]) and it answers with the
-//! knobs to try next — threshold and flush size move by factors of two,
-//! one knob at a time, continuing while a direction keeps improving and
+//! knobs to try next — threshold, flush size, and (when the tile executor
+//! is enabled) tile size and team width move by factors of two, one knob
+//! at a time, continuing while a direction keeps improving and
 //! flipping/switching when it stops. Plateaus (flat regions around a
 //! disabled-like threshold) are walked through up to a budget instead of
 //! being mistaken for optima; clamped candidates count as rejections so
@@ -27,9 +28,19 @@ pub const MAX_THRESHOLD: usize = 1 << 28;
 /// Upper bound for the flush-requests knob.
 pub const MAX_FLUSH: usize = 256;
 
+/// Lower bound for the executor tile-size knob: below this the per-tile
+/// submission overhead swamps the kernel itself.
+pub const MIN_TILE: usize = 1024;
+
+/// Upper bound for the executor tile-size knob.
+pub const MAX_TILE: usize = 1 << 22;
+
+/// Upper bound for the executor team-width knob.
+pub const MAX_TEAM: usize = 16;
+
 /// Consecutive rejected candidates before the tuner holds its best point
-/// (covers both directions of both knobs).
-const STALL_LIMIT: u32 = 4;
+/// (covers both directions of all four knobs).
+const STALL_LIMIT: u32 = 8;
 
 /// Plateau moves tolerated before the walk is abandoned as flat.
 const PLATEAU_LIMIT: u32 = 16;
@@ -42,13 +53,17 @@ const DRIFT: f64 = 0.3;
 enum Knob {
     Threshold,
     Flush,
+    TileSize,
+    TeamWidth,
 }
 
 impl Knob {
     fn next(self) -> Knob {
         match self {
             Knob::Threshold => Knob::Flush,
-            Knob::Flush => Knob::Threshold,
+            Knob::Flush => Knob::TileSize,
+            Knob::TileSize => Knob::TeamWidth,
+            Knob::TeamWidth => Knob::Threshold,
         }
     }
 }
@@ -67,6 +82,24 @@ fn step(p: TuningParams, knob: Knob, up: bool) -> TuningParams {
         Knob::Flush => {
             let base = p.flush_requests.min(MAX_FLUSH).max(1);
             c.flush_requests = if up { (base * 2).min(MAX_FLUSH) } else { (base / 2).max(1) };
+        }
+        // The serial/tiled decision belongs to the operator (pool config,
+        // profile, or PORTARNG_TILE); the tuner only refines an executor
+        // that is already on. With `tile_size == 0` both executor knobs
+        // are immovable, which `propose` treats as instant rejections —
+        // a serial pool pays no extra observation windows for them.
+        Knob::TileSize => {
+            if p.tile_size > 0 {
+                let base = p.tile_size.clamp(MIN_TILE, MAX_TILE);
+                c.tile_size =
+                    if up { (base * 2).min(MAX_TILE) } else { (base / 2).max(MIN_TILE) };
+            }
+        }
+        Knob::TeamWidth => {
+            if p.tile_size > 0 {
+                let base = p.team_width.clamp(1, MAX_TEAM);
+                c.team_width = if up { (base * 2).min(MAX_TEAM) } else { (base / 2).max(1) };
+            }
         }
     }
     c
@@ -145,8 +178,8 @@ impl AutoTuner {
 
     fn propose(&mut self) -> TuningParams {
         // A clamped candidate that cannot move counts as a rejection; at
-        // most all four (knob, direction) pairs can be exhausted here.
-        for _ in 0..4 {
+        // most all eight (knob, direction) pairs can be exhausted here.
+        for _ in 0..8 {
             if self.converged() {
                 break;
             }
@@ -261,7 +294,13 @@ mod tests {
     use super::*;
 
     fn p(threshold: usize, flush: usize) -> TuningParams {
-        TuningParams { threshold, flush_requests: flush, max_batch: 1 << 20 }
+        TuningParams {
+            threshold,
+            flush_requests: flush,
+            max_batch: 1 << 20,
+            tile_size: 0,
+            team_width: 1,
+        }
     }
 
     /// Smooth unimodal objective peaking at threshold 2^12, flat in flush.
@@ -325,6 +364,43 @@ mod tests {
         // ...a real regression does.
         tuner.observe(objective(&params) * 0.5);
         assert!(!tuner.converged());
+    }
+
+    #[test]
+    fn serial_pools_never_get_tiling_turned_on() {
+        // tile_size == 0 means the operator chose a serial flush; the
+        // tuner must refine around that, never enable the executor.
+        let mut tuner = AutoTuner::new(p(1 << 20, 16));
+        let mut params = tuner.params();
+        for _ in 0..60 {
+            params = tuner.observe(objective(&params));
+            assert_eq!(params.tile_size, 0);
+            assert_eq!(params.team_width, 1);
+        }
+        assert!(tuner.converged());
+        assert_eq!(tuner.best().0.threshold, 1 << 12);
+    }
+
+    #[test]
+    fn refines_executor_knobs_when_tiling_is_enabled() {
+        // Objective peaking at tile 2^17 / team 8, flat in the batcher
+        // knobs: the tuner should walk both executor knobs to the peak.
+        let mut tuner = AutoTuner::new(p(1 << 12, 16).tiled(1 << 14, 2));
+        let mut params = tuner.params();
+        let obj = |q: &TuningParams| {
+            let lt = (q.tile_size.max(1) as f64).log2();
+            let lw = (q.team_width.max(1) as f64).log2();
+            1e6 / (1.0 + (lt - 17.0).abs() + (lw - 3.0).abs())
+        };
+        for _ in 0..120 {
+            params = tuner.observe(obj(&params));
+        }
+        assert!(tuner.converged(), "params={params:?}");
+        assert_eq!(tuner.best().0.tile_size, 1 << 17);
+        assert_eq!(tuner.best().0.team_width, 8);
+        // Refinement stays within the executor envelope.
+        assert!(tuner.best().0.tile_size >= MIN_TILE);
+        assert!(tuner.best().0.team_width <= MAX_TEAM);
     }
 
     #[test]

@@ -29,7 +29,9 @@ mod controller;
 mod probe;
 mod profile;
 
-pub use controller::{AutoTuner, PoolAutoTuner, MAX_FLUSH, MAX_THRESHOLD};
+pub use controller::{
+    AutoTuner, PoolAutoTuner, MAX_FLUSH, MAX_TEAM, MAX_THRESHOLD, MAX_TILE, MIN_TILE,
+};
 pub use probe::{
     best_fixed_threshold, calibrate, virtual_pool_throughput, ProbeWorkload, FLUSH_GRID,
     THRESHOLD_GRID,

@@ -157,7 +157,13 @@ pub fn best_fixed_threshold(
 /// skips this entirely.
 pub fn calibrate(platform: PlatformId, shards: usize) -> CalibrationProfile {
     let wl = ProbeWorkload::serving_mix(0xCA11_B007, 192);
-    let base = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+    let base = TuningParams {
+        threshold: usize::MAX,
+        flush_requests: 16,
+        max_batch: 1 << 20,
+        tile_size: 0,
+        team_width: 1,
+    };
     let (threshold, _) = best_fixed_threshold(platform, shards, &base, &wl);
     let mut best = (base.flush_requests, 0.0f64);
     for f in FLUSH_GRID.map(|e| 1usize << e) {
@@ -196,7 +202,13 @@ mod tests {
         let wl = ProbeWorkload::serving_mix(1, 128);
         // 2^20 splits the mix so both lanes carry real volume — the regime
         // where splitting beats either endpoint decisively.
-        let base = TuningParams { threshold: 1 << 20, flush_requests: 16, max_batch: 1 << 20 };
+        let base = TuningParams {
+            threshold: 1 << 20,
+            flush_requests: 16,
+            max_batch: 1 << 20,
+            tile_size: 0,
+            team_width: 1,
+        };
         let mid = virtual_pool_throughput(PlatformId::A100, 4, &base, &wl);
         assert!(mid > 0.0);
         // All-overflow (threshold ~0) and no-overflow (disabled) are both
@@ -212,7 +224,13 @@ mod tests {
     #[test]
     fn cpu_platforms_never_use_a_device_lane() {
         let wl = ProbeWorkload::serving_mix(2, 64);
-        let base = TuningParams { threshold: 1, flush_requests: 8, max_batch: 1 << 20 };
+        let base = TuningParams {
+            threshold: 1,
+            flush_requests: 8,
+            max_batch: 1 << 20,
+            tile_size: 0,
+            team_width: 1,
+        };
         // threshold=1 would overflow everything — but a CPU platform has
         // no device lane, so the policy is inert.
         let t = virtual_pool_throughput(PlatformId::Rome7742, 2, &base, &wl);
@@ -252,7 +270,13 @@ mod tests {
     #[test]
     fn best_fixed_threshold_beats_endpoints() {
         let wl = ProbeWorkload::serving_mix(3, 128);
-        let base = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+        let base = TuningParams {
+            threshold: usize::MAX,
+            flush_requests: 16,
+            max_batch: 1 << 20,
+            tile_size: 0,
+            team_width: 1,
+        };
         let (t, tput) = best_fixed_threshold(PlatformId::A100, 4, &base, &wl);
         let lo = virtual_pool_throughput(
             PlatformId::A100,

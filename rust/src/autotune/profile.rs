@@ -48,6 +48,8 @@ impl CalibrationProfile {
             Value::Number(self.params.flush_requests as f64),
         );
         m.insert("max_batch".into(), Value::Number(self.params.max_batch as f64));
+        m.insert("tile_size".into(), Value::Number(self.params.tile_size as f64));
+        m.insert("team_width".into(), Value::Number(self.params.team_width as f64));
         m.insert("mnum_per_s".into(), Value::Number(self.mnum_per_s));
         m.insert("source".into(), Value::String(self.source.clone()));
         Value::Object(m)
@@ -60,6 +62,12 @@ impl CalibrationProfile {
                 .and_then(Value::as_f64)
                 .ok_or_else(|| Error::Json(format!("profile missing `{key}`")))
         };
+        // Executor knobs arrived after v1 profiles were in the wild: read
+        // them optionally, defaulting to the serial flush shape, so a
+        // stored pre-tiling document still warm-starts.
+        let opt = |key: &str, default: usize| -> usize {
+            v.get(key).and_then(Value::as_f64).map(|x| x as usize).unwrap_or(default)
+        };
         Ok(CalibrationProfile {
             platform,
             shards: (num("shards")? as usize).max(1),
@@ -67,6 +75,8 @@ impl CalibrationProfile {
                 threshold: num("threshold")? as usize,
                 flush_requests: (num("flush_requests")? as usize).max(1),
                 max_batch: (num("max_batch")? as usize).max(1),
+                tile_size: opt("tile_size", 0),
+                team_width: opt("team_width", 1).max(1),
             },
             mnum_per_s: num("mnum_per_s")?,
             source: v
@@ -173,7 +183,13 @@ mod tests {
         CalibrationProfile {
             platform: PlatformId::A100,
             shards: 4,
-            params: TuningParams { threshold: 262_144, flush_requests: 32, max_batch: 1 << 20 },
+            params: TuningParams {
+                threshold: 262_144,
+                flush_requests: 32,
+                max_batch: 1 << 20,
+                tile_size: 1 << 17,
+                team_width: 4,
+            },
             mnum_per_s: 1234.5,
             source: "probe".into(),
         }
@@ -214,6 +230,23 @@ mod tests {
         let back = ProfileStore::load(&path).unwrap();
         assert_eq!(back, store);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_tiling_documents_parse_with_serial_executor_defaults() {
+        // The checked-in example profile predates the executor knobs;
+        // documents without them must still warm-start (serial flush).
+        let doc = format!(
+            r#"{{"schema":"{PROFILE_SCHEMA}","profiles":{{"a100":{{"shards":4,"threshold":1024,"flush_requests":8,"max_batch":65536,"mnum_per_s":9.5,"source":"probe"}}}}}}"#
+        );
+        let store = ProfileStore::from_json(&Value::parse(&doc).unwrap()).unwrap();
+        let p = store.get(PlatformId::A100).unwrap();
+        assert_eq!(p.params.tile_size, 0);
+        assert_eq!(p.params.team_width, 1);
+        // And the knobs round-trip once written back.
+        let text = store.to_json().to_json();
+        let back = ProfileStore::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(&back, &store);
     }
 
     #[test]

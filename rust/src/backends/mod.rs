@@ -36,7 +36,7 @@ pub use vendor::VendorGeneratorImpl;
 
 use crate::error::Result;
 use crate::platform::PlatformId;
-use crate::rng::engines::EngineKind;
+use crate::rng::engines::{Engine, EngineKind};
 use crate::rng::Distribution;
 
 /// A live generator handle, mirroring `curandGenerator_t` lifecycle.
@@ -65,6 +65,15 @@ pub trait VendorGenerator {
     /// raw bits for `Bits`. Range/mean/std application is the oneMKL
     /// layer's transform kernel, NOT the vendor's job (paper §4.1).
     fn generate_canonical(&mut self, distr: &Distribution, out: &mut [f32]) -> Result<()>;
+
+    /// Fork an independent copy of the underlying engine positioned at
+    /// absolute raw-draw offset `offset` — the tiled executor's source of
+    /// per-tile sub-streams ([`crate::rng::generate_batch_usm_tiled`]).
+    /// `None` when the engine cannot seek absolutely in place (the caller
+    /// falls back to the serial flush path) or the handle is destroyed.
+    fn fork_engine_at(&self, _offset: u64) -> Option<Box<dyn Engine>> {
+        None
+    }
 
     /// `curandDestroyGenerator`. Further use errors.
     fn destroy(&mut self) -> Result<()>;

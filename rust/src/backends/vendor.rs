@@ -17,6 +17,10 @@ pub struct VendorGeneratorImpl {
     /// exponential/poisson natively).
     full_api: bool,
     destroyed: bool,
+    /// Reusable uniform scratch for the gaussian/lognormal paths: sized on
+    /// first use, amortized to zero allocations on the steady-state
+    /// serving path (a flush used to heap-allocate per member here).
+    scratch: Vec<f32>,
 }
 
 impl VendorGeneratorImpl {
@@ -28,6 +32,7 @@ impl VendorGeneratorImpl {
             seed,
             full_api,
             destroyed: false,
+            scratch: Vec::new(),
         }
     }
 
@@ -61,9 +66,15 @@ impl VendorGenerator for VendorGeneratorImpl {
 
     fn set_offset(&mut self, offset: u64) -> Result<()> {
         self.check_live()?;
-        // Offset is absolute: reset then skip.
-        self.engine = self.engine.kind().create(self.seed);
-        self.engine.skip_ahead(offset);
+        // Offset is absolute. Seek-capable engines reposition in place
+        // (O(1) Philox, O(log n) MRG32k3a) — the batched serving path
+        // calls this once per member per flush, and recreating the engine
+        // box every time was a measurable per-member allocation. Engines
+        // without an absolute seek fall back to recreate + skip.
+        if !self.engine.try_seek(offset) {
+            self.engine = self.engine.kind().create(self.seed);
+            self.engine.skip_ahead(offset);
+        }
         Ok(())
     }
 
@@ -90,11 +101,16 @@ impl VendorGenerator for VendorGeneratorImpl {
                     ));
                 }
                 // Canonical N(0,1): mean/std/exp applied by the oneMKL
-                // transform kernel.
+                // transform kernel. The uniform draws land in the
+                // handle-owned scratch (grown monotonically, reused across
+                // calls) instead of a fresh per-call allocation.
                 let n = out.len();
                 let n_u = n + (n & 1);
-                let mut u = vec![0f32; n_u];
-                self.engine.fill_uniform_f32(&mut u);
+                if self.scratch.len() < n_u {
+                    self.scratch.resize(n_u, 0.0);
+                }
+                let u = &mut self.scratch[..n_u];
+                self.engine.fill_uniform_f32(u);
                 match method {
                     GaussianMethod::BoxMuller => {
                         for i in (0..n).step_by(2) {
@@ -114,10 +130,17 @@ impl VendorGenerator for VendorGeneratorImpl {
                 Ok(())
             }
             Distribution::Bits => {
-                let mut raw = vec![0u32; out.len()];
-                self.engine.fill_u32(&mut raw);
-                for (dst, &src) in out.iter_mut().zip(raw.iter()) {
-                    *dst = f32::from_bits(src);
+                // Each f32 lane is just 32 bits of storage: draw through a
+                // cache-resident stack chunk and round-trip the bits with
+                // `from_bits` — no heap scratch sized to the request.
+                const CHUNK: usize = 4096;
+                let mut raw = [0u32; CHUNK];
+                for block in out.chunks_mut(CHUNK) {
+                    let r = &mut raw[..block.len()];
+                    self.engine.fill_u32(r);
+                    for (dst, &src) in block.iter_mut().zip(r.iter()) {
+                        *dst = f32::from_bits(src);
+                    }
                 }
                 Ok(())
             }
@@ -136,6 +159,14 @@ impl VendorGenerator for VendorGeneratorImpl {
                 format!("{} generation (vendor API has no such entry point)", other.name()),
             )),
         }
+    }
+
+    fn fork_engine_at(&self, offset: u64) -> Option<Box<dyn Engine>> {
+        if self.destroyed {
+            return None;
+        }
+        let mut e = self.engine.clone_box();
+        e.try_seek(offset).then_some(e)
     }
 
     fn destroy(&mut self) -> Result<()> {

@@ -65,8 +65,9 @@ impl DispatchPolicy {
     }
 }
 
-/// Atomically swappable tuning parameters: the dispatch threshold plus the
-/// batcher's flush limits, i.e. every knob the autotuner turns.
+/// Atomically swappable tuning parameters: the dispatch threshold, the
+/// batcher's flush limits, and the flush executor's tiling shape — i.e.
+/// every knob the autotuner turns.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TuningParams {
     /// Requests with `n >= threshold` take the overflow lane
@@ -76,16 +77,32 @@ pub struct TuningParams {
     pub flush_requests: usize,
     /// Batcher: close a batch at this many queued items.
     pub max_batch: usize,
+    /// Executor: elements per tile of a tiled flush; `0` keeps the flush
+    /// serial (the default single-submission shape).
+    pub tile_size: usize,
+    /// Executor: team threads running tiles; `1` keeps the flush serial.
+    pub team_width: usize,
 }
 
 impl TuningParams {
-    /// Parameters carrying a fixed policy with the given batcher limits.
+    /// Parameters carrying a fixed policy with the given batcher limits
+    /// (serial executor — tiling is opted into via [`TuningParams::tiled`]
+    /// or a retune).
     pub fn new(policy: DispatchPolicy, flush_requests: usize, max_batch: usize) -> Self {
         TuningParams {
             threshold: policy.threshold,
             flush_requests: flush_requests.max(1),
             max_batch: max_batch.max(1),
+            tile_size: 0,
+            team_width: 1,
         }
+    }
+
+    /// The same parameters with the executor's tiling shape set.
+    pub fn tiled(mut self, tile_size: usize, team_width: usize) -> Self {
+        self.tile_size = tile_size;
+        self.team_width = team_width.max(1);
+        self
     }
 
     /// The dispatch policy these parameters encode.
@@ -108,6 +125,8 @@ pub struct TuningHandle {
     threshold: AtomicUsize,
     flush_requests: AtomicUsize,
     max_batch: AtomicUsize,
+    tile_size: AtomicUsize,
+    team_width: AtomicUsize,
     generation: AtomicU64,
 }
 
@@ -118,6 +137,8 @@ impl TuningHandle {
             threshold: AtomicUsize::new(params.threshold),
             flush_requests: AtomicUsize::new(params.flush_requests.max(1)),
             max_batch: AtomicUsize::new(params.max_batch.max(1)),
+            tile_size: AtomicUsize::new(params.tile_size),
+            team_width: AtomicUsize::new(params.team_width.max(1)),
             generation: AtomicU64::new(0),
         }
     }
@@ -137,12 +158,24 @@ impl TuningHandle {
         self.max_batch.load(Ordering::Relaxed).max(1)
     }
 
+    /// Current executor tile size (`0` = serial flush).
+    pub fn tile_size(&self) -> usize {
+        self.tile_size.load(Ordering::Relaxed)
+    }
+
+    /// Current executor team width (`1` = serial flush).
+    pub fn team_width(&self) -> usize {
+        self.team_width.load(Ordering::Relaxed).max(1)
+    }
+
     /// All current knobs.
     pub fn params(&self) -> TuningParams {
         TuningParams {
             threshold: self.threshold.load(Ordering::Relaxed),
             flush_requests: self.flush_requests(),
             max_batch: self.max_batch(),
+            tile_size: self.tile_size(),
+            team_width: self.team_width(),
         }
     }
 
@@ -151,6 +184,8 @@ impl TuningHandle {
         self.threshold.store(params.threshold, Ordering::Relaxed);
         self.flush_requests.store(params.flush_requests.max(1), Ordering::Relaxed);
         self.max_batch.store(params.max_batch.max(1), Ordering::Relaxed);
+        self.tile_size.store(params.tile_size, Ordering::Relaxed);
+        self.team_width.store(params.team_width.max(1), Ordering::Relaxed);
         self.generation.fetch_add(1, Ordering::Relaxed) + 1
     }
 
@@ -268,16 +303,29 @@ mod tests {
         assert_eq!(h.policy().threshold, 1000);
         assert_eq!(h.flush_requests(), 16);
         assert_eq!(h.generation(), 0);
-        let g = h.retune(TuningParams { threshold: 5000, flush_requests: 8, max_batch: 1 << 16 });
+        let g = h.retune(
+            TuningParams::new(DispatchPolicy::fixed(5000), 8, 1 << 16).tiled(1 << 16, 4),
+        );
         assert_eq!(g, 1);
         assert_eq!(h.policy().threshold, 5000);
         assert_eq!(h.flush_requests(), 8);
         assert_eq!(h.max_batch(), 1 << 16);
+        assert_eq!(h.tile_size(), 1 << 16);
+        assert_eq!(h.team_width(), 4);
         assert_eq!(h.params().policy().route(5000), Route::Overflow);
-        // Degenerate limits are clamped, never zero.
-        h.retune(TuningParams { threshold: 0, flush_requests: 0, max_batch: 0 });
+        // Degenerate limits are clamped, never zero (tile_size 0 is the
+        // legitimate "serial" setting and passes through).
+        h.retune(TuningParams {
+            threshold: 0,
+            flush_requests: 0,
+            max_batch: 0,
+            tile_size: 0,
+            team_width: 0,
+        });
         assert_eq!(h.flush_requests(), 1);
         assert_eq!(h.max_batch(), 1);
+        assert_eq!(h.tile_size(), 0);
+        assert_eq!(h.team_width(), 1);
     }
 
     #[test]

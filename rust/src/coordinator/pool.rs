@@ -37,6 +37,20 @@
 //! timings + arena counters), so autotune sees where the time actually
 //! goes.
 //!
+//! With tiling enabled ([`PoolConfig::tiling`], the `PORTARNG_TILE` env
+//! knob, or a live retune of `tile_size`/`team_width`), a flush instead
+//! runs through the worker-local [`TileExecutor`] (DESIGN.md S16): the
+//! generate and transform passes execute as an nd-range of independent
+//! tiles on a scoped thread team — bit-identical to the serial pass
+//! because every tile O(1)-seeks its own forked engine — and each tile is
+//! recorded as its own ranged command, so the hazard analyzer proves tile
+//! disjointness. Tiled flushes also pipeline *across* flushes: the worker
+//! holds the previous flush's arena lease one flush longer (double
+//! buffering), so flush N+1's generate chains behind flush N−1's events,
+//! not flush N's — its compute overlaps the previous flush's D2H on the
+//! virtual clock, and the achieved overlap is published as the telemetry
+//! `pipeline` block.
+//!
 //! The policy is not frozen at construction: dispatcher and workers read
 //! it through a shared lock-free [`TuningHandle`] (DESIGN.md S12), so the
 //! [`autotune`](crate::autotune) controller can retune the threshold and
@@ -74,8 +88,10 @@ use crate::error::{Error, Result};
 use crate::fault::{self, FaultSpec, ShardFaultPlan};
 use crate::platform::PlatformId;
 use crate::rng::engines::EngineKind;
-use crate::rng::{generate_batch_usm, BatchSlice};
-use crate::sycl::{CommandClass, Queue, SyclRuntimeProfile, UsmArena};
+use crate::rng::{generate_batch_usm, generate_batch_usm_tiled, BatchSlice};
+use crate::sycl::{
+    CommandClass, Queue, SyclRuntimeProfile, TileExecutor, TilingSpec, UsmArena, UsmLease,
+};
 use crate::telemetry::{
     ArenaCounters, CommandKind, HazardCounters, Lane, ShardTelemetry, TelemetryRegistry,
     TelemetrySnapshot,
@@ -195,6 +211,12 @@ pub struct PoolConfig {
     /// later [`ServicePool::retune`] can enable size-aware routing without
     /// respawning the pool (the autotuner sets this).
     pub adaptive: bool,
+    /// Tile-executor shape `(tile_size, team_width)` every worker starts
+    /// with. `None` consults the `PORTARNG_TILE` env knob
+    /// (`"tile_size,team_width"`), falling back to the serial flush shape;
+    /// `Some` wins over the env. Either way the knobs stay live-retunable
+    /// through [`ServicePool::retune`].
+    pub tiling: Option<(usize, usize)>,
     /// Deterministic fault-injection plan (`serve --chaos`); each shard
     /// derives its own [`ShardFaultPlan`] from it. `None` (the default)
     /// costs one thread-local null check per seam.
@@ -216,10 +238,26 @@ impl PoolConfig {
             max_requests: 16,
             policy: DispatchPolicy::disabled(),
             adaptive: false,
+            tiling: None,
             fault: None,
             ingress: IngressConfig::default(),
         }
     }
+
+    /// The executor shape this config resolves to: the explicit `tiling`
+    /// field, else the `PORTARNG_TILE` env knob, else serial.
+    fn resolved_tiling(&self) -> Option<(usize, usize)> {
+        self.tiling.or_else(tiling_from_env)
+    }
+}
+
+/// Parse the `PORTARNG_TILE` env knob: `"tile_size,team_width"` (e.g.
+/// `131072,4`). Malformed values are ignored rather than panicking a
+/// service at spawn — the CLI rejects bad shapes at parse time instead.
+fn tiling_from_env() -> Option<(usize, usize)> {
+    let raw = std::env::var("PORTARNG_TILE").ok()?;
+    let (t, w) = raw.split_once(',')?;
+    Some((t.trim().parse().ok()?, w.trim().parse().ok()?))
 }
 
 /// Everything a shard worker needs, bundled so the supervisor can respawn
@@ -384,6 +422,8 @@ fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
     );
     let arena: UsmArena<f32> = UsmArena::new();
     let mut slices: Vec<BatchSlice> = Vec::new();
+    // Cross-flush pipelining state (tiled mode only; see PipelineState).
+    let mut pipeline = PipelineState { prev: None, prev_end_ns: 0 };
 
     // The overflow lane launches every request immediately; batched
     // lanes track the live tuning limits.
@@ -424,22 +464,66 @@ fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
                 ctx.telemetry.record_request(req.n);
                 waiting.push(req);
                 if let Some(batch) = batcher.push(pending) {
-                    launch(gen.as_mut(), &queue, &arena, &mut slices, &batch, &mut waiting, ctx);
+                    launch(
+                        gen.as_mut(),
+                        &queue,
+                        &arena,
+                        &mut slices,
+                        &batch,
+                        &mut waiting,
+                        ctx,
+                        &mut pipeline,
+                    );
                 }
             }
             Msg::Flush => {
                 if let Some(batch) = batcher.flush() {
-                    launch(gen.as_mut(), &queue, &arena, &mut slices, &batch, &mut waiting, ctx);
+                    launch(
+                        gen.as_mut(),
+                        &queue,
+                        &arena,
+                        &mut slices,
+                        &batch,
+                        &mut waiting,
+                        ctx,
+                        &mut pipeline,
+                    );
                 }
             }
             Msg::Shutdown(ack) => {
                 if let Some(batch) = batcher.flush() {
-                    launch(gen.as_mut(), &queue, &arena, &mut slices, &batch, &mut waiting, ctx);
+                    launch(
+                        gen.as_mut(),
+                        &queue,
+                        &arena,
+                        &mut slices,
+                        &batch,
+                        &mut waiting,
+                        ctx,
+                        &mut pipeline,
+                    );
                 }
                 let _ = ack.send(());
                 break;
             }
         }
+    }
+    // Return the double buffer's held lease before the arena drops, so a
+    // clean shutdown reports `leaked == 0` even mid-pipeline — and
+    // republish the settled counters, because the registry outlives the
+    // worker and post-shutdown snapshots must see this recycle.
+    if let Some(prev) = pipeline.prev.take() {
+        prev.recycle();
+        let a = arena.stats();
+        ctx.telemetry.set_arena(ArenaCounters {
+            checkouts: a.checkouts,
+            hits: a.hits,
+            misses: a.misses,
+            recycles: a.recycles,
+            leaked: a.leaked,
+            pooled: a.pooled,
+            pooled_bytes: a.pooled_bytes,
+        });
     }
     // Graceful-exit drain (channel closed with requests still queued —
     // only reachable when the pool handle vanished without a handshake):
@@ -448,6 +532,21 @@ fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
         ctx.inflight.complete(req.id);
         let _ = req.reply.send(Err(Error::ShardLost));
     }
+}
+
+/// Cross-flush pipelining state, one per worker (DESIGN.md S16).
+///
+/// `prev` is the previous tiled flush's arena lease, recycled one flush
+/// *late*: holding it keeps its allocation out of the pool, so the next
+/// checkout lands on the *other* allocation (double buffering) and its
+/// generate chains behind flush N-1's events instead of flush N's — the
+/// new flush's compute overlaps the previous flush's D2H on the virtual
+/// clock. `prev_end_ns` is the virtual end of the previous flush's last
+/// command: the reference the telemetry `pipeline` block measures
+/// achieved overlap against.
+struct PipelineState<'a> {
+    prev: Option<UsmLease<'a, f32>>,
+    prev_end_ns: u64,
 }
 
 /// One coalesced flush through the SYCL runtime: the closed batch becomes
@@ -460,14 +559,23 @@ fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
 /// recycled across flushes: at steady state the generate path allocates
 /// no staging and mallocs no device memory per request (the reply
 /// payload is the D2H output — the handoff, not scratch).
-fn launch(
+///
+/// With tiling live ([`TuningHandle::tile_size`] > 0 and
+/// [`TuningHandle::team_width`] > 1) the flush instead runs through the
+/// worker-local [`TileExecutor`]: per-tile generate work items (each
+/// member's sub-stream seeked in O(1), so payloads stay bit-identical to
+/// the serial path) and double-buffered leases that pipeline this
+/// flush's compute under the previous flush's D2H (see
+/// [`PipelineState`]).
+fn launch<'a>(
     gen: &mut dyn crate::backends::VendorGenerator,
     queue: &Queue,
-    arena: &UsmArena<f32>,
+    arena: &'a UsmArena<f32>,
     slices: &mut Vec<BatchSlice>,
     batch: &BatchOutcome,
     waiting: &mut Vec<ServiceRequest>,
     ctx: &WorkerCtx,
+    pipeline: &mut PipelineState<'a>,
 ) {
     let telemetry = &ctx.telemetry;
     let wall_start = Instant::now();
@@ -479,23 +587,46 @@ fn launch(
         range: waiting[m.id as usize].range,
     }));
 
+    // Executor shape is read fresh from the live tuning handle each
+    // flush: a retune of `tile_size` / `team_width` (or a retune back to
+    // serial) takes effect on the very next launch, no worker restart.
+    let spec = TilingSpec::new(ctx.tuning.tile_size(), ctx.tuning.team_width());
+
     // Checkout inherits the allocation's pending events (the previous
     // flush's D2H copies) and the generate chains behind them — the USM
-    // reuse hazard the paper's §4.1 warns about, handled explicitly.
+    // reuse hazard the paper's §4.1 warns about, handled explicitly. In
+    // tiled mode the previous flush's lease is still held in `pipeline`,
+    // so this checkout double-buffers onto a different allocation and
+    // inherits flush N-1's events, not flush N's.
     let mut lease = arena.checkout(queue, batch.launch_n.max(1));
-    let outcome = generate_batch_usm(
-        queue,
-        gen,
-        slices.as_slice(),
-        batch.launch_n,
-        lease.buffer(),
-        Some(lease.generation()),
-        lease.deps(),
-    );
-    let (results, pending) = match outcome {
+    let outcome = if spec.is_serial() {
+        generate_batch_usm(
+            queue,
+            gen,
+            slices.as_slice(),
+            batch.launch_n,
+            lease.buffer(),
+            Some(lease.generation()),
+            lease.deps(),
+        )
+    } else {
+        let executor = TileExecutor::new(spec.team_width);
+        generate_batch_usm_tiled(
+            queue,
+            gen,
+            slices.as_slice(),
+            batch.launch_n,
+            lease.buffer(),
+            Some(lease.generation()),
+            lease.deps(),
+            spec,
+            &executor,
+        )
+    };
+    let (results, pending, tiles) = match outcome {
         Ok(b) => {
             let pending = b.last_events();
-            (b.payloads, pending)
+            (b.payloads, pending, b.tiles)
         }
         Err(e) => {
             // Whole-flush failure (empty batches never reach here): fail
@@ -513,11 +644,26 @@ fn launch(
                     None => Err(Error::Coordinator(why.clone())),
                 })
                 .collect();
-            (fail, lease.deps().to_vec())
+            (fail, lease.deps().to_vec(), Vec::new())
         }
     };
     lease.set_pending(pending);
-    lease.recycle(); // park now: the arena is warm before the next flush
+    if spec.is_serial() {
+        // Park now: the arena is warm before the next flush. Also drain
+        // any lease stranded by a retune from tiled back to serial, or
+        // the double buffer would hold an allocation forever.
+        if let Some(prev) = pipeline.prev.take() {
+            prev.recycle();
+        }
+        lease.recycle();
+    } else {
+        // Double buffer: hold THIS lease one flush longer, recycle the
+        // previous one — the two allocations alternate, and the next
+        // checkout's inherited deps are one flush stale (the overlap).
+        if let Some(prev) = pipeline.prev.replace(lease) {
+            prev.recycle();
+        }
+    }
 
     let mut payload = 0u64;
     for r in &results {
@@ -538,6 +684,18 @@ fn launch(
         hazard_report.external_deps as u64,
         hazard_report.counts(),
     ));
+    // Pipeline bookkeeping walks the same drained window: the first
+    // generate's virtual start against the previous flush's virtual end
+    // is the achieved cross-flush overlap (zero in serial mode, where
+    // the generate chains directly behind the previous D2H).
+    let mut first_generate_ns = u64::MAX;
+    let mut last_end_ns = 0u64;
+    for r in &records {
+        if matches!(r.class, CommandClass::Generate) {
+            first_generate_ns = first_generate_ns.min(r.virt_start_ns);
+        }
+        last_end_ns = last_end_ns.max(r.virt_end_ns);
+    }
     for r in records {
         let kind = match r.class {
             CommandClass::Generate => CommandKind::Generate,
@@ -547,6 +705,19 @@ fn launch(
         };
         telemetry.record_command(kind, r.virt_end_ns - r.virt_start_ns);
     }
+    if !spec.is_serial() {
+        let overlap = if first_generate_ns == u64::MAX {
+            0
+        } else {
+            pipeline.prev_end_ns.saturating_sub(first_generate_ns)
+        };
+        telemetry.record_pipeline_flush(overlap);
+        telemetry.record_tiles(
+            tiles.len() as u64,
+            tiles.iter().map(|t| t.wall_ns).sum(),
+        );
+    }
+    pipeline.prev_end_ns = pipeline.prev_end_ns.max(last_end_ns);
     let a = arena.stats();
     telemetry.set_arena(ArenaCounters {
         checkouts: a.checkouts,
@@ -632,11 +803,11 @@ impl ServicePool {
             lanes.push(Lane::Overflow);
         }
         let telemetry = TelemetryRegistry::new(cfg.platform, &lanes);
-        let tuning = Arc::new(TuningHandle::new(TuningParams::new(
-            cfg.policy,
-            cfg.max_requests,
-            cfg.max_batch,
-        )));
+        let mut params = TuningParams::new(cfg.policy, cfg.max_requests, cfg.max_batch);
+        if let Some((tile_size, team_width)) = cfg.resolved_tiling() {
+            params = params.tiled(tile_size, team_width);
+        }
+        let tuning = Arc::new(TuningHandle::new(params));
         let inflight = InflightTable::new();
         let (sup_tx, sup_rx) = mpsc::channel();
         let mut slots = Vec::with_capacity(lanes.len());
@@ -1013,7 +1184,13 @@ mod tests {
         // Everything batches while disabled.
         let a = pool.generate(5000, (0.0, 1.0));
         // Enable mid-stream: subsequent large requests overflow.
-        pool.retune(TuningParams { threshold: 1000, flush_requests: 16, max_batch: 1 << 20 });
+        pool.retune(TuningParams {
+            threshold: 1000,
+            flush_requests: 16,
+            max_batch: 1 << 20,
+            tile_size: 0,
+            team_width: 1,
+        });
         let b = pool.generate(5000, (0.0, 1.0));
         let got_b = b.recv().unwrap().unwrap(); // immediate: unbatched lane
         pool.flush();
@@ -1060,6 +1237,81 @@ mod tests {
         assert_eq!(s.arena.recycles, 4);
         assert_eq!(s.arena.pooled, 1);
         pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tiled_flush_matches_serial_payloads_with_per_tile_commands() {
+        // One flush of 100 (ranged) + 101 + 66 pads to launch_n 268: five
+        // 64-element tiles through the worker's TileExecutor. The ranged
+        // member covers launch 0..100, so only tiles 0 and 1 carry a
+        // transform kernel.
+        let mut cfg = PoolConfig::new(PlatformId::A100, 19, 1);
+        cfg.max_requests = 3;
+        cfg.tiling = Some((64, 4));
+        let pool = ServicePool::spawn(cfg);
+        let a = pool.generate(100, (0.0, 2.0));
+        let b = pool.generate(101, (0.0, 1.0));
+        let c = pool.generate(66, (0.0, 1.0));
+
+        // Payloads are bit-identical to the serial dedicated stream.
+        let mut want_a = dedicated(19, 0, 100);
+        crate::rng::range_transform::range_transform_inplace(&mut want_a, 0.0, 2.0);
+        assert_eq!(a.recv().unwrap().unwrap(), want_a);
+        assert_eq!(b.recv().unwrap().unwrap(), dedicated(19, 100, 101));
+        assert_eq!(c.recv().unwrap().unwrap(), dedicated(19, 201, 66));
+
+        let snap = pool.telemetry().snapshot();
+        let s = &snap.shards[0];
+        // Per-tile submission shape: one generate per tile, transforms
+        // only where a ranged member overlaps, one D2H per member — and
+        // the analyzer proves the widened DAG race-free.
+        assert_eq!(s.generate.cmds, 5);
+        assert_eq!(s.transform.cmds, 2);
+        assert_eq!(s.d2h.cmds, 3);
+        assert_eq!(s.tiles.tiles, 7);
+        assert_eq!(s.pipeline.flushes, 1);
+        assert_eq!(s.hazards.windows, 1);
+        assert!(s.hazards.clean());
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tiled_flushes_double_buffer_the_arena_and_report_zero_leaks() {
+        // max_requests 1: every request closes its own flush. With the
+        // executor on, the worker holds each flush's lease one flush
+        // longer (cross-flush pipelining), so two same-class allocations
+        // alternate: cold misses on flushes 1 AND 2, hits after, and
+        // each flush recycles the PREVIOUS lease — 3 recycles across 4
+        // flushes, with the 4th lease still held.
+        let mut cfg = PoolConfig::new(PlatformId::A100, 29, 1);
+        cfg.max_requests = 1;
+        cfg.tiling = Some((64, 2));
+        let pool = ServicePool::spawn(cfg);
+        for i in 0..4u64 {
+            let rx = pool.generate(100, (0.0, 1.0));
+            assert_eq!(rx.recv().unwrap().unwrap(), dedicated(29, i * 100, 100));
+        }
+        let snap = pool.telemetry().snapshot();
+        let s = &snap.shards[0];
+        assert_eq!(s.arena.checkouts, 4);
+        assert_eq!(s.arena.misses, 2);
+        assert_eq!(s.arena.hits, 2);
+        assert_eq!(s.arena.recycles, 3);
+        assert_eq!(s.arena.pooled, 1);
+        assert_eq!(s.pipeline.flushes, 4);
+        // Each 100-element launch splits into a 64 + 36 tile pair.
+        assert_eq!(s.tiles.tiles, 8);
+        assert!(s.hazards.clean());
+
+        // Shutdown returns the held lease: nothing leaks, and the
+        // registry (kept alive across the shutdown) sees that final
+        // recycle land both allocations back in the pool.
+        let keep = pool.telemetry().clone();
+        pool.shutdown().unwrap();
+        let after = keep.snapshot();
+        assert_eq!(after.shards[0].arena.recycles, 4);
+        assert_eq!(after.shards[0].arena.leaked, 0);
+        assert_eq!(after.shards[0].arena.pooled, 2);
     }
 
     #[test]

@@ -74,8 +74,10 @@ USAGE:
                   [--quick] [--outdir <dir>]
   portarng serve [--platform <p>] [--batch-max <n>] [--demo-requests <n>]
                  [--shards <n>] [--overflow-at <n>] [--chaos <spec>]
+                 [--tile-size <n> [--team-width <w>]]
   portarng serve --autotune [--platform <p>] [--shards <n>] [--windows <n>]
                  [--demo-requests <n>] [--profile <path>] [--save-profile]
+                 [--tile-size <n> [--team-width <w>]]
   portarng calibrate --platform <p> [--shards <n>] [--profile <path>]
   portarng check-artifacts
   portarng lint-dag [--verbose]                (prove recorded DAGs race-free)
@@ -84,7 +86,10 @@ Distributions: uniform a b | gaussian mean stddev | lognormal m s |
                exponential lambda | poisson lambda | bits
 Platforms: rome7742, i7-10875h, xeon5220, uhd630, vega56, a100
 Chaos spec:  seed=<u64>,rate=<0..1>,sites=<generate+submit+d2h>,kill=<shard>@<op>+..
-             (also read from PORTARNG_FAULT_PLAN when --chaos is absent)";
+             (also read from PORTARNG_FAULT_PLAN when --chaos is absent)
+Executor:    --tile-size turns flushes into per-tile work items on a
+             worker-local team (bit-identical to serial); also read from
+             PORTARNG_TILE=<tile>,<width> when the flags are absent";
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
@@ -121,6 +126,34 @@ fn chaos_spec(opts: &HashMap<String, String>) -> Result<Option<FaultSpec>, Strin
     };
     spec.map(|s| FaultSpec::parse(&s).map_err(|e| format!("bad chaos spec `{s}`: {e}")))
         .transpose()
+}
+
+/// Parse the tile-executor flags. `--team-width` without `--tile-size`
+/// is rejected (a team with nothing to tile), as are zero values — the
+/// serial path is selected by *omitting* the flags, never by 0. When
+/// both flags are absent the pool still honours `PORTARNG_TILE`.
+fn tiling_opts(opts: &HashMap<String, String>) -> Result<Option<(usize, usize)>, String> {
+    if opts.contains_key("team-width") && !opts.contains_key("tile-size") {
+        return Err("--team-width requires --tile-size (it sizes the tile executor team)".into());
+    }
+    let Some(raw) = opts.get("tile-size") else {
+        return Ok(None);
+    };
+    let tile: usize = raw.parse().map_err(|_| format!("bad --tile-size `{raw}`"))?;
+    if tile == 0 {
+        return Err("--tile-size must be >= 1 (omit the flag for the serial path)".into());
+    }
+    let width = match opts.get("team-width") {
+        Some(w) => {
+            let w: usize = w.parse().map_err(|_| format!("bad --team-width `{w}`"))?;
+            if w == 0 {
+                return Err("--team-width must be >= 1".into());
+            }
+            w
+        }
+        None => 4,
+    };
+    Ok(Some((tile, width)))
 }
 
 fn cmd_platforms() -> CliResult {
@@ -363,9 +396,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
     let n_req: usize =
         opts.get("demo-requests").map(|s| s.parse()).transpose()?.unwrap_or(32);
     let shards: usize = opts.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let tiling = tiling_opts(opts)?;
 
     if autotune {
-        return serve_autotuned(opts, platform, shards, n_req);
+        return serve_autotuned(opts, platform, shards, n_req, tiling);
     }
 
     let batch_max: usize =
@@ -375,6 +409,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
 
     let mut cfg = PoolConfig::new(platform, 0x5EED, shards);
     cfg.max_batch = batch_max;
+    cfg.tiling = tiling;
     if let Some(t) = overflow_at {
         cfg.policy = DispatchPolicy::fixed(t);
     }
@@ -409,6 +444,19 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
             s.requests, s.launches, s.numbers
         );
     }
+    let tiles = snapshot.tile_totals();
+    let pipe = snapshot.pipeline_totals();
+    if tiles.tiles > 0 {
+        println!(
+            "  executor: {} tile(s), {:.3} ms tile wall | pipeline: {}/{} flushes \
+             overlapped ({:.0}% occupancy)",
+            tiles.tiles,
+            tiles.wall_ns as f64 / 1e6,
+            pipe.overlapped,
+            pipe.flushes,
+            pipe.occupancy() * 100.0
+        );
+    }
     if let Some(spec) = &chaos {
         let res = snapshot.resilience_totals();
         println!(
@@ -433,6 +481,7 @@ fn serve_autotuned(
     platform: PlatformId,
     shards: usize,
     n_req: usize,
+    tiling: Option<(usize, usize)>,
 ) -> CliResult {
     let windows: usize = opts.get("windows").map(|s| s.parse()).transpose()?.unwrap_or(12);
     let profile_path = opts.get("profile").map(Path::new);
@@ -471,6 +520,17 @@ fn serve_autotuned(
     cfg.max_requests = profile.params.flush_requests;
     cfg.max_batch = profile.params.max_batch;
     cfg.adaptive = true;
+    // Flags enable the executor; the tuner then hill-climbs tile size
+    // and team width alongside the dispatch knobs. Without flags the
+    // profile's stored executor shape (serial in pre-tiling profiles)
+    // carries over via the initial TuningParams.
+    cfg.tiling = tiling.or({
+        if profile.params.tile_size > 0 {
+            Some((profile.params.tile_size, profile.params.team_width))
+        } else {
+            None
+        }
+    });
     let pool = ServicePool::spawn(cfg);
     let mut tuner = PoolAutoTuner::new(&pool);
 
@@ -489,8 +549,13 @@ fn serve_autotuned(
         }
         let params = tuner.step(&pool);
         let (_, best_tput) = tuner.tuner().best();
+        let executor = if params.tile_size > 0 {
+            format!(", tile {} x{}", params.tile_size, params.team_width)
+        } else {
+            String::new()
+        };
         println!(
-            "window {window:>2}: threshold {:>9}, flush {:>3} | best so far {:.1} M/s{}",
+            "window {window:>2}: threshold {:>9}, flush {:>3}{executor} | best so far {:.1} M/s{}",
             params.threshold,
             params.flush_requests,
             best_tput / 1e6,

@@ -85,8 +85,25 @@ pub trait Engine: Send {
     /// Fill `out` with the next raw u32 draws.
     fn fill_u32(&mut self, out: &mut [u32]);
 
-    /// Skip `n` raw u32 draws ahead. O(1) for Philox, O(n) in general.
+    /// Skip `n` raw u32 draws ahead, *relative* to the current position.
+    ///
+    /// Cost varies wildly by family: O(1) for Philox (counter
+    /// arithmetic), O(log n) for MRG32k3a (matrix powers), O(n) for
+    /// everything else (the engine literally draws and discards). Callers
+    /// repositioning absolutely on a hot path should use
+    /// [`Engine::try_seek`] and only fall back to recreate + `skip_ahead`
+    /// when it returns `false`.
     fn skip_ahead(&mut self, n: u64);
+
+    /// Seek to *absolute* raw-draw position `pos`, when the engine can do
+    /// so without being reconstructed: Philox seeks in O(1), MRG32k3a
+    /// restores its seed-derived initial state and jumps in O(log pos).
+    /// Returns `false` — leaving the state untouched — for engines that
+    /// only know how to move forward; callers then recreate from the seed
+    /// and [`Engine::skip_ahead`].
+    fn try_seek(&mut self, _pos: u64) -> bool {
+        false
+    }
 
     /// Clone into a boxed engine (engines are deterministic state machines).
     fn clone_box(&self) -> Box<dyn Engine>;

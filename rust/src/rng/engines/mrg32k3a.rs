@@ -61,6 +61,11 @@ fn mat_pow(mut a: [[u64; 3]; 3], mut n: u64, m: u64) -> [[u64; 3]; 3] {
 pub struct Mrg32k3aEngine {
     s1: [u64; 3],
     s2: [u64; 3],
+    /// Seed-derived initial state, kept so [`Engine::try_seek`] can
+    /// reposition absolutely (restore + O(log pos) jump) without the
+    /// caller reconstructing the engine.
+    init1: [u64; 3],
+    init2: [u64; 3],
 }
 
 impl Mrg32k3aEngine {
@@ -83,7 +88,7 @@ impl Mrg32k3aEngine {
         for v in s2.iter_mut() {
             *v = next() % (M2 - 1) + 1;
         }
-        Mrg32k3aEngine { s1, s2 }
+        Mrg32k3aEngine { s1, s2, init1: s1, init2: s2 }
     }
 
     #[inline]
@@ -125,6 +130,15 @@ impl Engine for Mrg32k3aEngine {
         self.s2 = mat_vec(&p2, &self.s2, M2);
     }
 
+    fn try_seek(&mut self, pos: u64) -> bool {
+        // Absolute seek = restore the seed-derived initial state, then
+        // one O(log pos) matrix jump — no reconstruction needed.
+        self.s1 = self.init1;
+        self.s2 = self.init2;
+        self.skip_ahead(pos);
+        true
+    }
+
     fn clone_box(&self) -> Box<dyn Engine> {
         Box::new(self.clone())
     }
@@ -139,7 +153,12 @@ mod tests {
     /// the tighter per-draw property that outputs stay in [0, m1).
     #[test]
     fn canonical_state_stream() {
-        let mut e = Mrg32k3aEngine { s1: [12345; 3], s2: [12345; 3] };
+        let mut e = Mrg32k3aEngine {
+            s1: [12345; 3],
+            s2: [12345; 3],
+            init1: [12345; 3],
+            init2: [12345; 3],
+        };
         let mut sum = 0f64;
         for _ in 0..10_000 {
             let z = e.step();
@@ -162,6 +181,23 @@ mod tests {
             b.skip_ahead(n);
             assert_eq!(a.s1, b.s1, "s1 after {n}");
             assert_eq!(a.s2, b.s2, "s2 after {n}");
+        }
+    }
+
+    #[test]
+    fn try_seek_matches_fresh_engine_at_offset() {
+        for pos in [0u64, 1, 2, 1000, 65_537, 1_000_000] {
+            let mut a = Mrg32k3aEngine::new(7);
+            let mut burn = vec![0u32; 123]; // move off the initial state
+            a.fill_u32(&mut burn);
+            assert!(a.try_seek(pos));
+
+            let mut b = Mrg32k3aEngine::new(7);
+            b.skip_ahead(pos);
+            let (mut xa, mut xb) = ([0u32; 16], [0u32; 16]);
+            a.fill_u32(&mut xa);
+            b.fill_u32(&mut xb);
+            assert_eq!(xa, xb, "pos {pos}");
         }
     }
 

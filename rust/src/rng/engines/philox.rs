@@ -225,6 +225,11 @@ impl Engine for PhiloxEngine {
         self.seek(pos);
     }
 
+    fn try_seek(&mut self, pos: u64) -> bool {
+        self.seek(pos);
+        true
+    }
+
     fn clone_box(&self) -> Box<dyn Engine> {
         Box::new(self.clone())
     }
@@ -335,5 +340,66 @@ mod tests {
         assert_eq!(fused, unfused);
         // And the streams remain aligned afterwards.
         assert_eq!(a.position(), b.position());
+    }
+
+    #[test]
+    fn fused_uniform_matches_unfused_for_every_phase_and_length() {
+        // The fused path has four distinct regimes (phase drain, 16-wide,
+        // 4-wide, partial-block tail); every (starting phase, length)
+        // combination must agree bit-exactly with fill_u32 + conversion
+        // and leave the stream at the same position.
+        for phase in 0u64..4 {
+            for len in 0usize..=33 {
+                let mut a = PhiloxEngine::new(123);
+                a.seek(phase);
+                let mut fused = vec![0f32; len];
+                a.fill_uniform_f32_fused(&mut fused);
+
+                let mut b = PhiloxEngine::new(123);
+                b.seek(phase);
+                let mut raw = vec![0u32; len];
+                b.fill_u32(&mut raw);
+                let unfused: Vec<f32> =
+                    raw.iter().map(|&x| crate::rng::u32_to_uniform_f32(x)).collect();
+
+                assert_eq!(fused, unfused, "phase {phase} len {len}");
+                assert_eq!(a.position(), b.position(), "phase {phase} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_uniform_is_stream_exact_across_a_seek_boundary() {
+        // Fused fills on either side of an arbitrary-phase seek must
+        // reproduce the contiguous serial stream — the exact shape the
+        // tiled executor leans on (each tile seeks, then fills).
+        for boundary in [1u64, 2, 3, 5, 17, 1000, 123_457] {
+            let mut whole = vec![0f32; 48];
+            PhiloxEngine::with_offset(9, boundary).fill_uniform_f32_fused(&mut whole);
+
+            let mut e = PhiloxEngine::new(9);
+            e.seek(boundary);
+            let mut first = vec![0f32; 19];
+            e.fill_uniform_f32_fused(&mut first);
+            e.seek(boundary + 19);
+            let mut second = vec![0f32; 29];
+            e.fill_uniform_f32_fused(&mut second);
+
+            assert_eq!(&whole[..19], &first[..], "boundary {boundary}");
+            assert_eq!(&whole[19..], &second[..], "boundary {boundary}");
+        }
+    }
+
+    #[test]
+    fn try_seek_is_an_absolute_o1_reposition() {
+        let mut a = PhiloxEngine::new(5);
+        let mut burn = [0u32; 7]; // leave a partially consumed block
+        a.fill_u32(&mut burn);
+        assert!(a.try_seek(1_000_003));
+        let mut b = PhiloxEngine::with_offset(5, 1_000_003);
+        let (mut xa, mut xb) = ([0u32; 8], [0u32; 8]);
+        a.fill_u32(&mut xa);
+        b.fill_u32(&mut xb);
+        assert_eq!(xa, xb);
     }
 }

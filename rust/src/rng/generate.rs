@@ -19,9 +19,13 @@
 use crate::backends::VendorGenerator;
 use crate::error::Result;
 use crate::platform::CommandCost;
-use crate::sycl::{Access, AccessMode, Buffer, CommandClass, Event, Queue, UsmBuffer};
+use crate::sycl::{
+    Access, AccessMode, Buffer, CommandClass, Event, Queue, TileExecutor, TileTiming, TilingSpec,
+    UsmBuffer,
+};
 
 use super::distributions::{Distribution, GaussianMethod, UniformMethod};
+use super::engines::Engine;
 use super::range_transform;
 
 /// Which memory API a generate call uses.
@@ -230,19 +234,28 @@ pub struct BatchSlice {
     pub range: (f32, f32),
 }
 
-/// Result of one [`generate_batch_usm`] flush.
+/// Result of one [`generate_batch_usm`] / [`generate_batch_usm_tiled`]
+/// flush.
 #[derive(Debug)]
 pub struct UsmBatch {
     /// Per-member readbacks (member order); a member fails alone when its
     /// vendor call errors, without poisoning the rest of the flush.
     pub payloads: Vec<Result<Vec<f32>>>,
-    /// The single interop generate host task.
+    /// The interop generate host task (serial flush), or the *last* per-
+    /// tile generate work item (tiled flush — compute commands serialize
+    /// on the virtual timeline, so the last recorded one ends last).
     pub generate: Event,
-    /// The single range-transform kernel (absent when every member asked
-    /// for the canonical `[0, 1)` range).
+    /// The range-transform kernel — single on a serial flush, the last
+    /// per-tile one on a tiled flush; absent when every member asked for
+    /// the canonical `[0, 1)` range.
     pub transform: Option<Event>,
-    /// Per-member D2H slice copies, chained behind the last kernel.
+    /// Per-member D2H slice copies, chained behind the last kernel
+    /// covering the member's range.
     pub d2h: Vec<Event>,
+    /// Real per-tile wall timings when the flush executed tiled (generate
+    /// pass then transform pass, tile order within each); empty on the
+    /// serial path.
+    pub tiles: Vec<TileTiming>,
 }
 
 impl UsmBatch {
@@ -385,7 +398,212 @@ pub fn generate_batch_usm(
             Err(e) => payloads.push(Err(e)),
         }
     }
-    Ok(UsmBatch { payloads, generate: gen_ev, transform: transform_ev, d2h })
+    Ok(UsmBatch { payloads, generate: gen_ev, transform: transform_ev, d2h, tiles: Vec::new() })
+}
+
+/// Tiled variant of [`generate_batch_usm`]: the flush executes as an
+/// nd-range of independent tiles on a worker-local [`TileExecutor`] team
+/// instead of one serial host task (DESIGN.md S16).
+///
+/// ```text
+///   deps ─▶ generate[tile 0] ─▶ transform[tile 0] ─┐
+///   deps ─▶ generate[tile 1] ─▶ transform[tile 1] ─┼▶ d2h per member
+///   deps ─▶ ...                                    ┘  (deps = tiles the
+///                                                      member overlaps)
+/// ```
+///
+/// **Bit-identity:** a tile covering launch elements `[s, s+l)` of member
+/// `m` generates from absolute stream position `m.stream_offset + (s -
+/// m.buffer_offset)` — for a counter-based engine (`Engine::try_seek`)
+/// that is *exactly* the sub-stream the serial pass writes there, so
+/// tiled output equals serial output for every tile size and team width
+/// (pinned by the parity tests below and `tests/coordinator.rs`).
+///
+/// Every tile records its own command: its own dependency list, measured
+/// wall time, and an [`Access`] narrowed to the tile's element range — the
+/// hazard analyzer *proves* tile disjointness rather than going blind.
+/// Falls back to the serial path when `spec` is serial, the launch fits
+/// one tile, or the engine cannot seek absolutely in place (XORWOW /
+/// MT19937 / Sobol).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_batch_usm_tiled(
+    queue: &Queue,
+    generator: &mut dyn VendorGenerator,
+    members: &[BatchSlice],
+    launch_n: usize,
+    usm: &UsmBuffer<f32>,
+    generation: Option<u64>,
+    deps: &[Event],
+    spec: TilingSpec,
+    executor: &TileExecutor,
+) -> Result<UsmBatch> {
+    if members.is_empty() {
+        return Err(crate::error::Error::InvalidArgument(
+            "generate_batch_usm: empty batch".into(),
+        ));
+    }
+    let tiles = spec.tiles(launch_n);
+    if spec.is_serial() || tiles.len() <= 1 {
+        return generate_batch_usm(queue, generator, members, launch_n, usm, generation, deps);
+    }
+    let Some(template) = generator.fork_engine_at(0) else {
+        return generate_batch_usm(queue, generator, members, launch_n, usm, generation, deps);
+    };
+    assert!(usm.len() >= launch_n, "launch allocation too small");
+    for m in members {
+        assert!(
+            m.buffer_offset + m.n <= launch_n,
+            "batch member overruns the launch buffer"
+        );
+    }
+
+    // Same whole-flush submission seam as the serial path's
+    // `submit_usm_checked`, tripped before anything is recorded...
+    crate::fault::trip(crate::fault::FaultSite::Submit)?;
+    // ...and the same per-member vendor seam, tripped in member order on
+    // the submitting thread (op-index parity with the serial flush, where
+    // `generate_canonical` trips once per member inside the host task).
+    let member_res: Vec<Result<()>> = members
+        .iter()
+        .map(|_| crate::fault::trip(crate::fault::FaultSite::Generate))
+        .collect();
+
+    // Segment each tile by the live members overlapping it. A tile's
+    // generate segment is (offset within the tile, length, absolute
+    // stream position); its transform segment additionally carries the
+    // member's output range.
+    let mut gen_segs: Vec<Vec<(usize, usize, u64)>> = vec![Vec::new(); tiles.len()];
+    let mut tf_segs: Vec<Vec<(usize, usize, f32, f32)>> = vec![Vec::new(); tiles.len()];
+    for (m, r) in members.iter().zip(&member_res) {
+        if r.is_err() {
+            continue;
+        }
+        let (m_lo, m_hi) = (m.buffer_offset, m.buffer_offset + m.n);
+        for (t, &(t_start, t_len)) in tiles.iter().enumerate() {
+            let lo = m_lo.max(t_start);
+            let hi = m_hi.min(t_start + t_len);
+            if lo >= hi {
+                continue;
+            }
+            let stream = m.stream_offset + (lo - m_lo) as u64;
+            gen_segs[t].push((lo - t_start, hi - lo, stream));
+            if m.range != (0.0, 1.0) {
+                tf_segs[t].push((lo - t_start, hi - lo, m.range.0, m.range.1));
+            }
+        }
+    }
+
+    // One forked engine per tile: independent sub-streams by counter
+    // arithmetic. The mutex only hands each team thread `&mut` access to
+    // its own tile's engine — one tile, one uncontended lock.
+    let engines: Vec<std::sync::Mutex<Box<dyn Engine>>> =
+        tiles.iter().map(|_| std::sync::Mutex::new(template.clone_box())).collect();
+
+    // Nd-range pass 1: generate. The launch buffer is locked once on the
+    // submitting thread and carved into disjoint per-tile `&mut` slices
+    // by the executor; each tile seeks to its segments' stream positions
+    // and fills the canonical uniforms the serial pass would have.
+    let gen_timings = {
+        let mut mem = usm.lock();
+        executor.run(&mut mem[..launch_n], &tiles, |tile, _start, slice| {
+            let mut e = engines[tile].lock().unwrap();
+            for &(local, len, stream) in &gen_segs[tile] {
+                let sought = e.try_seek(stream);
+                debug_assert!(sought, "forked engine lost its seek capability");
+                e.fill_uniform_f32(&mut slice[local..local + len]);
+            }
+        })
+    };
+    let name = format!("{}::generate_batch", generator.backend_name());
+    let mut gen_events: Vec<Event> = Vec::with_capacity(tiles.len());
+    for t in &gen_timings {
+        gen_events.push(queue.submit_executed(
+            format!("{name}[tile {}]", t.tile),
+            CommandClass::Generate,
+            generate_kernel_cost(t.len),
+            deps,
+            vec![Access::usm_leased(usm.id(), AccessMode::Write, generation)
+                .with_range(t.start, t.len)],
+            t.wall_ns,
+        ));
+    }
+
+    // Nd-range pass 2: transform, only over tiles holding ranged
+    // segments. Each tile's transform depends on *its own* generate only
+    // — the declared ranges prove disjointness from every other tile.
+    let mut tf_map: Vec<usize> = Vec::new();
+    let mut tf_tiles: Vec<(usize, usize)> = Vec::new();
+    for (t, &range) in tiles.iter().enumerate() {
+        if !tf_segs[t].is_empty() {
+            tf_map.push(t);
+            tf_tiles.push(range);
+        }
+    }
+    let mut transform_events: Vec<Option<Event>> = vec![None; tiles.len()];
+    let mut all_timings = gen_timings;
+    if !tf_tiles.is_empty() {
+        let tf_timings = {
+            let mut mem = usm.lock();
+            executor.run(&mut mem[..launch_n], &tf_tiles, |i, _start, slice| {
+                for &(local, len, a, b) in &tf_segs[tf_map[i]] {
+                    range_transform::range_transform_inplace(&mut slice[local..local + len], a, b);
+                }
+            })
+        };
+        for timing in &tf_timings {
+            let t = tf_map[timing.tile];
+            let items: usize = tf_segs[t].iter().map(|s| s.1).sum();
+            transform_events[t] = Some(queue.submit_executed(
+                format!("range_transform_fp[tile {t}]"),
+                CommandClass::Transform,
+                transform_kernel_cost(items),
+                std::slice::from_ref(&gen_events[t]),
+                vec![Access::usm_leased(usm.id(), AccessMode::ReadWrite, generation)
+                    .with_range(tiles[t].0, tiles[t].1)],
+                timing.wall_ns,
+            ));
+            all_timings.push(TileTiming {
+                tile: t,
+                start: timing.start,
+                len: timing.len,
+                wall_ns: timing.wall_ns,
+            });
+        }
+    }
+
+    // Per-member D2H: chained behind the last kernel of every tile the
+    // member overlaps — nothing else (the copy's declared read range is
+    // disjoint from all other tiles, so the DAG stays provably race-free
+    // with this minimal dependency set).
+    let tile_last: Vec<Event> = (0..tiles.len())
+        .map(|t| transform_events[t].clone().unwrap_or_else(|| gen_events[t].clone()))
+        .collect();
+    let mut payloads = Vec::with_capacity(members.len());
+    let mut d2h = Vec::with_capacity(members.len());
+    for (m, r) in members.iter().zip(member_res) {
+        match r {
+            Ok(()) => {
+                let mdeps: Vec<Event> = tiles
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &(s, l))| s < m.buffer_offset + m.n && m.buffer_offset < s + l)
+                    .map(|(t, _)| tile_last[t].clone())
+                    .collect();
+                match queue.usm_slice_to_host_checked(usm, m.buffer_offset, m.n, &mdeps) {
+                    Ok((data, ev)) => {
+                        payloads.push(Ok(data));
+                        d2h.push(ev);
+                    }
+                    Err(e) => payloads.push(Err(e)),
+                }
+            }
+            Err(e) => payloads.push(Err(e)),
+        }
+    }
+
+    let generate = gen_events.last().expect("tiled flush has at least one tile").clone();
+    let transform = tf_map.last().and_then(|&t| transform_events[t].clone());
+    Ok(UsmBatch { payloads, generate, transform, d2h, tiles: all_timings })
 }
 
 /// Output type of a generate entry point.
@@ -715,6 +933,169 @@ mod tests {
             assert!(ev.profiling_command_start() >= batch.generate.profiling_command_end());
         }
         assert!(generate_batch_usm(&queue, gen.as_mut(), &[], 0, &usm, None, &[]).is_err());
+    }
+
+    #[test]
+    fn tiled_batch_matches_serial_and_dedicated_engines_across_tile_shapes() {
+        // The bit-identity statement of DESIGN.md S16: any (tile size,
+        // team width) — including phase-unaligned tile boundaries —
+        // produces exactly the serial flush's bytes.
+        let members = [
+            BatchSlice { buffer_offset: 0, stream_offset: 500, n: 33, range: (0.0, 1.0) },
+            BatchSlice { buffer_offset: 33, stream_offset: 0, n: 101, range: (-2.0, 2.0) },
+            BatchSlice { buffer_offset: 134, stream_offset: 7_777, n: 66, range: (5.0, 9.0) },
+        ];
+        let backend = CurandBackend::new();
+
+        let qs = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let mut gs = backend.create_generator(EngineKind::Philox4x32x10, 77).unwrap();
+        let usm_s = qs.malloc_device::<f32>(256);
+        let serial =
+            generate_batch_usm(&qs, gs.as_mut(), &members, 200, &usm_s, None, &[]).unwrap();
+
+        for (tile_size, width) in [(37usize, 2usize), (64, 3), (50, 4), (7, 8), (1000, 4)] {
+            let qt = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+            let mut gt = backend.create_generator(EngineKind::Philox4x32x10, 77).unwrap();
+            let usm_t = qt.malloc_device::<f32>(256);
+            let exec = TileExecutor::new(width);
+            let tiled = generate_batch_usm_tiled(
+                &qt,
+                gt.as_mut(),
+                &members,
+                200,
+                &usm_t,
+                None,
+                &[],
+                TilingSpec::new(tile_size, width),
+                &exec,
+            )
+            .unwrap();
+            for (i, (m, payload)) in members.iter().zip(&tiled.payloads).enumerate() {
+                let got = payload.as_ref().unwrap();
+                assert_eq!(
+                    got,
+                    serial.payloads[i].as_ref().unwrap(),
+                    "tile {tile_size} width {width} member {i} diverged from serial"
+                );
+                let mut want = vec![0f32; m.n];
+                let mut e = PhiloxEngine::with_offset(77, m.stream_offset);
+                e.fill_uniform_f32(&mut want);
+                if m.range != (0.0, 1.0) {
+                    range_transform::range_transform_inplace(&mut want, m.range.0, m.range.1);
+                }
+                assert_eq!(got, &want, "tile {tile_size} width {width} member {i} vs dedicated");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_batch_records_one_command_per_tile_with_disjoint_ranges() {
+        let queue = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let backend = CurandBackend::new();
+        let mut gen = backend.create_generator(EngineKind::Philox4x32x10, 77).unwrap();
+        let members = [
+            BatchSlice { buffer_offset: 0, stream_offset: 500, n: 33, range: (0.0, 1.0) },
+            BatchSlice { buffer_offset: 33, stream_offset: 0, n: 101, range: (-2.0, 2.0) },
+            BatchSlice { buffer_offset: 134, stream_offset: 7_777, n: 66, range: (5.0, 9.0) },
+        ];
+        let usm = queue.malloc_device::<f32>(256);
+        let spec = TilingSpec::new(64, 4); // tiles (0,64) (64,64) (128,64) (192,8)
+        let exec = TileExecutor::new(4);
+        let batch = generate_batch_usm_tiled(
+            &queue, gen.as_mut(), &members, 200, &usm, None, &[], spec, &exec,
+        )
+        .unwrap();
+
+        let records = queue.records();
+        let count = |c: CommandClass| records.iter().filter(|r| r.class == c).count();
+        // One generate per tile; every tile holds a ranged segment here,
+        // so one transform per tile too; one D2H per member.
+        assert_eq!(count(CommandClass::Generate), 4);
+        assert_eq!(count(CommandClass::Transform), 4);
+        assert_eq!(count(CommandClass::TransferD2H), members.len());
+        assert_eq!(batch.tiles.len(), 8); // 4 generate + 4 transform timings
+
+        // Every kernel declares its tile's element range.
+        let tiles = spec.tiles(200);
+        let gens: Vec<_> =
+            records.iter().filter(|r| r.class == CommandClass::Generate).collect();
+        for (r, &(start, len)) in gens.iter().zip(&tiles) {
+            assert_eq!(r.accesses[0].range, Some((start, len)), "generate {}", r.name);
+        }
+        // Each transform depends on exactly its own tile's generate.
+        let by_id: std::collections::HashMap<u64, &crate::sycl::CommandRecord> =
+            records.iter().map(|r| (r.id, r)).collect();
+        for r in records.iter().filter(|r| r.class == CommandClass::Transform) {
+            assert_eq!(r.dep_ids.len(), 1, "transform {}", r.name);
+            let dep = by_id[&r.dep_ids[0]];
+            assert_eq!(dep.class, CommandClass::Generate);
+            assert_eq!(dep.accesses[0].range, r.accesses[0].range);
+            assert!(r.virt_start_ns >= dep.virt_end_ns);
+        }
+        // Each member's D2H depends on exactly the tiles it overlaps:
+        // member 0 spans tile 0; member 1 tiles 0-2; member 2 tiles 2-3.
+        let d2h: Vec<_> =
+            records.iter().filter(|r| r.class == CommandClass::TransferD2H).collect();
+        assert_eq!(
+            d2h.iter().map(|r| r.dep_ids.len()).collect::<Vec<_>>(),
+            vec![1, 3, 2]
+        );
+
+        // The per-tile ranges PROVE the nd-range race-free.
+        let report = crate::sycl::analyze_hazards(&records);
+        assert!(report.is_clean(), "tiled flush not proven race-free: {:?}", report.hazards);
+    }
+
+    #[test]
+    fn tiled_batch_falls_back_to_serial_when_it_must() {
+        let members =
+            [BatchSlice { buffer_offset: 0, stream_offset: 9, n: 150, range: (0.0, 1.0) }];
+        let backend = CurandBackend::new();
+        let exec = TileExecutor::new(4);
+
+        // Serial spec → the one-host-task shape.
+        let q1 = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let mut g1 = backend.create_generator(EngineKind::Philox4x32x10, 3).unwrap();
+        let usm1 = q1.malloc_device::<f32>(150);
+        let b1 = generate_batch_usm_tiled(
+            &q1, g1.as_mut(), &members, 150, &usm1, None, &[], TilingSpec::serial(), &exec,
+        )
+        .unwrap();
+        let gens = |q: &Queue| {
+            q.records().iter().filter(|r| r.class == CommandClass::Generate).count()
+        };
+        assert_eq!(gens(&q1), 1);
+        assert!(b1.tiles.is_empty());
+
+        // Launch fits one tile → serial.
+        let q2 = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let mut g2 = backend.create_generator(EngineKind::Philox4x32x10, 3).unwrap();
+        let usm2 = q2.malloc_device::<f32>(150);
+        generate_batch_usm_tiled(
+            &q2, g2.as_mut(), &members, 150, &usm2, None, &[], TilingSpec::new(4096, 4), &exec,
+        )
+        .unwrap();
+        assert_eq!(gens(&q2), 1);
+
+        // Engine without an absolute in-place seek (MT19937) → serial,
+        // same payload as the untiled call.
+        let q3 = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let mut g3 = backend.create_generator(EngineKind::Mt19937, 3).unwrap();
+        let usm3 = q3.malloc_device::<f32>(150);
+        let b3 = generate_batch_usm_tiled(
+            &q3, g3.as_mut(), &members, 150, &usm3, None, &[], TilingSpec::new(32, 4), &exec,
+        )
+        .unwrap();
+        assert_eq!(gens(&q3), 1);
+        let q4 = Queue::new(PlatformId::A100, SyclRuntimeProfile::Dpcpp);
+        let mut g4 = backend.create_generator(EngineKind::Mt19937, 3).unwrap();
+        let usm4 = q4.malloc_device::<f32>(150);
+        let b4 =
+            generate_batch_usm(&q4, g4.as_mut(), &members, 150, &usm4, None, &[]).unwrap();
+        assert_eq!(
+            b3.payloads[0].as_ref().unwrap(),
+            b4.payloads[0].as_ref().unwrap()
+        );
     }
 
     #[test]

@@ -13,8 +13,8 @@ pub mod range_transform;
 pub use distributions::{Distribution, GaussianMethod, UniformMethod};
 pub use engines::{Engine, EngineKind, PhiloxEngine};
 pub use generate::{
-    generate_batch_usm, generate_buffer, generate_usm, parse_distribution, BatchSlice,
-    GenerateApi, UsmBatch,
+    generate_batch_usm, generate_batch_usm_tiled, generate_buffer, generate_usm,
+    parse_distribution, BatchSlice, GenerateApi, UsmBatch,
 };
 pub use range_transform::range_transform_inplace;
 

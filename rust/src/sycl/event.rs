@@ -87,29 +87,62 @@ pub struct Access {
     /// Arena-lease generation, when the allocation was checked out of a
     /// [`crate::sycl::UsmArena`]; `None` for untracked allocations.
     pub generation: Option<u64>,
+    /// Element sub-range `(start, len)` the command touched, when known;
+    /// `None` means the whole allocation (the conservative default).
+    /// Per-tile work items declare their tile's range so the hazard
+    /// analyzer can prove tile disjointness instead of flagging every
+    /// unordered tile pair as a race.
+    pub range: Option<(usize, usize)>,
 }
 
 impl Access {
     /// Buffer-path access (generation-free).
     pub fn buffer(id: u64, mode: AccessMode) -> Access {
-        Access { kind: AccessKind::Buffer, id, mode, generation: None }
+        Access { kind: AccessKind::Buffer, id, mode, generation: None, range: None }
     }
 
     /// USM access outside any arena lease.
     pub fn usm(id: u64, mode: AccessMode) -> Access {
-        Access { kind: AccessKind::Usm, id, mode, generation: None }
+        Access { kind: AccessKind::Usm, id, mode, generation: None, range: None }
     }
 
     /// USM access under an arena lease of known generation (pass the
     /// lease's [`crate::sycl::UsmLease::generation`]); `None` degrades to
     /// [`Access::usm`].
     pub fn usm_leased(id: u64, mode: AccessMode, generation: Option<u64>) -> Access {
-        Access { kind: AccessKind::Usm, id, mode, generation }
+        Access { kind: AccessKind::Usm, id, mode, generation, range: None }
     }
 
     /// Host reply-slice write of a D2H copy.
     pub fn host_slice(id: u64) -> Access {
-        Access { kind: AccessKind::HostSlice, id, mode: AccessMode::Write, generation: None }
+        Access {
+            kind: AccessKind::HostSlice,
+            id,
+            mode: AccessMode::Write,
+            generation: None,
+            range: None,
+        }
+    }
+
+    /// Narrow this access to the element sub-range `[start, start + len)`.
+    /// Two accesses to the same allocation with disjoint declared ranges
+    /// never conflict; an access without a range conflicts with every
+    /// range (whole-allocation semantics are the safe default).
+    pub fn with_range(mut self, start: usize, len: usize) -> Access {
+        self.range = Some((start, len));
+        self
+    }
+
+    /// Whether this access may overlap `other` element-wise: true unless
+    /// both declare ranges and the ranges are disjoint. Zero-length
+    /// ranges touch nothing and overlap nothing.
+    pub fn ranges_may_overlap(&self, other: &Access) -> bool {
+        match (self.range, other.range) {
+            (Some((a, alen)), Some((b, blen))) => {
+                a < b.saturating_add(blen) && b < a.saturating_add(alen) && alen > 0 && blen > 0
+            }
+            _ => true,
+        }
     }
 }
 

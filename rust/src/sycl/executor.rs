@@ -1,0 +1,278 @@
+//! Worker-local kernel executor: nd-range tiled execution (DESIGN.md S16).
+//!
+//! The paper's near-native numbers come from the device running generation
+//! as a wide data-parallel kernel; the serving path, by contrast, executed
+//! each flush as one serial host task, capping a shard at a single core.
+//! [`TileExecutor`] closes that gap on the host side: a submitted command
+//! is executed as an *nd-range of independent tiles* — disjoint
+//! `&mut` sub-slices of the launch buffer, distributed over a team of
+//! worker threads — exactly the shape a `parallel_for` gives the device.
+//!
+//! Tile independence is what Philox buys us: `seek`/`skip_ahead` are O(1)
+//! counter arithmetic, so a tile starting at global stream position `p`
+//! generates exactly the numbers the serial pass would have written there
+//! — tiled output is bit-identical to serial for every tile size and team
+//! width (pinned by property tests in `rng::generate` and
+//! `tests/coordinator.rs`).
+//!
+//! The team is scoped, not pooled: tiles borrow the caller's buffer, so
+//! workers are spawned per nd-range via `std::thread::scope` (the only
+//! borrow-safe structure without external thread-pool dependencies) and
+//! tiles are dealt round-robin — a deterministic static partition; tiles
+//! are near-uniform by construction, so work stealing would buy noise, not
+//! throughput. Each tile's real wall time is measured and returned so the
+//! queue can record one command per tile (with a per-tile [`super::Access`]
+//! range — the hazard analyzer proves tile disjointness instead of going
+//! blind) and telemetry can expose the per-tile distribution.
+
+use std::time::Instant;
+
+/// Tiling knobs for one nd-range execution: how large each tile is and how
+/// many team threads execute them. Both are live-retunable through the
+/// pool's `TuningHandle` (`tile_size` / `team_width`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilingSpec {
+    /// Elements per tile; `0` disables tiling (serial execution).
+    pub tile_size: usize,
+    /// Worker threads executing tiles; `<= 1` disables tiling.
+    pub team_width: usize,
+}
+
+impl TilingSpec {
+    /// The serial configuration: one tile, one thread — the default shape
+    /// every existing single-submission invariant is pinned against.
+    pub fn serial() -> TilingSpec {
+        TilingSpec { tile_size: 0, team_width: 1 }
+    }
+
+    /// Tiling with `tile_size`-element tiles on a `team_width`-thread team
+    /// (clamped to at least one thread).
+    pub fn new(tile_size: usize, team_width: usize) -> TilingSpec {
+        TilingSpec { tile_size, team_width: team_width.max(1) }
+    }
+
+    /// Whether this spec degenerates to the serial path.
+    pub fn is_serial(&self) -> bool {
+        self.tile_size == 0 || self.team_width <= 1
+    }
+
+    /// Tile ranges `(start, len)` covering `[0, n)` in order. Serial specs
+    /// (and launches that fit one tile) yield a single tile; `n == 0`
+    /// yields none.
+    pub fn tiles(&self, n: usize) -> Vec<(usize, usize)> {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.is_serial() || n <= self.tile_size {
+            return vec![(0, n)];
+        }
+        let mut out = Vec::with_capacity(n.div_ceil(self.tile_size));
+        let mut start = 0;
+        while start < n {
+            let len = self.tile_size.min(n - start);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+}
+
+/// Real wall time of one executed tile, in nd-range order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileTiming {
+    /// Tile index within the nd-range.
+    pub tile: usize,
+    /// First element of the tile in the launch buffer.
+    pub start: usize,
+    /// Tile length in elements.
+    pub len: usize,
+    /// Real wall time the tile's closure took on its team thread.
+    pub wall_ns: u64,
+}
+
+/// The worker-local executor: runs tile closures over disjoint sub-slices
+/// of a launch buffer on a team of scoped threads (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct TileExecutor {
+    team_width: usize,
+}
+
+impl TileExecutor {
+    /// Executor with a team of `team_width` threads (clamped to >= 1).
+    pub fn new(team_width: usize) -> TileExecutor {
+        TileExecutor { team_width: team_width.max(1) }
+    }
+
+    /// Configured team width.
+    pub fn team_width(&self) -> usize {
+        self.team_width
+    }
+
+    /// Execute `work` once per tile over disjoint sub-slices of `data`, as
+    /// an nd-range: tile `i` receives `(i, start_i, &mut data[start_i ..
+    /// start_i + len_i])`. Tiles must be ascending and non-overlapping
+    /// (the shape [`TilingSpec::tiles`] produces); elements not covered by
+    /// any tile are left untouched. Returns per-tile wall timings in tile
+    /// order. With one tile or a one-thread team the calling thread runs
+    /// everything inline — no spawn cost on the serial path.
+    pub fn run<T, W>(&self, data: &mut [T], tiles: &[(usize, usize)], work: W) -> Vec<TileTiming>
+    where
+        T: Send,
+        W: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        // Carve the buffer into per-tile disjoint `&mut` slices up front —
+        // the borrow-checker-visible proof that tiles cannot race, the
+        // same fact the per-tile `Access` ranges hand the hazard analyzer.
+        let mut slices: Vec<(usize, usize, &mut [T])> = Vec::with_capacity(tiles.len());
+        let mut rest = data;
+        let mut consumed = 0usize;
+        for (i, &(start, len)) in tiles.iter().enumerate() {
+            assert!(start >= consumed, "tiles must be ascending and non-overlapping");
+            let (_, tail) = rest.split_at_mut(start - consumed);
+            let (tile, tail) = tail.split_at_mut(len);
+            slices.push((i, start, tile));
+            rest = tail;
+            consumed = start + len;
+        }
+
+        let timed = |(i, start, slice): (usize, usize, &mut [T]), work: &W| {
+            let len = slice.len();
+            let t0 = Instant::now();
+            work(i, start, slice);
+            TileTiming {
+                tile: i,
+                start,
+                len,
+                wall_ns: t0.elapsed().as_nanos() as u64,
+            }
+        };
+
+        if self.team_width <= 1 || slices.len() <= 1 {
+            return slices.into_iter().map(|s| timed(s, &work)).collect();
+        }
+
+        // Deterministic static partition: tile i goes to team member
+        // i % width. Tiles are near-uniform (one partial tail at most),
+        // so dynamic stealing would add nondeterminism for no throughput.
+        let width = self.team_width.min(slices.len());
+        let mut per_member: Vec<Vec<(usize, usize, &mut [T])>> =
+            (0..width).map(|_| Vec::new()).collect();
+        for slice in slices {
+            let member = slice.0 % width;
+            per_member[member].push(slice);
+        }
+
+        let work = &work;
+        let mut timings: Vec<TileTiming> = std::thread::scope(|scope| {
+            let handles: Vec<_> = per_member
+                .into_iter()
+                .map(|chunk| {
+                    scope.spawn(move || {
+                        chunk.into_iter().map(|s| timed(s, work)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("tile team thread panicked"))
+                .collect()
+        });
+        timings.sort_by_key(|t| t.tile);
+        timings
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_spec_yields_one_tile() {
+        let spec = TilingSpec::serial();
+        assert!(spec.is_serial());
+        assert_eq!(spec.tiles(1000), vec![(0, 1000)]);
+        assert_eq!(spec.tiles(0), Vec::<(usize, usize)>::new());
+        // team_width <= 1 is serial regardless of tile size.
+        assert!(TilingSpec::new(64, 1).is_serial());
+        // tile_size == 0 is serial regardless of team width.
+        assert!(TilingSpec::new(0, 8).is_serial());
+    }
+
+    #[test]
+    fn tiles_partition_the_range_exactly() {
+        let spec = TilingSpec::new(100, 4);
+        for n in [1usize, 99, 100, 101, 250, 400, 1001] {
+            let tiles = spec.tiles(n);
+            let mut expect_start = 0usize;
+            for &(start, len) in &tiles {
+                assert_eq!(start, expect_start);
+                assert!(len > 0 && len <= 100);
+                expect_start += len;
+            }
+            assert_eq!(expect_start, n, "tiles must cover [0, {n}) exactly");
+        }
+        // A launch that fits one tile is a single tile.
+        assert_eq!(spec.tiles(100), vec![(0, 100)]);
+        assert_eq!(spec.tiles(101).len(), 2);
+    }
+
+    #[test]
+    fn run_writes_every_tile_through_its_own_slice() {
+        let spec = TilingSpec::new(7, 3);
+        let mut data = vec![0u64; 100];
+        let tiles = spec.tiles(data.len());
+        let exec = TileExecutor::new(3);
+        let timings = exec.run(&mut data, &tiles, |tile, start, slice| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = (tile as u64) << 32 | (start + k) as u64;
+            }
+        });
+        assert_eq!(timings.len(), tiles.len());
+        for (i, t) in timings.iter().enumerate() {
+            assert_eq!(t.tile, i);
+            assert_eq!((t.start, t.len), tiles[i]);
+        }
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!((v & 0xFFFF_FFFF) as usize, k, "element {k} written by wrong index");
+            assert_eq!((v >> 32) as usize, k / 7, "element {k} written by wrong tile");
+        }
+    }
+
+    #[test]
+    fn parallel_run_matches_serial_run_exactly() {
+        // The executor-level bit-identity statement: any team width
+        // produces the same buffer contents as the serial pass.
+        use crate::rng::Engine;
+        let n = 10_000usize;
+        let fill = |_tile: usize, start: usize, slice: &mut [u32]| {
+            let mut e = crate::rng::PhiloxEngine::new(42);
+            e.seek(start as u64);
+            e.fill_u32(slice);
+        };
+        let spec = TilingSpec::new(257, 4);
+        let tiles = spec.tiles(n);
+        let mut serial = vec![0u32; n];
+        TileExecutor::new(1).run(&mut serial, &[(0, n)], fill);
+        for width in [2usize, 3, 4, 8] {
+            let mut tiled = vec![0u32; n];
+            let timings = TileExecutor::new(width).run(&mut tiled, &tiles, fill);
+            assert_eq!(tiled, serial, "width {width} diverged");
+            assert_eq!(timings.len(), tiles.len());
+        }
+    }
+
+    #[test]
+    fn gap_elements_are_left_untouched() {
+        let mut data = vec![7u8; 10];
+        let exec = TileExecutor::new(2);
+        exec.run(&mut data, &[(2, 3), (7, 2)], |_, _, slice| slice.fill(0));
+        assert_eq!(data, [7, 7, 0, 0, 0, 7, 7, 0, 0, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn overlapping_tiles_are_rejected() {
+        let mut data = vec![0u8; 10];
+        TileExecutor::new(2).run(&mut data, &[(0, 5), (3, 5)], |_, _, _| {});
+    }
+}

@@ -327,6 +327,14 @@ pub fn analyze_hazards(records: &[CommandRecord]) -> HazardReport {
                 if !cross_gen && !a.mode.writes() && !b.mode.writes() {
                     continue; // concurrent same-generation reads are fine
                 }
+                if !cross_gen && !a.ranges_may_overlap(&b) {
+                    // Both accesses declared element ranges and they are
+                    // disjoint: independent tiles of one nd-range never
+                    // conflict. Generation semantics stay whole-allocation
+                    // (a recycle invalidates every range), so the skip
+                    // only applies within one generation.
+                    continue;
+                }
                 let (ra, rb) = (recs[i], recs[j]);
                 let where_ = format!(
                     "command {} (`{}`) vs command {} (`{}`) on {} {}",
@@ -518,6 +526,99 @@ mod tests {
         assert_eq!(report.hazards.len(), 1);
         assert_eq!(report.hazards[0].kind, HazardKind::DanglingDep);
         assert_eq!(report.hazards[0].second, 999);
+    }
+
+    #[test]
+    fn disjoint_ranges_do_not_conflict() {
+        // Two unordered writers of the same allocation, but each declares
+        // its own tile range: [0, 64) vs [64, 64) — provably disjoint.
+        let records = [
+            rec(0, &[], vec![Access::usm(1, AccessMode::Write).with_range(0, 64)]),
+            rec(1, &[], vec![Access::usm(1, AccessMode::Write).with_range(64, 64)]),
+        ];
+        assert!(analyze_hazards(&records).is_clean());
+        // Overlapping ranges still conflict ([0, 64) vs [63, 64)).
+        let overlapping = [
+            rec(0, &[], vec![Access::usm(1, AccessMode::Write).with_range(0, 64)]),
+            rec(1, &[], vec![Access::usm(1, AccessMode::Write).with_range(63, 64)]),
+        ];
+        let report = analyze_hazards(&overlapping);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::Waw);
+        // A rangeless access means "whole allocation": conflicts with any
+        // ranged access (the conservative default).
+        let mixed = [
+            rec(0, &[], vec![Access::usm(1, AccessMode::Write).with_range(0, 64)]),
+            rec(1, &[], vec![Access::usm(1, AccessMode::Write)]),
+        ];
+        assert_eq!(analyze_hazards(&mixed).hazards.len(), 1);
+    }
+
+    #[test]
+    fn tiled_window_with_ranged_d2h_readers_is_clean() {
+        // The executor's flush shape: per-tile generate writes with
+        // disjoint ranges, per-tile transforms chained tile-to-tile, a
+        // D2H read spanning two tiles that depends on both transforms.
+        let w = |start: usize| {
+            Access::usm_leased(9, AccessMode::Write, Some(2)).with_range(start, 100)
+        };
+        let t = |start: usize| {
+            Access::usm_leased(9, AccessMode::ReadWrite, Some(2)).with_range(start, 100)
+        };
+        let mut d2h = rec(
+            4,
+            &[2, 3],
+            vec![
+                Access::usm_leased(9, AccessMode::Read, Some(2)).with_range(50, 150),
+                Access::host_slice(77),
+            ],
+        );
+        d2h.class = CommandClass::TransferD2H;
+        let records = [
+            rec(0, &[], vec![w(0)]),
+            rec(1, &[], vec![w(100)]),
+            rec(2, &[0], vec![t(0)]),
+            rec(3, &[1], vec![t(100)]),
+            d2h,
+        ];
+        assert!(analyze_hazards(&records).is_clean());
+        // Severing one transform edge exposes the cross-tile D2H race.
+        let mut broken = rec(
+            4,
+            &[2],
+            vec![
+                Access::usm_leased(9, AccessMode::Read, Some(2)).with_range(50, 150),
+                Access::host_slice(77),
+            ],
+        );
+        broken.class = CommandClass::TransferD2H;
+        let records = [
+            rec(0, &[], vec![w(0)]),
+            rec(1, &[], vec![w(100)]),
+            rec(2, &[0], vec![t(0)]),
+            rec(3, &[1], vec![t(100)]),
+            broken,
+        ];
+        let report = analyze_hazards(&records);
+        assert!(!report.is_clean());
+        assert!(report.count_of(HazardKind::UnorderedD2h) >= 1);
+    }
+
+    #[test]
+    fn cross_generation_ranges_never_prove_disjointness() {
+        // Disjoint ranges under *different* lease generations still
+        // require ordering: the recycle invalidated the whole allocation.
+        let records = [
+            rec(0, &[], vec![
+                Access::usm_leased(5, AccessMode::Write, Some(0)).with_range(0, 64),
+            ]),
+            rec(1, &[], vec![
+                Access::usm_leased(5, AccessMode::Write, Some(1)).with_range(64, 64),
+            ]),
+        ];
+        let report = analyze_hazards(&records);
+        assert_eq!(report.hazards.len(), 1);
+        assert_eq!(report.hazards[0].kind, HazardKind::LeaseReuse);
     }
 
     #[test]

@@ -33,6 +33,7 @@ mod arena;
 mod buffer;
 mod dag;
 mod event;
+mod executor;
 pub mod hazard;
 mod interop;
 mod profile;
@@ -43,6 +44,7 @@ pub use arena::{ArenaStats, UsmArena, UsmLease};
 pub use buffer::{AccessMode, Buffer};
 pub use dag::{Dag, DagStats};
 pub use event::{Access, AccessKind, CommandClass, CommandRecord, Event};
+pub use executor::{TileExecutor, TileTiming, TilingSpec};
 pub use hazard::{analyze_hazards, Hazard, HazardKind, HazardReport};
 pub use interop::InteropHandle;
 pub use profile::SyclRuntimeProfile;

@@ -315,6 +315,31 @@ impl Queue {
         self.record_command(&mut st, name.into(), class, cost, deps, accesses, wall_ns)
     }
 
+    /// Record a USM-path command whose body was already executed by the
+    /// tile executor ([`super::TileExecutor`]): the nd-range runs the tile
+    /// closures on its thread team (measuring real wall time per tile),
+    /// then each tile is recorded as its own command — with its own
+    /// dependency list, its own [`Access`] range, and the measured
+    /// `wall_ns` — so the DAG, the hazard analyzer, and telemetry see the
+    /// per-tile structure. Identical submission accounting to
+    /// [`Queue::submit_usm`]; only the closure execution has moved off the
+    /// submitting thread.
+    pub fn submit_executed(
+        &self,
+        name: impl Into<String>,
+        class: CommandClass,
+        cost: CommandCost,
+        deps: &[Event],
+        accesses: Vec<Access>,
+        wall_ns: u64,
+    ) -> Event {
+        let mut st = self.state.lock().unwrap();
+        st.host_now_ns += self.profile.submit_overhead_ns()
+            + self.profile.usm_submit_overhead_ns(&self.spec)
+            + self.profile.usm_dep_wait_ns() * deps.len() as u64;
+        self.record_command(&mut st, name.into(), class, cost, deps, accesses, wall_ns)
+    }
+
     /// Allocate device USM (`malloc_device`) — a blocking host call.
     pub fn malloc_device<T: Clone + Default + Send + 'static>(&self, n: usize) -> UsmBuffer<T> {
         let mut st = self.state.lock().unwrap();
@@ -387,10 +412,12 @@ impl Queue {
         let bytes = (len * std::mem::size_of::<T>()) as u64;
         let mut st = self.state.lock().unwrap();
         st.host_now_ns += self.profile.usm_dep_wait_ns() * deps.len() as u64;
-        // The copy reads the USM source and writes a per-command host reply
+        // The copy reads exactly the requested element range of the USM
+        // source (declared, so tiled flushes can prove it disjoint from
+        // non-overlapping tiles) and writes a per-command host reply
         // slice (the next command id doubles as a unique slice id).
         let accesses = vec![
-            Access::usm(usm.id(), AccessMode::Read),
+            Access::usm(usm.id(), AccessMode::Read).with_range(offset, len),
             Access::host_slice(st.next_id),
         ];
         let ev = self.record_command(

@@ -6,11 +6,12 @@
 //! pool workers with relaxed atomics (nothing on the request hot path
 //! takes a lock or allocates), and read through cheap [`snapshot`]
 //! copies that serialize through `jsonlite` (schema
-//! `portarng-telemetry-v4`: per-command-class virtual timings,
+//! `portarng-telemetry-v5`: per-command-class virtual timings,
 //! worker-arena counters, per-shard DAG-hazard counters
-//! [`HazardCounters`], and the resilience layer's fault / respawn /
-//! retry / shed / deadline counters [`ResilienceTotals`]; v1–v3
-//! superseded). The
+//! [`HazardCounters`], the resilience layer's fault / respawn /
+//! retry / shed / deadline counters [`ResilienceTotals`], and the tile
+//! executor's per-shard `tiles` / `pipeline` blocks ([`TileCounters`] /
+//! [`PipelineCounters`], DESIGN.md S16); v1–v4 superseded). The
 //! [`autotune`](crate::autotune) controller
 //! closes the loop by turning snapshot deltas into
 //! [`DispatchPolicy`](crate::coordinator::DispatchPolicy) retunes.
@@ -23,6 +24,6 @@ mod registry;
 pub use histogram::{HistogramSnapshot, Log2Histogram, BUCKETS};
 pub use registry::{
     ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, HazardCounters, Lane,
-    ResilienceTotals, ShardSnapshot, ShardTelemetry, TelemetryRegistry, TelemetrySnapshot,
-    TELEMETRY_SCHEMA,
+    PipelineCounters, ResilienceTotals, ShardSnapshot, ShardTelemetry, TelemetryRegistry,
+    TelemetrySnapshot, TileCounters, TELEMETRY_SCHEMA,
 };

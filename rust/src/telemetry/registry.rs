@@ -21,8 +21,12 @@
 //! layer's counters (DESIGN.md S15): per-shard `faults_injected`,
 //! `respawns` and `deadline_exceeded`, plus the pool-level
 //! `requests_retried` / `requests_shed` ingress counters — all zero on a
-//! fault-free run, which is itself a chaos-soak gate. v1/v2/v3 are
-//! superseded.
+//! fault-free run, which is itself a chaos-soak gate. v5 adds the tile
+//! executor's counters (DESIGN.md S16): the per-shard `tiles` block
+//! ([`TileCounters`]: nd-range tiles executed + their real wall time) and
+//! the `pipeline` block ([`PipelineCounters`]: cross-flush pipelining
+//! occupancy — tiled flushes, how many overlapped the previous flush, and
+//! the summed virtual overlap). v1/v2/v3/v4 are superseded.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,9 +41,9 @@ use super::histogram::{HistogramSnapshot, Log2Histogram};
 
 /// Telemetry snapshot schema identifier (bump on breaking changes).
 /// v1 (no per-command-class timings, no arena counters), v2 (no hazard
-/// counters, no arena `leaked`) and v3 (no resilience counters) are
-/// superseded.
-pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v4";
+/// counters, no arena `leaked`), v3 (no resilience counters) and v4 (no
+/// tile-executor / pipeline counters) are superseded.
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v5";
 
 /// Command classes the serving path times. Mirrors
 /// `sycl::CommandClass` for the classes the pool's flushes issue —
@@ -115,6 +119,100 @@ impl CommandTiming {
                 .ok_or_else(|| Error::Json(format!("command timing missing `{key}`")))
         };
         Ok(CommandTiming { cmds: num("cmds")?, virt_ns: num("virt_ns")? })
+    }
+}
+
+/// Tile-executor counters for one shard (DESIGN.md S16): how many
+/// nd-range tiles its flushes executed (generate + transform work items)
+/// and the summed *real* wall time the tile closures took on the team
+/// threads — unlike [`CommandTiming`] these are measured, not modelled,
+/// which is what makes the per-tile distribution an honest occupancy
+/// signal for the `tile_size`/`team_width` autotune knobs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TileCounters {
+    /// Tiles executed across all flushes.
+    pub tiles: u64,
+    /// Summed real wall time of the tile closures, ns.
+    pub wall_ns: u64,
+}
+
+impl TileCounters {
+    fn merged(self, other: TileCounters) -> TileCounters {
+        TileCounters { tiles: self.tiles + other.tiles, wall_ns: self.wall_ns + other.wall_ns }
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("tiles".into(), Value::Number(self.tiles as f64));
+        m.insert("wall_ns".into(), Value::Number(self.wall_ns as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<TileCounters> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("tile counters missing `{key}`")))
+        };
+        Ok(TileCounters { tiles: num("tiles")?, wall_ns: num("wall_ns")? })
+    }
+}
+
+/// Cross-flush pipelining occupancy for one shard (DESIGN.md S16). A
+/// pipelined (tiled, double-buffered) flush *overlaps* the previous one
+/// when its first generate command starts on the virtual clock before the
+/// previous flush's last command retires — exactly what the deferred
+/// lease recycle buys. All-zero on a serial shard.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineCounters {
+    /// Pipelined (tiled) flushes issued.
+    pub flushes: u64,
+    /// Flushes whose generate overlapped the previous flush.
+    pub overlapped: u64,
+    /// Summed virtual overlap across those flushes, ns.
+    pub overlap_ns: u64,
+}
+
+impl PipelineCounters {
+    /// Fraction of pipelined flushes that actually overlapped their
+    /// predecessor (0 when none were issued).
+    pub fn occupancy(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.overlapped as f64 / self.flushes as f64
+        }
+    }
+
+    fn merged(self, other: PipelineCounters) -> PipelineCounters {
+        PipelineCounters {
+            flushes: self.flushes + other.flushes,
+            overlapped: self.overlapped + other.overlapped,
+            overlap_ns: self.overlap_ns + other.overlap_ns,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("flushes".into(), Value::Number(self.flushes as f64));
+        m.insert("overlapped".into(), Value::Number(self.overlapped as f64));
+        m.insert("overlap_ns".into(), Value::Number(self.overlap_ns as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<PipelineCounters> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("pipeline counters missing `{key}`")))
+        };
+        Ok(PipelineCounters {
+            flushes: num("flushes")?,
+            overlapped: num("overlapped")?,
+            overlap_ns: num("overlap_ns")?,
+        })
     }
 }
 
@@ -371,6 +469,13 @@ pub struct ShardTelemetry {
     /// Per-command-class counts/virtual-ns, indexed by `CommandKind`.
     command_cmds: [AtomicU64; 4],
     command_virt_ns: [AtomicU64; 4],
+    /// Tile-executor work items and their measured wall time.
+    tiles: AtomicU64,
+    tile_wall_ns: AtomicU64,
+    /// Cross-flush pipelining occupancy.
+    pipeline_flushes: AtomicU64,
+    pipeline_overlapped: AtomicU64,
+    pipeline_overlap_ns: AtomicU64,
     /// Latest worker-arena counters, published whole once per flush — a
     /// mutex (not the request path: one uncontended lock per flush) so a
     /// concurrent snapshot can never observe counters torn across two
@@ -401,6 +506,11 @@ impl ShardTelemetry {
             request_n: Log2Histogram::new(),
             command_cmds: std::array::from_fn(|_| AtomicU64::new(0)),
             command_virt_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            tiles: AtomicU64::new(0),
+            tile_wall_ns: AtomicU64::new(0),
+            pipeline_flushes: AtomicU64::new(0),
+            pipeline_overlapped: AtomicU64::new(0),
+            pipeline_overlap_ns: AtomicU64::new(0),
             arena: std::sync::Mutex::new(ArenaCounters::default()),
             hazards: std::sync::Mutex::new(HazardCounters::default()),
         }
@@ -460,6 +570,24 @@ impl ShardTelemetry {
         self.command_virt_ns[kind.index()].fetch_add(virt_ns, Ordering::Relaxed);
     }
 
+    /// Fold one flush's tile-executor work in: `tiles` nd-range tiles
+    /// whose closures took `wall_ns` of summed real time on the team.
+    pub fn record_tiles(&self, tiles: u64, wall_ns: u64) {
+        self.tiles.fetch_add(tiles, Ordering::Relaxed);
+        self.tile_wall_ns.fetch_add(wall_ns, Ordering::Relaxed);
+    }
+
+    /// One pipelined (tiled, double-buffered) flush; `overlap_ns` is how
+    /// far its first generate started before the previous flush's last
+    /// command retired on the virtual clock (0 = no overlap achieved).
+    pub fn record_pipeline_flush(&self, overlap_ns: u64) {
+        self.pipeline_flushes.fetch_add(1, Ordering::Relaxed);
+        if overlap_ns > 0 {
+            self.pipeline_overlapped.fetch_add(1, Ordering::Relaxed);
+            self.pipeline_overlap_ns.fetch_add(overlap_ns, Ordering::Relaxed);
+        }
+    }
+
     /// Publish the worker arena's current counters (absolute values — the
     /// worker owns the arena and pushes its stats once per flush). The
     /// whole set swaps atomically, so snapshots never mix two flushes.
@@ -502,6 +630,15 @@ impl ShardTelemetry {
             transform: timing(CommandKind::Transform),
             d2h: timing(CommandKind::TransferD2H),
             other: timing(CommandKind::Other),
+            tiles: TileCounters {
+                tiles: self.tiles.load(Ordering::Relaxed),
+                wall_ns: self.tile_wall_ns.load(Ordering::Relaxed),
+            },
+            pipeline: PipelineCounters {
+                flushes: self.pipeline_flushes.load(Ordering::Relaxed),
+                overlapped: self.pipeline_overlapped.load(Ordering::Relaxed),
+                overlap_ns: self.pipeline_overlap_ns.load(Ordering::Relaxed),
+            },
             arena,
             hazards,
         }
@@ -630,6 +767,11 @@ pub struct ShardSnapshot {
     pub d2h: CommandTiming,
     /// Everything else on the worker queue (mallocs, setup; virtual ns).
     pub other: CommandTiming,
+    /// Tile-executor work items and their measured wall time (all-zero on
+    /// a serial shard).
+    pub tiles: TileCounters,
+    /// Cross-flush pipelining occupancy (all-zero on a serial shard).
+    pub pipeline: PipelineCounters,
     /// Worker USM-arena counters at snapshot time.
     pub arena: ArenaCounters,
     /// Accumulated hazard-analysis results for this shard's flushes.
@@ -662,6 +804,8 @@ impl ShardSnapshot {
         commands.insert("d2h".into(), self.d2h.to_json());
         commands.insert("other".into(), self.other.to_json());
         m.insert("commands".into(), Value::Object(commands));
+        m.insert("tiles".into(), self.tiles.to_json());
+        m.insert("pipeline".into(), self.pipeline.to_json());
         m.insert("arena".into(), self.arena.to_json());
         m.insert("hazards".into(), self.hazards.to_json());
         Value::Object(m)
@@ -716,6 +860,14 @@ impl ShardSnapshot {
             transform: timing("transform")?,
             d2h: timing("d2h")?,
             other: timing("other")?,
+            tiles: TileCounters::from_json(
+                v.get("tiles")
+                    .ok_or_else(|| Error::Json("shard snapshot missing `tiles`".into()))?,
+            )?,
+            pipeline: PipelineCounters::from_json(
+                v.get("pipeline")
+                    .ok_or_else(|| Error::Json("shard snapshot missing `pipeline`".into()))?,
+            )?,
             arena: ArenaCounters::from_json(
                 v.get("arena")
                     .ok_or_else(|| Error::Json("shard snapshot missing `arena`".into()))?,
@@ -863,6 +1015,24 @@ impl TelemetrySnapshot {
         }
     }
 
+    /// Tile-executor counters summed across shards — zero everywhere on
+    /// a serial pool, which is itself an invariant the default-config
+    /// tests lean on.
+    pub fn tile_totals(&self) -> TileCounters {
+        self.shards
+            .iter()
+            .map(|s| s.tiles)
+            .fold(TileCounters::default(), TileCounters::merged)
+    }
+
+    /// Pipelining occupancy summed across shards.
+    pub fn pipeline_totals(&self) -> PipelineCounters {
+        self.shards
+            .iter()
+            .map(|s| s.pipeline)
+            .fold(PipelineCounters::default(), PipelineCounters::merged)
+    }
+
     /// Hazard-analysis results summed across shards — on a healthy pool
     /// `total()` is zero and `windows` equals [`Self::total_launches`].
     pub fn hazard_totals(&self) -> HazardCounters {
@@ -872,7 +1042,7 @@ impl TelemetrySnapshot {
             .fold(HazardCounters::default(), HazardCounters::merged)
     }
 
-    /// Serialize (schema `portarng-telemetry-v4`).
+    /// Serialize (schema `portarng-telemetry-v5`).
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
@@ -968,6 +1138,10 @@ mod tests {
         });
         s0.record_hazards(HazardCounters::from_window(4, 2, [0; 8]));
         s0.record_hazards(HazardCounters::from_window(6, 3, [0, 0, 0, 1, 0, 0, 0, 0]));
+        s0.record_tiles(8, 64_000);
+        s0.record_tiles(4, 30_000);
+        s0.record_pipeline_flush(0);
+        s0.record_pipeline_flush(2_500);
         let s1 = reg.shard(1);
         s1.set_backend("cuRAND");
         s1.record_request(5000);
@@ -1049,6 +1223,21 @@ mod tests {
         let reg = sample_registry();
         reg.shard(1).set_faults_injected(7);
         assert_eq!(reg.snapshot().resilience_totals().faults_injected, 7);
+    }
+
+    #[test]
+    fn tile_and_pipeline_counters_accumulate_and_aggregate() {
+        let snap = sample_registry().snapshot();
+        assert_eq!(snap.shards[0].tiles, TileCounters { tiles: 12, wall_ns: 94_000 });
+        let p = snap.shards[0].pipeline;
+        assert_eq!(p, PipelineCounters { flushes: 2, overlapped: 1, overlap_ns: 2_500 });
+        assert!((p.occupancy() - 0.5).abs() < 1e-12);
+        // Shard 1 runs serial: both blocks stay all-zero.
+        assert_eq!(snap.shards[1].tiles, TileCounters::default());
+        assert_eq!(snap.shards[1].pipeline, PipelineCounters::default());
+        assert_eq!(snap.shards[1].pipeline.occupancy(), 0.0);
+        assert_eq!(snap.tile_totals(), snap.shards[0].tiles);
+        assert_eq!(snap.pipeline_totals(), snap.shards[0].pipeline);
     }
 
     #[test]

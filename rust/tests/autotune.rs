@@ -97,7 +97,13 @@ fn online_tuner_recovers_miscalibration_against_virtual_objective() {
     // oracle.
     let platform = PlatformId::A100;
     let wl = ProbeWorkload::serving_mix(77, 96);
-    let defaults = TuningParams { threshold: usize::MAX, flush_requests: 16, max_batch: 1 << 20 };
+    let defaults = TuningParams {
+        threshold: usize::MAX,
+        flush_requests: 16,
+        max_batch: 1 << 20,
+        tile_size: 0,
+        team_width: 1,
+    };
     let (_, oracle) = best_fixed_threshold(platform, 4, &defaults, &wl);
 
     let mut tuner = AutoTuner::new(TuningParams { threshold: 1 << 26, ..defaults });
@@ -123,6 +129,8 @@ fn profile_json_threshold_survives_extreme_values() {
             threshold: usize::MAX,
             flush_requests: 16,
             max_batch: 1 << 20,
+            tile_size: 0,
+            team_width: 1,
         },
         mnum_per_s: 1.0,
         source: "probe".into(),

@@ -63,11 +63,20 @@ fn prop_pooled_batched_output_is_bit_identical_to_dedicated_engines() {
             .collect();
         let max_batch = g.usize_in(64, 4096);
         let max_requests = g.usize_in(1, 6);
+        // The tile executor must be invisible in the payloads: any
+        // (shard count, tile size, team width) — including serial —
+        // reproduces the 1-shard serial baseline bit for bit.
+        let tiling = if g.bool_with(0.5) {
+            Some((*g.choose(&[64usize, 333, 1024]), g.usize_in(2, 4)))
+        } else {
+            None
+        };
         for shards in [1usize, 2, 8] {
             let mut cfg = PoolConfig::new(PlatformId::A100, seed, shards);
             cfg.max_batch = max_batch;
             cfg.max_requests = max_requests;
             cfg.policy = DispatchPolicy::fixed(800);
+            cfg.tiling = tiling;
             let pool = ServicePool::spawn(cfg);
             let rxs: Vec<_> = sizes.iter().map(|&n| pool.generate(n, (0.0, 1.0))).collect();
             pool.flush();
@@ -119,13 +128,17 @@ fn prop_retuning_mid_stream_preserves_global_offset_invariant() {
         let pool = ServicePool::spawn(cfg);
         let mut rxs = Vec::new();
         for &n in &sizes {
-            // Retune mid-stream, randomly: flip the threshold around and
-            // jiggle the flush limits between submissions.
+            // Retune mid-stream, randomly: flip the threshold around,
+            // jiggle the flush limits, and toggle the tile executor on
+            // and off between submissions — live executor retunes must
+            // not move a single bit either.
             if g.bool_with(0.4) {
                 pool.retune(TuningParams {
                     threshold: *g.choose(&[0usize, 100, 800, 2000, usize::MAX]),
                     flush_requests: g.usize_in(1, 8),
                     max_batch: g.usize_in(256, 1 << 16),
+                    tile_size: *g.choose(&[0usize, 0, 64, 333, 1024]),
+                    team_width: g.usize_in(1, 4),
                 });
             }
             rxs.push(pool.generate(n, (0.0, 1.0)));
