@@ -1,0 +1,89 @@
+//! Bench: FastCaloSim served through the pooled SYCL stack (DESIGN.md S17).
+//!
+//! Drives the same single-electron workload through the standalone host
+//! engine and through a 4-shard `ServicePool` (tile executor on), and
+//! compares real wall-clock event throughput. The pooled path wins by
+//! generating the per-event RN floor in chunked pool submissions that
+//! overlap the host deposit loop and spread across shards; the standalone
+//! path draws every block inline on the simulation thread.
+//!
+//! Acceptance gates:
+//!   * pooled and standalone produce bit-identical physics checksums —
+//!     every run, not just the medians;
+//!   * 4-shard pooled throughput >= 1.5x standalone-sycl (when the
+//!     machine has >= 4 CPUs), judged on benchkit medians.
+
+use portarng::benchkit::{black_box, BenchConfig, BenchGroup};
+use portarng::fastcalosim::{run_fastcalosim, run_fastcalosim_pooled, FcsApi, Workload};
+use portarng::platform::PlatformId;
+
+const EVENTS: usize = 12;
+const SHARDS: usize = 4;
+const SEED: u64 = 2024;
+
+fn main() {
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let w = Workload::SingleElectron { events: EVENTS };
+    println!("fcs pool: single-e x {EVENTS} events, {SHARDS} shards, {cpus} CPUs\n");
+
+    let mut g = BenchGroup::new("fcs_pool").config(BenchConfig { warmup: 1, samples: 5 });
+
+    let mut standalone_sum = 0u64;
+    g.bench_items(&format!("standalone/{EVENTS}ev"), EVENTS as u64, || {
+        let r = run_fastcalosim(black_box(PlatformId::A100), FcsApi::Sycl, w, SEED).unwrap();
+        standalone_sum = r.checksum;
+    });
+    println!("    -> checksum {standalone_sum:016x}");
+
+    let mut pooled_sum = 0u64;
+    let mut splits = (0u64, 0u64, 0u64);
+    g.bench_items(&format!("pooled/{SHARDS}-shard/{EVENTS}ev"), EVENTS as u64, || {
+        let run = run_fastcalosim_pooled(
+            black_box(PlatformId::A100),
+            FcsApi::Sycl,
+            w,
+            SEED,
+            SHARDS,
+            Some((256, 2)),
+            None,
+        )
+        .unwrap();
+        // Every sample must match the standalone stream, not just the last.
+        assert_eq!(
+            run.report.checksum, standalone_sum,
+            "pooled physics diverged from standalone"
+        );
+        pooled_sum = run.report.checksum;
+        let f = run.telemetry.fcs;
+        splits = (f.gen_ns, f.transform_ns, f.d2h_ns);
+    });
+    println!(
+        "    -> checksum {pooled_sum:016x} | virtual splits gen {:.2} ms, \
+         transform {:.2} ms, d2h {:.2} ms",
+        splits.0 as f64 / 1e6,
+        splits.1 as f64 / 1e6,
+        splits.2 as f64 / 1e6
+    );
+    println!("\nphysics bit-identical standalone vs pooled: OK (checksum {pooled_sum:016x})");
+
+    // Throughput gate on the benchkit medians (outlier-robust).
+    let tput: Vec<f64> = g
+        .results()
+        .iter()
+        .map(|r| r.throughput_m_per_s().unwrap_or(0.0))
+        .collect();
+    let speedup = tput[1] / tput[0];
+    println!("pooled vs standalone event throughput: {speedup:.2}x");
+    if cpus >= 4 {
+        assert!(
+            speedup >= 1.5,
+            "pooled serving only {speedup:.2}x standalone (need >= 1.5x at {SHARDS} shards)"
+        );
+        println!("serving gate (>= 1.5x): OK");
+    } else {
+        println!("serving gate skipped: {cpus} CPUs < 4 (cannot host {SHARDS} busy shards)");
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_fcs_pool.csv", g.to_csv()).unwrap();
+}

@@ -1,4 +1,5 @@
-//! FastCaloSim substrate (DESIGN.md S8): the paper's real-world benchmark.
+//! FastCaloSim substrate (DESIGN.md S8, S17): the paper's real-world
+//! benchmark, servable through the pooled SYCL stack.
 //!
 //! A parameterized calorimeter simulation in the style of the ATLAS
 //! FastCaloSim ports ([17], [21]): synthetic detector geometry (~190k
@@ -6,6 +7,17 @@
 //! parameterization tables loaded on demand, and an event loop whose hit
 //! sampling consumes three uniforms per hit through the portable RNG API —
 //! the integration point the paper §5.2 describes.
+//!
+//! Where those uniforms come from is pluggable ([`RngSource`], DESIGN.md
+//! S17): the standalone [`HostSource`] engine, or a [`PooledSource`] that
+//! batches every per-event draw into
+//! [`ServicePool`](crate::coordinator::ServicePool) submissions —
+//! bit-identical to standalone for any shard count × tile size × chaos
+//! plan, because the pool assigns O(1) skip-ahead stream offsets in
+//! submission order. The SYCL event loop records its rng/hits/d2h
+//! commands with real [`Access`](crate::sycl::Access) sets, so the S14
+//! hazard analyzer proves each event's DAG race-free (`portarng
+//! lint-dag`'s `fastcalosim` workload).
 //!
 //! The ATLAS inputs (real geometry, O(1) GB parameterizations, MC samples)
 //! are not public; DESIGN.md §1 documents how the synthetic substitutes
@@ -16,8 +28,13 @@ mod event;
 mod geometry;
 mod param;
 mod simulation;
+mod source;
 
 pub use event::{single_electron_events, ttbar_events, Event, Particle};
 pub use geometry::{Geometry, LayerSpec, LAYERS};
 pub use param::{ParamStore, ParamTable, TableId};
-pub use simulation::{run_fastcalosim, FcsApi, FcsConfig, FcsReport, Simulator, Workload, FCS_ENGINE};
+pub use simulation::{
+    run_fastcalosim, run_fastcalosim_pooled, FcsApi, FcsConfig, FcsEventSplit, FcsPoolRun,
+    FcsReport, Simulator, Workload, FCS_ENGINE,
+};
+pub use source::{Draw, HostSource, PooledSource, RngSource};

@@ -7,17 +7,36 @@
 //! structurally: intra-event hit parallelism only (no inter-event
 //! batching), parameterization H2D traffic dominating t t̄, and the RNG
 //! contribution being small but mandatory for portability.
+//!
+//! Since S17 the simulator no longer owns its engine: all uniforms come
+//! from a pluggable [`RngSource`] — the standalone host engine or a
+//! [`PooledSource`](super::PooledSource) that routes every block through
+//! the sharded [`ServicePool`](crate::coordinator::ServicePool) (see
+//! [`run_fastcalosim_pooled`]). Blocks are requested per event up front
+//! so shard workers generate ahead of the host-side deposition loop, and
+//! the per-event RN floor is drawn for real (in
+//! [`FLOOR_CHUNK`]-sized blocks) so the floor parallelises across shards
+//! instead of being virtual-only accounting. The SYCL event loop records
+//! every command through [`Queue::submit_usm`] with real [`Access`] sets,
+//! so `PORTARNG_HAZARD_CHECK=1` proves each event's DAG race-free instead
+//! of vacuously passing over empty host tasks.
+
+use std::collections::HashMap;
 
 use crate::backends::NativeTimeline;
+use crate::coordinator::{PoolConfig, PoolStats};
 use crate::error::Result;
 use crate::platform::{CommandCost, PlatformId, PlatformKind, TransferDir};
-use crate::rng::engines::PhiloxEngine;
-use crate::rng::{u32_to_uniform_f32, Engine};
-use crate::sycl::{CommandClass, Queue, SyclRuntimeProfile};
+use crate::sycl::{
+    Access, AccessMode, CommandClass, CommandRecord, Event as SyclEvent, Queue,
+    SyclRuntimeProfile,
+};
+use crate::telemetry::TelemetrySnapshot;
 
 use super::event::Event;
 use super::geometry::Geometry;
-use super::param::{ParamStore, TableId};
+use super::param::{ParamStore, ParamTable, TableId};
+use super::source::{HostSource, RngSource};
 
 /// Which FastCaloSim port runs (paper §5.2: C++/CUDA native vs SYCL).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -102,13 +121,38 @@ pub struct FcsConfig {
     /// Real per-hit computation cap per event (virtual accounting is
     /// always exact; see DESIGN.md on tractability).
     pub real_hit_cap: usize,
+    /// Retain each event's drained command window (SYCL api only) for
+    /// offline DAG analysis — `lint-dag`'s fastcalosim workload. Off by
+    /// default: windows are large and the inline hazard check already
+    /// runs at every drain under enforcement.
+    pub keep_windows: bool,
 }
 
 impl FcsConfig {
     /// Defaults for a platform/api pair.
     pub fn new(platform: PlatformId, api: FcsApi) -> FcsConfig {
-        FcsConfig { platform, api, seed: 0xFC5, real_hit_cap: 20_000 }
+        FcsConfig {
+            platform,
+            api,
+            seed: 0xFC5,
+            real_hit_cap: 20_000,
+            keep_windows: false,
+        }
     }
+}
+
+/// Per-event virtual-time split by command class (the Fig.-4-style
+/// generate/transform/D2H breakdown, folded into telemetry v6).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FcsEventSplit {
+    /// Virtual ns in `Generate`-class commands (rng + rng:floor).
+    pub gen_ns: u64,
+    /// Virtual ns in `Transform`-class commands (hit deposition kernels).
+    pub transform_ns: u64,
+    /// Virtual ns in D2H transfers (result readback).
+    pub d2h_ns: u64,
+    /// Virtual hits simulated this event.
+    pub hits: u64,
 }
 
 /// Simulation outcome + virtual timing.
@@ -120,6 +164,8 @@ pub struct FcsReport {
     pub api: FcsApi,
     /// Workload label.
     pub workload: &'static str,
+    /// RNG source label (`"host"` / `"pooled"`).
+    pub source: &'static str,
     /// Events simulated.
     pub events: usize,
     /// Virtual per-event times, ns.
@@ -136,6 +182,13 @@ pub struct FcsReport {
     pub energy_in: f64,
     /// Energy deposited (real-computed subset).
     pub energy_dep: f64,
+    /// Physics checksum: FNV-1a over every deposit's bit pattern plus the
+    /// hit/RN totals — bit-identical across RNG sources and APIs for one
+    /// seed, the standalone-vs-pooled acceptance gate.
+    pub checksum: u64,
+    /// Per-event command-class splits (SYCL api; empty for native, whose
+    /// sequential timeline has no queue to drain).
+    pub splits: Vec<FcsEventSplit>,
     /// Wall time of the run, ns.
     pub wall_ns: u64,
 }
@@ -155,27 +208,77 @@ const HOST_NS_PER_PARTICLE: u64 = 4_000;
 /// Minimum random numbers per event (paper: "the minimum set to 200,000 —
 /// approximately one per calorimeter cell").
 const MIN_RNS_PER_EVENT: u64 = 200_000;
+/// Floor draws are requested in blocks of this many uniforms so the
+/// pooled source spreads one event's ~200k-number floor across shards
+/// (one monolithic request would pin the whole floor to a single
+/// round-robin worker).
+const FLOOR_CHUNK: usize = 65_536;
 
-/// The simulator: owns geometry, parameterizations and the RNG stream.
+/// Device-side USM handles for the SYCL event loop. Zero-length
+/// `malloc_device` ids: the cost model carries bytes through
+/// [`CommandCost`], the handles exist so every command can declare real
+/// [`Access`] sets for the hazard analyzer.
+struct DevHandles {
+    /// Uniform output buffer; rng commands write rolling disjoint ranges.
+    rng_id: u64,
+    /// Calorimeter deposit accumulator (read-modify-write per particle).
+    dep_id: u64,
+    /// Geometry tables.
+    geo_id: u64,
+    /// Geometry upload event (first hits command in the upload's window
+    /// must order after it).
+    geo_ev: Option<SyclEvent>,
+    /// One device allocation per parameterization table.
+    param_ids: HashMap<TableId, u64>,
+    /// Serial deposit chain: last command touching `dep_id`.
+    chain: Option<SyclEvent>,
+    /// Next free element offset in the rng buffer's virtual range space.
+    rng_cursor: usize,
+}
+
+/// The per-particle draw plan computed by the pure prepass.
+struct EventPlan {
+    /// Per particle: (table id, synthesized table, virtual hit count,
+    /// real — capped — hit count).
+    particles: Vec<(TableId, ParamTable, u64, usize)>,
+    /// Virtual hits for the whole event.
+    virt_hits: u64,
+    /// Real floor draws (the virtual floor shortfall, drawn and
+    /// discarded so pooled/standalone streams agree).
+    floor: usize,
+}
+
+/// The simulator: owns geometry, parameterizations and the RNG source.
 pub struct Simulator {
     cfg: FcsConfig,
     geometry: Geometry,
     params: ParamStore,
-    rng: PhiloxEngine,
+    source: Box<dyn RngSource>,
     deposits: Vec<f32>,
+    windows: Vec<Vec<CommandRecord>>,
 }
 
 impl Simulator {
-    /// Build a simulator (geometry upload happens on first `simulate`).
+    /// Build a simulator over the standalone host engine (geometry upload
+    /// happens on first `simulate`).
     pub fn new(cfg: FcsConfig) -> Simulator {
+        let source = Box::new(HostSource::new(cfg.seed));
+        Simulator::with_source(cfg, source)
+    }
+
+    /// Build a simulator over an explicit RNG source. The source's stream
+    /// must start at position 0 for `cfg.seed` — for a pooled source that
+    /// means the pool was spawned with the same seed and no other client.
+    pub fn with_source(cfg: FcsConfig, source: Box<dyn RngSource>) -> Simulator {
         let geometry = Geometry::build();
         let params = ParamStore::new(geometry.n_layers());
         Simulator {
-            rng: PhiloxEngine::new(cfg.seed),
+            source,
             geometry,
             params,
             cfg,
             deposits: Vec::new(),
+            windows: Vec::new(),
         }
     }
 
@@ -184,12 +287,30 @@ impl Simulator {
         &self.geometry
     }
 
+    /// The active source's label.
+    pub fn source_label(&self) -> &'static str {
+        self.source.label()
+    }
+
+    /// Tear down the RNG source (shuts a pooled source's pool down),
+    /// returning its final stats when it had a pool behind it.
+    pub fn finish_source(&mut self) -> Result<Option<PoolStats>> {
+        self.source.finish()
+    }
+
+    /// Take the retained per-event command windows (empty unless
+    /// `cfg.keep_windows` was set on a SYCL-api run).
+    pub fn take_windows(&mut self) -> Vec<Vec<CommandRecord>> {
+        std::mem::take(&mut self.windows)
+    }
+
     /// Run the full workload.
     pub fn simulate(&mut self, events: &[Event]) -> Result<FcsReport> {
         let wall_start = std::time::Instant::now();
         let spec = self.cfg.platform.spec();
         let is_gpu = spec.kind != PlatformKind::Cpu;
         self.deposits = vec![0f32; self.geometry.n_cells()];
+        self.windows.clear();
 
         // Timelines: the native port uses the sequential native clock; the
         // SYCL port pays queue/DAG costs. Both share the kernel cost model.
@@ -199,6 +320,19 @@ impl Simulator {
             SyclRuntimeProfile::for_platform(&spec),
         );
 
+        // Zero-length device handles so every SYCL command declares what
+        // it touches (DESIGN.md S17: real access sets, no empty host
+        // tasks).
+        let mut dev = DevHandles {
+            rng_id: queue.malloc_device::<f32>(0).id(),
+            dep_id: queue.malloc_device::<f32>(0).id(),
+            geo_id: queue.malloc_device::<f32>(0).id(),
+            geo_ev: None,
+            param_ids: HashMap::new(),
+            chain: None,
+            rng_cursor: 0,
+        };
+
         // Geometry upload (~20 MB) once, GPU only.
         if is_gpu {
             match self.cfg.api {
@@ -207,19 +341,21 @@ impl Simulator {
                 }
                 FcsApi::Sycl => {
                     let bytes = self.geometry.device_bytes();
-                    queue.submit(|cgh| {
-                        cgh.host_task(
-                            "geometry:h2d",
-                            CommandClass::TransferH2D,
-                            CommandCost::Transfer { bytes, dir: TransferDir::H2D },
-                            |_| {},
-                        );
-                    });
+                    let ev = queue.submit_usm(
+                        "geometry:h2d",
+                        CommandClass::TransferH2D,
+                        CommandCost::Transfer { bytes, dir: TransferDir::H2D },
+                        &[],
+                        vec![Access::usm(dev.geo_id, AccessMode::Write)],
+                        |_| {},
+                    );
+                    dev.geo_ev = Some(ev);
                 }
             }
         }
 
         let mut per_event_ns = Vec::with_capacity(events.len());
+        let mut splits = Vec::new();
         let (mut hits_total, mut rns_total) = (0u64, 0u64);
         let (mut energy_in, mut energy_dep) = (0f64, 0f64);
 
@@ -229,7 +365,7 @@ impl Simulator {
                 FcsApi::Sycl => queue.virtual_now_ns(),
             };
             let (hits, rns, e_in, e_dep) =
-                self.simulate_event(ev, i as u64, &mut native, &queue, is_gpu)?;
+                self.simulate_event(ev, i as u64, &mut native, &queue, is_gpu, &mut dev)?;
             hits_total += hits;
             rns_total += rns;
             energy_in += e_in;
@@ -239,6 +375,29 @@ impl Simulator {
                 FcsApi::Sycl => queue.wait(),
             };
             per_event_ns.push((end_ns - start_ns) as f64);
+
+            // Drain the event's command window (SYCL only): the Fig.-4
+            // split folds from it, hazard enforcement analyzes it, and
+            // cross-event dependency edges become `external_deps` in the
+            // next window. The geometry handle's cross-window reads need
+            // no in-window writer, so later windows stay race-free.
+            if self.cfg.api == FcsApi::Sycl {
+                let window = queue.drain_records();
+                let mut split = FcsEventSplit { hits, ..Default::default() };
+                for r in &window {
+                    let ns = r.virt_end_ns - r.virt_start_ns;
+                    match r.class {
+                        CommandClass::Generate => split.gen_ns += ns,
+                        CommandClass::Transform => split.transform_ns += ns,
+                        CommandClass::TransferD2H => split.d2h_ns += ns,
+                        _ => {}
+                    }
+                }
+                splits.push(split);
+                if self.cfg.keep_windows {
+                    self.windows.push(window);
+                }
+            }
         }
 
         let total_ns = match self.cfg.api {
@@ -254,6 +413,7 @@ impl Simulator {
             } else {
                 "single-e"
             },
+            source: self.source.label(),
             events: events.len(),
             per_event_ns,
             total_ns,
@@ -262,11 +422,35 @@ impl Simulator {
             tables_loaded: self.params.loaded_count(),
             energy_in,
             energy_dep,
+            checksum: physics_checksum(&self.deposits, hits_total, rns_total),
+            splits,
             wall_ns: wall_start.elapsed().as_nanos() as u64,
         })
     }
 
+    /// Pure prepass: table synthesis + hit counts + the real-draw plan,
+    /// with no store/device mutation — it exists so every block of the
+    /// event can be requested from the source *before* deposition starts
+    /// (the pooled source generates ahead while the host deposits).
+    fn plan_event(&self, ev: &Event) -> EventPlan {
+        let mut particles = Vec::with_capacity(ev.particles.len());
+        let mut virt_hits = 0u64;
+        let mut real_left = self.cfg.real_hit_cap;
+        for p in &ev.particles {
+            let id = TableId::for_particle(p.pdg, p.energy_gev, p.eta);
+            let table = ParamTable::synthesize(id, self.geometry.n_layers());
+            let n_hits = (p.energy_gev * table.hits_per_gev) as u64;
+            let real = (n_hits as usize).min(real_left);
+            real_left -= real;
+            virt_hits += n_hits;
+            particles.push((id, table, n_hits, real));
+        }
+        let floor = MIN_RNS_PER_EVENT.saturating_sub(3 * virt_hits) as usize;
+        EventPlan { particles, virt_hits, floor }
+    }
+
     /// One event: per-particle table fetch, RNG draw, hit deposition.
+    #[allow(clippy::too_many_arguments)]
     fn simulate_event(
         &mut self,
         ev: &Event,
@@ -274,37 +458,56 @@ impl Simulator {
         native: &mut NativeTimeline,
         queue: &Queue,
         is_gpu: bool,
+        dev: &mut DevHandles,
     ) -> Result<(u64, u64, f64, f64)> {
         native.set_noise_salt(salt);
         queue.set_noise_salt(salt);
-        let mut event_hits = 0u64;
         let mut e_in = 0f64;
         let mut e_dep = 0f64;
-        let mut real_hits_left = self.cfg.real_hit_cap;
 
-        for p in &ev.particles {
-            let id = TableId::for_particle(p.pdg, p.energy_gev, p.eta);
-            let (table, h2d_bytes) = self.params.fetch(id);
+        // Request every block of the event up front, in consumption
+        // order: 3 uniforms per real hit per particle, then the floor in
+        // FLOOR_CHUNK blocks. A pooled source submits all of these to its
+        // shards here and generates while the host deposits below.
+        let plan = self.plan_event(ev);
+        let mut sizes: Vec<usize> =
+            plan.particles.iter().map(|&(_, _, _, real)| 3 * real).collect();
+        let mut floor_left = plan.floor;
+        while floor_left > 0 {
+            let chunk = floor_left.min(FLOOR_CHUNK);
+            sizes.push(chunk);
+            floor_left -= chunk;
+        }
+        let mut draws = self.source.request(&sizes).into_iter();
 
-            // Parameterization load (t t̄: 20-30 of these, §5.2).
+        for (p, &(id, ref table, n_hits, real_hits)) in
+            ev.particles.iter().zip(&plan.particles)
+        {
+            // Parameterization load (t t̄: 20-30 of these, §5.2). The
+            // loading particle's hit command is the upload's first user.
+            let (_, h2d_bytes) = self.params.fetch(id);
+            let mut fresh_param: Option<SyclEvent> = None;
             if h2d_bytes > 0 && is_gpu {
                 match self.cfg.api {
                     FcsApi::Native => native.transfer(h2d_bytes, TransferDir::H2D),
                     FcsApi::Sycl => {
-                        queue.submit(|cgh| {
-                            cgh.host_task(
-                                "param:h2d",
-                                CommandClass::TransferH2D,
-                                CommandCost::Transfer { bytes: h2d_bytes, dir: TransferDir::H2D },
-                                |_| {},
-                            );
-                        });
+                        let param_id = queue.malloc_device::<f32>(0).id();
+                        dev.param_ids.insert(id, param_id);
+                        fresh_param = Some(queue.submit_usm(
+                            "param:h2d",
+                            CommandClass::TransferH2D,
+                            CommandCost::Transfer {
+                                bytes: h2d_bytes,
+                                dir: TransferDir::H2D,
+                            },
+                            &[],
+                            vec![Access::usm(param_id, AccessMode::Write)],
+                            |_| {},
+                        ));
                     }
                 }
             }
 
-            let n_hits = (p.energy_gev * table.hits_per_gev) as u64;
-            event_hits += n_hits;
             e_in += p.energy_gev as f64;
 
             // Host bookkeeping per particle.
@@ -335,32 +538,74 @@ impl Simulator {
                 FcsApi::Native => {
                     // Pipelined launches; one sync per event (below).
                     native.kernel_async("rng", CommandClass::Generate, rng_cost);
-                    native.kernel_async("hits", CommandClass::Other, hit_cost);
+                    native.kernel_async("hits", CommandClass::Transform, hit_cost);
                 }
                 FcsApi::Sycl => {
-                    // Buffer-path submissions (the FastCaloSim SYCL port
-                    // uses accessors; RAW dependency rng -> hits).
-                    let ev1 = queue.submit(|cgh| {
-                        cgh.host_task("rng", CommandClass::Generate, rng_cost, |_| {});
-                    });
-                    let _ = queue.submit(|cgh| {
-                        cgh.depends_on(&ev1);
-                        cgh.host_task("hits", CommandClass::Other, hit_cost, |_| {});
-                    });
+                    // USM-path submissions with explicit deps + declared
+                    // access sets (DESIGN.md S17): each particle's rng
+                    // kernel writes its own disjoint range of the rng
+                    // buffer (no ordering needed between particles), its
+                    // hit kernel reads exactly that range (RAW edge on
+                    // `ev_rng`) and read-modify-writes the shared deposit
+                    // buffer, serialised on the event's deposit chain.
+                    let rng_at = dev.rng_cursor;
+                    dev.rng_cursor += n_rns as usize;
+                    let ev_rng = queue.submit_usm(
+                        "rng",
+                        CommandClass::Generate,
+                        rng_cost,
+                        &[],
+                        vec![Access::usm(dev.rng_id, AccessMode::Write)
+                            .with_range(rng_at, n_rns as usize)],
+                        |_| {},
+                    );
+                    let mut deps = vec![ev_rng];
+                    match (&dev.chain, &dev.geo_ev) {
+                        // First hits command of the upload's window orders
+                        // after the geometry H2D; later ones reach it
+                        // through the deposit chain.
+                        (Some(chain), _) => deps.push(chain.clone()),
+                        (None, Some(geo)) => deps.push(geo.clone()),
+                        (None, None) => {}
+                    }
+                    if let Some(pv) = fresh_param {
+                        deps.push(pv);
+                    }
+                    let mut accesses = vec![
+                        Access::usm(dev.rng_id, AccessMode::Read)
+                            .with_range(rng_at, n_rns as usize),
+                        Access::usm(dev.dep_id, AccessMode::ReadWrite),
+                    ];
+                    if is_gpu {
+                        accesses.push(Access::usm(dev.geo_id, AccessMode::Read));
+                        if let Some(&param_id) = dev.param_ids.get(&id) {
+                            accesses.push(Access::usm(param_id, AccessMode::Read));
+                        }
+                    }
+                    let ev_hits = queue.submit_usm(
+                        "hits",
+                        CommandClass::Transform,
+                        hit_cost,
+                        &deps,
+                        accesses,
+                        |_| {},
+                    );
+                    dev.chain = Some(ev_hits);
                 }
             }
 
-            // Real hit computation (capped): same math as the L2 graph.
-            let real_hits = (n_hits as usize).min(real_hits_left);
-            real_hits_left -= real_hits;
+            // Real hit computation (capped): same math as the L2 graph,
+            // fed from the pre-requested source block.
+            let block = draws.next().expect("plan/draw mismatch").take()?;
+            debug_assert_eq!(block.len(), 3 * real_hits);
             if real_hits > 0 {
                 let scale = n_hits as f32 / real_hits as f32;
                 let e_per_hit = p.energy_gev / n_hits as f32;
                 let layers = self.geometry.layers_at(p.eta);
-                for _ in 0..real_hits {
-                    let u_e = u32_to_uniform_f32(self.rng.next_u32());
-                    let u_eta = u32_to_uniform_f32(self.rng.next_u32());
-                    let u_phi = u32_to_uniform_f32(self.rng.next_u32());
+                for h in 0..real_hits {
+                    let u_e = block[3 * h];
+                    let u_eta = block[3 * h + 1];
+                    let u_phi = block[3 * h + 2];
                     let e = e_per_hit * -(1.0 - u_e).ln();
                     let eta = p.eta + table.sigma_eta * (2.0 * u_eta - 1.0);
                     let phi = p.phi + table.sigma_phi * (2.0 * u_phi - 1.0);
@@ -377,10 +622,17 @@ impl Simulator {
             }
         }
 
-        // Per-event RN floor (~one per cell).
+        // Per-event RN floor (~one per cell): drawn for real — and
+        // discarded — so the stream position is source-independent, but
+        // recorded as one kernel (the chunking is a *request* shape for
+        // shard spread, not a submission shape).
+        let event_hits = plan.virt_hits;
         let event_rns = (3 * event_hits).max(MIN_RNS_PER_EVENT);
-        if 3 * event_hits < MIN_RNS_PER_EVENT {
-            let extra = MIN_RNS_PER_EVENT - 3 * event_hits;
+        if plan.floor > 0 {
+            for d in draws {
+                let _ = d.take()?;
+            }
+            let extra = plan.floor as u64;
             let cost = CommandCost::Kernel {
                 bytes_read: 0,
                 bytes_written: extra * 4,
@@ -390,9 +642,17 @@ impl Simulator {
             match self.cfg.api {
                 FcsApi::Native => native.kernel_async("rng:floor", CommandClass::Generate, cost),
                 FcsApi::Sycl => {
-                    queue.submit(|cgh| {
-                        cgh.host_task("rng:floor", CommandClass::Generate, cost, |_| {});
-                    });
+                    let at = dev.rng_cursor;
+                    dev.rng_cursor += plan.floor;
+                    queue.submit_usm(
+                        "rng:floor",
+                        CommandClass::Generate,
+                        cost,
+                        &[],
+                        vec![Access::usm(dev.rng_id, AccessMode::Write)
+                            .with_range(at, plan.floor)],
+                        |_| {},
+                    );
                 }
             }
         }
@@ -406,14 +666,18 @@ impl Simulator {
                     native.transfer(bytes, TransferDir::D2H)
                 }
                 FcsApi::Sycl => {
-                    queue.submit(|cgh| {
-                        cgh.host_task(
-                            "result:d2h",
-                            CommandClass::TransferD2H,
-                            CommandCost::Transfer { bytes, dir: TransferDir::D2H },
-                            |_| {},
-                        );
-                    });
+                    let deps: Vec<SyclEvent> = dev.chain.iter().cloned().collect();
+                    let ev_d2h = queue.submit_usm(
+                        "result:d2h",
+                        CommandClass::TransferD2H,
+                        CommandCost::Transfer { bytes, dir: TransferDir::D2H },
+                        &deps,
+                        vec![Access::usm(dev.dep_id, AccessMode::Read)],
+                        |_| {},
+                    );
+                    // Next event's first deposit write orders after this
+                    // read (WAR edge across the window boundary).
+                    dev.chain = Some(ev_d2h);
                 }
             }
         }
@@ -426,7 +690,26 @@ impl Simulator {
     }
 }
 
-/// Convenience driver: simulate `workload` on (platform, api).
+/// FNV-1a over the deposit bit patterns + totals: cheap, order-sensitive,
+/// and exact — any single-ulp physics divergence flips it.
+fn physics_checksum(deposits: &[f32], hits: u64, rns: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for d in deposits {
+        eat(d.to_bits() as u64);
+    }
+    eat(hits);
+    eat(rns);
+    h
+}
+
+/// Convenience driver: simulate `workload` on (platform, api) with the
+/// standalone host engine.
 pub fn run_fastcalosim(
     platform: PlatformId,
     api: FcsApi,
@@ -436,8 +719,61 @@ pub fn run_fastcalosim(
     let events = workload.events(seed);
     let mut sim = Simulator::new(FcsConfig::new(platform, api));
     let mut report = sim.simulate(&events)?;
+    sim.finish_source()?;
     report.workload = workload.label();
     Ok(report)
+}
+
+/// A pooled FastCaloSim run: the physics report plus the serving stack's
+/// view of it.
+#[derive(Debug)]
+pub struct FcsPoolRun {
+    /// The physics/timing report (bit-identical to the standalone run).
+    pub report: FcsReport,
+    /// Telemetry snapshot with the per-event `fcs` block folded in
+    /// (schema `portarng-telemetry-v6`).
+    pub telemetry: TelemetrySnapshot,
+    /// Final per-shard pool stats.
+    pub stats: PoolStats,
+}
+
+/// Convenience driver: simulate `workload` with every uniform served by a
+/// sharded [`ServicePool`](crate::coordinator::ServicePool) — `shards`
+/// workers, optional tile executor shape, optional chaos plan. The
+/// engine seed is [`FcsConfig`]'s (the pool must share it for
+/// bit-identity); `seed` only shapes the generated events.
+pub fn run_fastcalosim_pooled(
+    platform: PlatformId,
+    api: FcsApi,
+    workload: Workload,
+    seed: u64,
+    shards: usize,
+    tiling: Option<(usize, usize)>,
+    chaos: Option<crate::fault::FaultSpec>,
+) -> Result<FcsPoolRun> {
+    let events = workload.events(seed);
+    let cfg = FcsConfig::new(platform, api);
+    let mut pool_cfg = PoolConfig::new(platform, cfg.seed, shards);
+    pool_cfg.tiling = tiling;
+    if let Some(plan) = chaos {
+        pool_cfg.fault = Some(plan);
+        // Transient chaos trips surface as retries; give the supervisor
+        // headroom so a soak-level fault rate cannot exhaust the budget.
+        pool_cfg.ingress.max_retries = 12;
+    }
+    let source = super::PooledSource::spawn(pool_cfg);
+    let registry = source.registry();
+    let mut sim = Simulator::with_source(cfg, Box::new(source));
+    let mut report = sim.simulate(&events)?;
+    report.workload = workload.label();
+    let stats = sim
+        .finish_source()?
+        .expect("pooled simulator owns a pool");
+    for s in &report.splits {
+        registry.record_fcs_event(s.hits, s.gen_ns, s.transform_ns, s.d2h_ns);
+    }
+    let telemetry = registry.snapshot();
+    Ok(FcsPoolRun { report, telemetry, stats })
 }
 
 /// The RNG engine FastCaloSim requests from the portable API.
@@ -520,5 +856,38 @@ mod tests {
         .unwrap();
         let eff = crate::metrics::vavs_efficiency(nat.mean_event_ms(), syc.mean_event_ms());
         assert!((0.7..1.4).contains(&eff), "VAVS eff = {eff}");
+    }
+
+    #[test]
+    fn sycl_event_splits_are_populated() {
+        let r = small(Workload::SingleElectron { events: 3 });
+        assert_eq!(r.splits.len(), 3);
+        for s in &r.splits {
+            assert!(s.gen_ns > 0, "gen split empty");
+            assert!(s.transform_ns > 0, "transform split empty");
+            assert!(s.d2h_ns > 0, "d2h split empty");
+            assert!(s.hits > 0);
+        }
+    }
+
+    #[test]
+    fn native_report_has_no_splits_but_same_checksum() {
+        let nat = run_fastcalosim(
+            PlatformId::A100,
+            FcsApi::Native,
+            Workload::SingleElectron { events: 3 },
+            7,
+        )
+        .unwrap();
+        let syc = run_fastcalosim(
+            PlatformId::A100,
+            FcsApi::Sycl,
+            Workload::SingleElectron { events: 3 },
+            7,
+        )
+        .unwrap();
+        assert!(nat.splits.is_empty());
+        assert_eq!(nat.checksum, syc.checksum, "physics must not depend on the port");
+        assert_eq!(nat.hits, syc.hits);
     }
 }

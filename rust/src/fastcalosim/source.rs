@@ -1,0 +1,235 @@
+//! Pluggable RNG sources for the FastCaloSim event loop (DESIGN.md S17).
+//!
+//! The simulator consumes one logical canonical-uniform stream. Where that
+//! stream is produced is a deployment decision, not a physics one:
+//!
+//! * [`HostSource`] — the standalone path: a private [`PhiloxEngine`]
+//!   filling each requested block inline on the simulation thread (what
+//!   the paper's §5.2 FastCaloSim port does per kernel launch).
+//! * [`PooledSource`] — the serving path: every block becomes a
+//!   [`ServicePool::generate`] request at range `(0.0, 1.0)` (an exact
+//!   identity transform), so generation runs on the pool's shard workers
+//!   — through their SYCL queues, USM arenas and (when configured) the
+//!   tile executor — and overlaps the host-side hit deposition.
+//!
+//! **Bit-identity invariant.** The pool assigns global stream offsets
+//! from an atomic cursor at `generate()` call time, and [`RngSource::
+//! request`] submits blocks in stream-consumption order from a single
+//! thread — so block *i*'s offset is exactly the cumulative size of the
+//! blocks before it, i.e. the position a dedicated host engine would
+//! have reached. Philox is counter-based with O(1) absolute seek, each
+//! worker regenerates from the recorded offset, and the `(0.0, 1.0)`
+//! range transform is an exact no-op — hence pooled replies are
+//! bit-identical to [`HostSource`] for any shard count × tile size ×
+//! team width × chaos plan (pinned by the tests below and the FCS
+//! determinism properties in `tests/fastcalosim_integration.rs`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{PoolConfig, PoolStats, ServicePool};
+use crate::error::{Error, Result};
+use crate::rng::engines::PhiloxEngine;
+use crate::rng::Engine;
+use crate::telemetry::TelemetryRegistry;
+
+/// One requested block of canonical uniforms, possibly still in flight.
+///
+/// Deferring resolution is what buys the pooled path its overlap: the
+/// event loop requests every block of an event up front, then resolves
+/// each one right before deposition — shard workers generate the later
+/// blocks while the host deposits the earlier ones.
+pub enum Draw {
+    /// Generated eagerly, inline (host engine / empty block).
+    Ready(Vec<f32>),
+    /// In flight through a [`ServicePool`]; resolved on [`Draw::take`].
+    Pending(mpsc::Receiver<Result<Vec<f32>>>),
+}
+
+impl Draw {
+    /// Resolve the block (blocking for pending pool replies). Pool-side
+    /// failures (shed, deadline, terminal injected fault) surface here
+    /// as typed errors; a worker that died without answering — which the
+    /// supervisor should make impossible — is a timeout, not a hang.
+    pub fn take(self) -> Result<Vec<f32>> {
+        match self {
+            Draw::Ready(v) => Ok(v),
+            Draw::Pending(rx) => rx
+                .recv_timeout(Duration::from_secs(60))
+                .map_err(|_| Error::Coordinator("pool worker dropped FCS draw reply".into()))?,
+        }
+    }
+}
+
+/// Where the simulator's canonical-uniform stream comes from.
+///
+/// Implementations must hand out one gapless logical stream: the
+/// concatenation of all returned blocks, across calls, is the stream a
+/// single dedicated engine would produce (zero-size blocks consume
+/// nothing). The simulator relies on this for standalone/pooled
+/// bit-identity.
+pub trait RngSource {
+    /// Identifying label for reports (`"host"` / `"pooled"`).
+    fn label(&self) -> &'static str;
+
+    /// Request the next `sizes` consecutive blocks of the stream, in
+    /// consumption order. Returns one [`Draw`] per entry.
+    fn request(&mut self, sizes: &[usize]) -> Vec<Draw>;
+
+    /// Tear down any backing service (idempotent). The pooled source
+    /// shuts its pool down and reports final per-shard stats; the host
+    /// engine has nothing to tear down.
+    fn finish(&mut self) -> Result<Option<PoolStats>> {
+        Ok(None)
+    }
+}
+
+/// The standalone source: a private host-side Philox engine, filled
+/// inline — byte-for-byte the stream the pre-S17 simulator drew.
+pub struct HostSource {
+    engine: PhiloxEngine,
+}
+
+impl HostSource {
+    /// Engine at stream position 0 for `seed`.
+    pub fn new(seed: u64) -> HostSource {
+        HostSource { engine: PhiloxEngine::new(seed) }
+    }
+}
+
+impl RngSource for HostSource {
+    fn label(&self) -> &'static str {
+        "host"
+    }
+
+    fn request(&mut self, sizes: &[usize]) -> Vec<Draw> {
+        sizes
+            .iter()
+            .map(|&n| {
+                let mut block = vec![0f32; n];
+                self.engine.fill_uniform_f32(&mut block);
+                Draw::Ready(block)
+            })
+            .collect()
+    }
+}
+
+/// The serving source: blocks are pooled `generate` requests, flushed
+/// once per [`RngSource::request`] call.
+///
+/// The source must be its pool's only client — a concurrent requester
+/// would interleave cursor reservations and shift the stream.
+pub struct PooledSource {
+    pool: Option<ServicePool>,
+    registry: Arc<TelemetryRegistry>,
+}
+
+impl PooledSource {
+    /// Spawn the backing pool.
+    pub fn spawn(cfg: PoolConfig) -> PooledSource {
+        let pool = ServicePool::spawn(cfg);
+        let registry = pool.telemetry().clone();
+        PooledSource { pool: Some(pool), registry }
+    }
+
+    /// The pool's telemetry registry (stays readable after `finish`; the
+    /// pooled FCS driver folds the per-event `fcs` block into it).
+    pub fn registry(&self) -> Arc<TelemetryRegistry> {
+        self.registry.clone()
+    }
+}
+
+impl RngSource for PooledSource {
+    fn label(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn request(&mut self, sizes: &[usize]) -> Vec<Draw> {
+        let pool = self.pool.as_ref().expect("PooledSource used after finish()");
+        // Submit every block before flushing: offsets are reserved in
+        // stream order, then all shards launch at once.
+        let draws: Vec<Draw> = sizes
+            .iter()
+            .map(|&n| {
+                if n == 0 {
+                    Draw::Ready(Vec::new())
+                } else {
+                    Draw::Pending(pool.generate(n, (0.0, 1.0)))
+                }
+            })
+            .collect();
+        pool.flush();
+        draws
+    }
+
+    fn finish(&mut self) -> Result<Option<PoolStats>> {
+        match self.pool.take() {
+            Some(pool) => Ok(Some(pool.shutdown()?)),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+
+    /// Mixed block sizes, incl. zero-size (a particle past the real-hit
+    /// cap) and a floor-chunk-sized block, split across two request
+    /// calls (two events).
+    const SIZES_A: [usize; 4] = [3 * 4971, 0, 65_536, 17];
+    const SIZES_B: [usize; 3] = [1, 3 * 333, 40_000];
+
+    fn drain(source: &mut dyn RngSource) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> =
+            source.request(&SIZES_A).into_iter().map(|d| d.take().unwrap()).collect();
+        out.extend(source.request(&SIZES_B).into_iter().map(|d| d.take().unwrap()));
+        out
+    }
+
+    #[test]
+    fn host_source_is_the_dedicated_engine_stream() {
+        let mut host = HostSource::new(0xFC5);
+        let blocks = drain(&mut host);
+        let total: usize = SIZES_A.iter().chain(&SIZES_B).sum();
+        let mut engine = PhiloxEngine::new(0xFC5);
+        let mut want = vec![0f32; total];
+        engine.fill_uniform_f32(&mut want);
+        let got: Vec<f32> = blocks.into_iter().flatten().collect();
+        assert_eq!(got.len(), total);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "host stream diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn pooled_source_bit_identical_to_host_for_any_shape() {
+        let mut host = HostSource::new(0xFC5);
+        let want = drain(&mut host);
+        for shards in [1usize, 3] {
+            for tiling in [None, Some((256, 2))] {
+                let mut cfg = PoolConfig::new(PlatformId::A100, 0xFC5, shards);
+                cfg.tiling = tiling;
+                let mut pooled = PooledSource::spawn(cfg);
+                let got = drain(&mut pooled);
+                let stats = pooled.finish().unwrap().expect("pooled source owns a pool");
+                assert_eq!(stats.shards.len(), shards);
+                assert!(pooled.finish().unwrap().is_none(), "finish is idempotent");
+                assert_eq!(got.len(), want.len());
+                for (b, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.len(), w.len(), "block {b} length (shards={shards})");
+                    for (i, (x, y)) in g.iter().zip(w).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "pooled stream diverged at block {b} element {i} \
+                             (shards={shards}, tiling={tiling:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -26,7 +26,10 @@
 //!   xla_extension bindings are not linked).
 //! * [`fastcalosim`] — the real-world benchmark substrate: ATLAS-like
 //!   calorimeter geometry, parameterization store, event generation and hit
-//!   simulation.
+//!   simulation, drawing its uniforms through a pluggable
+//!   [`fastcalosim::RngSource`] — the standalone host engine, or a
+//!   [`fastcalosim::PooledSource`] that serves every draw through the
+//!   sharded service pool, bit-identically (DESIGN.md S17).
 //! * [`burner`] — the paper's §5.1 RNG-burner benchmark application, plus
 //!   the pooled variant that drives it through the service pool.
 //! * [`metrics`] — VAVS efficiency and the Pennycook performance-portability

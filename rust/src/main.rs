@@ -6,13 +6,17 @@
 //! portarng platforms                         # Table-1 inventory
 //! portarng burner --platform a100 --api sycl-buffer --batch 65536 [--iters 100]
 //! portarng fastcalosim --platform a100 --api sycl --workload single-e [--events N]
+//! portarng fastcalosim --platform a100 --api sycl --pool 4 [--tile-size 256]
 //! portarng repro --experiment fig3 [--quick] [--outdir results]
 //! portarng serve --batch-max 1048576 --demo-requests 32
 //! portarng serve --autotune [--profile profiles.json]   # adaptive dispatch
 //! portarng calibrate --platform a100 [--profile profiles.json]
 //! portarng check-artifacts                   # PJRT round-trip smoke test
-//! portarng lint-dag                          # hazard-analyze burner DAGs everywhere
+//! portarng lint-dag                          # hazard-analyze burner + FCS DAGs
 //! ```
+//!
+//! Flags are validated per subcommand: unknown or misspelled `--options`
+//! are rejected (a typo'd `--shard` must not silently serve defaults).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -35,28 +39,56 @@ fn main() -> ExitCode {
         eprintln!("{}", USAGE);
         return ExitCode::FAILURE;
     };
-    let opts = parse_opts(rest);
-    let result = match cmd.as_str() {
-        "platforms" => cmd_platforms(),
-        "burner" => cmd_burner(&opts),
-        "fastcalosim" => cmd_fastcalosim(&opts),
-        "repro" => cmd_repro(&opts),
-        "serve" => cmd_serve(&opts),
-        "calibrate" => cmd_calibrate(&opts),
-        "check-artifacts" => cmd_check_artifacts(),
-        "lint-dag" => cmd_lint_dag(&opts),
-        "--help" | "-h" | "help" => {
-            println!("{}", USAGE);
-            Ok(())
-        }
-        other => Err(format!("unknown command `{other}`\n{USAGE}").into()),
-    };
+    let result = dispatch(cmd, rest);
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+/// Per-subcommand flag allowlists: [`parse_opts`] rejects anything not
+/// listed here, so a typo'd flag fails loudly instead of silently running
+/// with defaults.
+const OPTS_BURNER: &[&str] = &[
+    "platform", "api", "batch", "iters", "range", "distr", "params", "pool", "stats-json",
+    "chaos",
+];
+const OPTS_FASTCALOSIM: &[&str] = &[
+    "platform", "api", "workload", "events", "pool", "tile-size", "team-width", "chaos",
+    "stats-json",
+];
+const OPTS_REPRO: &[&str] = &["experiment", "quick", "outdir"];
+const OPTS_SERVE: &[&str] = &[
+    "platform", "batch-max", "demo-requests", "shards", "overflow-at", "chaos", "tile-size",
+    "team-width", "autotune", "profile", "windows", "save-profile",
+];
+const OPTS_CALIBRATE: &[&str] = &["platform", "shards", "profile"];
+const OPTS_LINT_DAG: &[&str] = &["verbose"];
+
+fn dispatch(cmd: &str, rest: &[String]) -> CliResult {
+    match cmd {
+        "platforms" => {
+            parse_opts(cmd, rest, &[])?;
+            cmd_platforms()
+        }
+        "burner" => cmd_burner(&parse_opts(cmd, rest, OPTS_BURNER)?),
+        "fastcalosim" => cmd_fastcalosim(&parse_opts(cmd, rest, OPTS_FASTCALOSIM)?),
+        "repro" => cmd_repro(&parse_opts(cmd, rest, OPTS_REPRO)?),
+        "serve" => cmd_serve(&parse_opts(cmd, rest, OPTS_SERVE)?),
+        "calibrate" => cmd_calibrate(&parse_opts(cmd, rest, OPTS_CALIBRATE)?),
+        "check-artifacts" => {
+            parse_opts(cmd, rest, &[])?;
+            cmd_check_artifacts()
+        }
+        "lint-dag" => cmd_lint_dag(&parse_opts(cmd, rest, OPTS_LINT_DAG)?),
+        "--help" | "-h" | "help" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`\n{USAGE}").into()),
     }
 }
 
@@ -70,6 +102,8 @@ USAGE:
                   [--stats-json <path>] [--chaos <spec>]   (pooled mode only)
   portarng fastcalosim --platform <p> --api <native|sycl>
                   --workload <single-e|ttbar> [--events <n>]
+                  [--pool <shards> [--tile-size <n> [--team-width <w>]]
+                   [--chaos <spec>] [--stats-json <path>]]
   portarng repro --experiment <table1|fig2|fig3|fig4|table2|fig5|ablation-heuristic|all>
                   [--quick] [--outdir <dir>]
   portarng serve [--platform <p>] [--batch-max <n>] [--demo-requests <n>]
@@ -80,7 +114,8 @@ USAGE:
                  [--tile-size <n> [--team-width <w>]]
   portarng calibrate --platform <p> [--shards <n>] [--profile <path>]
   portarng check-artifacts
-  portarng lint-dag [--verbose]                (prove recorded DAGs race-free)
+  portarng lint-dag [--verbose]                (prove recorded DAGs race-free,
+                                                incl. the fastcalosim event loop)
 
 Distributions: uniform a b | gaussian mean stddev | lognormal m s |
                exponential lambda | poisson lambda | bits
@@ -93,22 +128,51 @@ Executor:    --tile-size turns flushes into per-tile work items on a
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
-fn parse_opts(args: &[String]) -> HashMap<String, String> {
+/// Parse `--key [value]` pairs, validated against the subcommand's
+/// allowlist: unknown flags, stray positionals and repeated flags are all
+/// errors (historically `--shard 4` silently served 1 shard — typos must
+/// fail loudly, same policy as the conflict validation in `cmd_serve`).
+fn parse_opts(
+    cmd: &str,
+    args: &[String],
+    known: &[&str],
+) -> Result<HashMap<String, String>, String> {
     let mut map = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                i += 1;
-                args[i].clone()
+        let Some(key) = args[i].strip_prefix("--") else {
+            return Err(format!(
+                "unexpected argument `{}` for `portarng {cmd}` (flags are --key [value])",
+                args[i]
+            ));
+        };
+        if !known.contains(&key) {
+            let hint = if known.is_empty() {
+                format!("`portarng {cmd}` takes no flags")
             } else {
-                "true".to_string()
+                format!(
+                    "`portarng {cmd}` accepts: {}",
+                    known
+                        .iter()
+                        .map(|k| format!("--{k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
             };
-            map.insert(key.to_string(), val);
+            return Err(format!("unknown flag --{key}; {hint}"));
+        }
+        let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            i += 1;
+            args[i].clone()
+        } else {
+            "true".to_string()
+        };
+        if map.insert(key.to_string(), val).is_some() {
+            return Err(format!("--{key} given more than once"));
         }
         i += 1;
     }
-    map
+    Ok(map)
 }
 
 fn need<'a>(opts: &'a HashMap<String, String>, key: &str) -> Result<&'a str, String> {
@@ -305,21 +369,126 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
 fn cmd_fastcalosim(opts: &HashMap<String, String>) -> CliResult {
     let platform = PlatformId::parse(need(opts, "platform")?).ok_or("unknown platform")?;
     let api = FcsApi::parse(need(opts, "api")?).ok_or("bad --api (native|sycl)")?;
-    let events: Option<usize> = opts.get("events").map(|s| s.parse()).transpose()?;
+    let events: Option<usize> = match opts.get("events") {
+        None => None,
+        Some(raw) => {
+            let n: usize =
+                raw.parse().map_err(|_| format!("bad --events `{raw}` (want a count)"))?;
+            if n == 0 {
+                return Err("--events must be >= 1 (omit the flag for the paper size)".into());
+            }
+            Some(n)
+        }
+    };
     let workload = match need(opts, "workload")? {
         "single-e" => Workload::SingleElectron { events: events.unwrap_or(1000) },
         "ttbar" => Workload::TTbar { events: events.unwrap_or(500) },
-        other => return Err(format!("unknown workload `{other}`").into()),
+        other => return Err(format!("unknown workload `{other}` (single-e|ttbar)").into()),
     };
+
+    // The pooled-only flags mean nothing on the standalone path: reject
+    // instead of silently ignoring (same policy as `burner`).
+    for flag in ["tile-size", "team-width", "chaos", "stats-json"] {
+        if opts.contains_key(flag) && !opts.contains_key("pool") {
+            return Err(format!(
+                "--{flag} requires --pool <shards> (it configures the serving pool)"
+            )
+            .into());
+        }
+    }
+
+    // Pooled mode: every uniform served by the sharded SYCL stack —
+    // bit-identical physics to the standalone run (same checksum).
+    if let Some(shards) = opts.get("pool") {
+        let shards: usize =
+            shards.parse().map_err(|_| format!("bad --pool `{shards}` (want a shard count)"))?;
+        if shards == 0 {
+            return Err("--pool must be >= 1 shard".into());
+        }
+        let tiling = tiling_opts(opts)?;
+        let chaos = chaos_spec(opts)?;
+        let run = portarng::fastcalosim::run_fastcalosim_pooled(
+            platform,
+            api,
+            workload,
+            2024,
+            shards,
+            tiling,
+            chaos.clone(),
+        )?;
+        let r = &run.report;
+        println!(
+            "fastcalosim {} {} {} [pooled x{}]: {} events in {:.3} s (virtual), \
+             {:.2} ms/event, checksum {:016x}",
+            platform.token(),
+            api.token(),
+            r.workload,
+            shards,
+            r.events,
+            r.total_ns as f64 / 1e9,
+            r.mean_event_ms(),
+            r.checksum
+        );
+        println!(
+            "  hits {} | rns {} | tables {} | E_in {:.1} GeV -> E_dep {:.1} GeV | wall {:.1} ms",
+            r.hits,
+            r.rns,
+            r.tables_loaded,
+            r.energy_in,
+            r.energy_dep,
+            r.wall_ns as f64 / 1e6
+        );
+        let f = run.telemetry.fcs;
+        println!(
+            "  per-event splits (virtual): generate {:.3} ms | transform {:.3} ms | \
+             d2h {:.3} ms over {} event(s)",
+            f.gen_ns as f64 / 1e6 / f.events.max(1) as f64,
+            f.transform_ns as f64 / 1e6 / f.events.max(1) as f64,
+            f.d2h_ns as f64 / 1e6 / f.events.max(1) as f64,
+            f.events
+        );
+        println!(
+            "  pool: {} draw request(s), {} launches, {} numbers delivered across {} shard(s)",
+            run.telemetry.total_requests(),
+            run.stats.total().launches,
+            run.telemetry.total_delivered(),
+            run.stats.shards.len()
+        );
+        if let Some(spec) = &chaos {
+            let res = run.telemetry.resilience_totals();
+            println!(
+                "  chaos [{spec}]: {} fault(s) injected, {} respawn(s), {} retried, \
+                 {} shed, {} deadline-exceeded",
+                res.faults_injected,
+                res.shard_respawns,
+                res.requests_retried,
+                res.requests_shed,
+                res.deadline_exceeded
+            );
+        }
+        if let Some(path) = opts.get("stats-json") {
+            let json = run.telemetry.to_json().to_json();
+            // Guarantee the documented round-trip property before writing.
+            portarng::telemetry::TelemetrySnapshot::from_json(
+                &portarng::jsonlite::Value::parse(&json)?,
+            )?;
+            std::fs::write(path, &json)?;
+            println!("[wrote telemetry snapshot to {path}]");
+        }
+        return Ok(());
+    }
+
     let r = run_fastcalosim(platform, api, workload, 2024)?;
     println!(
-        "fastcalosim {} {} {}: {} events in {:.3} s (virtual), {:.2} ms/event",
+        "fastcalosim {} {} {}: {} events in {:.3} s (virtual), {:.2} ms/event, \
+         checksum {:016x}",
         platform.token(),
         api.token(),
         r.workload,
         r.events,
         r.total_ns as f64 / 1e9,
-        r.mean_event_ms()
+        r.mean_event_ms(),
+        r.checksum
     );
     println!(
         "  hits {} | rns {} | tables {} | E_in {:.1} GeV -> E_dep {:.1} GeV | wall {:.1} ms",
@@ -724,6 +893,24 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
             }
             queue.wait();
             windows.push(("arena", lint_window(&queue.drain_records())?));
+        }
+
+        // 4. FastCaloSim event loop (DESIGN.md S17): two single-electron
+        //    events' rng / hits / rng:floor / d2h commands with their
+        //    declared access sets — the documented rng->hits RAW edge and
+        //    the serial deposit chain must be proved, not assumed. The
+        //    per-event windows are concatenated so cross-event deposit
+        //    edges resolve in-window for structural validation.
+        {
+            let mut cfg = portarng::fastcalosim::FcsConfig::new(platform, FcsApi::Sycl);
+            cfg.keep_windows = true;
+            let events = Workload::SingleElectron { events: 2 }.events(7);
+            let mut sim = portarng::fastcalosim::Simulator::new(cfg);
+            sim.simulate(&events)?;
+            sim.finish_source()?;
+            let records: Vec<portarng::sycl::CommandRecord> =
+                sim.take_windows().into_iter().flatten().collect();
+            windows.push(("fastcalosim", lint_window(&records)?));
         }
 
         let commands: usize = windows.iter().map(|(_, r)| r.commands).sum();

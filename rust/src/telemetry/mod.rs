@@ -6,12 +6,14 @@
 //! pool workers with relaxed atomics (nothing on the request hot path
 //! takes a lock or allocates), and read through cheap [`snapshot`]
 //! copies that serialize through `jsonlite` (schema
-//! `portarng-telemetry-v5`: per-command-class virtual timings,
+//! `portarng-telemetry-v6`: per-command-class virtual timings,
 //! worker-arena counters, per-shard DAG-hazard counters
 //! [`HazardCounters`], the resilience layer's fault / respawn /
-//! retry / shed / deadline counters [`ResilienceTotals`], and the tile
+//! retry / shed / deadline counters [`ResilienceTotals`], the tile
 //! executor's per-shard `tiles` / `pipeline` blocks ([`TileCounters`] /
-//! [`PipelineCounters`], DESIGN.md S16); v1–v4 superseded). The
+//! [`PipelineCounters`], DESIGN.md S16), and the pooled FastCaloSim
+//! driver's `fcs` block ([`FcsCounters`], DESIGN.md S17); v1–v5
+//! superseded). The
 //! [`autotune`](crate::autotune) controller
 //! closes the loop by turning snapshot deltas into
 //! [`DispatchPolicy`](crate::coordinator::DispatchPolicy) retunes.
@@ -23,7 +25,7 @@ mod registry;
 
 pub use histogram::{HistogramSnapshot, Log2Histogram, BUCKETS};
 pub use registry::{
-    ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, HazardCounters, Lane,
-    PipelineCounters, ResilienceTotals, ShardSnapshot, ShardTelemetry, TelemetryRegistry,
+    ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, FcsCounters, HazardCounters,
+    Lane, PipelineCounters, ResilienceTotals, ShardSnapshot, ShardTelemetry, TelemetryRegistry,
     TelemetrySnapshot, TileCounters, TELEMETRY_SCHEMA,
 };

@@ -10,7 +10,7 @@
 //!
 //! [`TelemetryRegistry::snapshot`] copies everything into a plain
 //! [`TelemetrySnapshot`] that serializes through `jsonlite`
-//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v3`, see
+//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v6`, see
 //! README "Telemetry snapshot schema"). v2 added per-command-class virtual
 //! timings ([`CommandTiming`]: generate / transform / d2h / other, fed
 //! from drained queue records) and the worker arena's allocation counters
@@ -26,7 +26,10 @@
 //! ([`TileCounters`]: nd-range tiles executed + their real wall time) and
 //! the `pipeline` block ([`PipelineCounters`]: cross-flush pipelining
 //! occupancy — tiled flushes, how many overlapped the previous flush, and
-//! the summed virtual overlap). v1/v2/v3/v4 are superseded.
+//! the summed virtual overlap). v6 adds the pool-level `fcs` block
+//! ([`FcsCounters`], DESIGN.md S17): the pooled FastCaloSim driver's
+//! per-event hit counts and generate/transform/D2H virtual splits — all
+//! zero unless the pool served a FastCaloSim run. v1–v5 are superseded.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,9 +44,10 @@ use super::histogram::{HistogramSnapshot, Log2Histogram};
 
 /// Telemetry snapshot schema identifier (bump on breaking changes).
 /// v1 (no per-command-class timings, no arena counters), v2 (no hazard
-/// counters, no arena `leaked`), v3 (no resilience counters) and v4 (no
-/// tile-executor / pipeline counters) are superseded.
-pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v5";
+/// counters, no arena `leaked`), v3 (no resilience counters), v4 (no
+/// tile-executor / pipeline counters) and v5 (no FastCaloSim `fcs`
+/// block) are superseded.
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v6";
 
 /// Command classes the serving path times. Mirrors
 /// `sycl::CommandClass` for the classes the pool's flushes issue —
@@ -119,6 +123,58 @@ impl CommandTiming {
                 .ok_or_else(|| Error::Json(format!("command timing missing `{key}`")))
         };
         Ok(CommandTiming { cmds: num("cmds")?, virt_ns: num("virt_ns")? })
+    }
+}
+
+/// FastCaloSim serving counters (DESIGN.md S17), pool-level: folded in by
+/// the pooled FCS driver after the run — one `record_fcs_event` per event
+/// with that event's virtual hit count and Fig.-4-style command-class
+/// split from the simulator's drained queue windows. All zero on a pool
+/// that never served FastCaloSim.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FcsCounters {
+    /// Events simulated through the pool.
+    pub events: u64,
+    /// Virtual hits across those events.
+    pub hits: u64,
+    /// Summed virtual ns in Generate-class commands (rng + rng:floor).
+    pub gen_ns: u64,
+    /// Summed virtual ns in Transform-class commands (hit deposition).
+    pub transform_ns: u64,
+    /// Summed virtual ns in D2H transfers (result readback).
+    pub d2h_ns: u64,
+}
+
+impl FcsCounters {
+    /// True when any FastCaloSim event was folded in.
+    pub fn any(&self) -> bool {
+        self.events != 0
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("events".into(), Value::Number(self.events as f64));
+        m.insert("hits".into(), Value::Number(self.hits as f64));
+        m.insert("gen_ns".into(), Value::Number(self.gen_ns as f64));
+        m.insert("transform_ns".into(), Value::Number(self.transform_ns as f64));
+        m.insert("d2h_ns".into(), Value::Number(self.d2h_ns as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<FcsCounters> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("fcs counters missing `{key}`")))
+        };
+        Ok(FcsCounters {
+            events: num("events")?,
+            hits: num("hits")?,
+            gen_ns: num("gen_ns")?,
+            transform_ns: num("transform_ns")?,
+            d2h_ns: num("d2h_ns")?,
+        })
     }
 }
 
@@ -656,6 +712,11 @@ pub struct TelemetryRegistry {
     retunes: AtomicU64,
     requests_retried: AtomicU64,
     requests_shed: AtomicU64,
+    fcs_events: AtomicU64,
+    fcs_hits: AtomicU64,
+    fcs_gen_ns: AtomicU64,
+    fcs_transform_ns: AtomicU64,
+    fcs_d2h_ns: AtomicU64,
     started: Instant,
 }
 
@@ -675,6 +736,11 @@ impl TelemetryRegistry {
             retunes: AtomicU64::new(0),
             requests_retried: AtomicU64::new(0),
             requests_shed: AtomicU64::new(0),
+            fcs_events: AtomicU64::new(0),
+            fcs_hits: AtomicU64::new(0),
+            fcs_gen_ns: AtomicU64::new(0),
+            fcs_transform_ns: AtomicU64::new(0),
+            fcs_d2h_ns: AtomicU64::new(0),
             started: Instant::now(),
         })
     }
@@ -713,6 +779,17 @@ impl TelemetryRegistry {
         self.requests_shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Fold one FastCaloSim event served through this pool into the
+    /// `fcs` block: the event's virtual hit count and its per-class
+    /// virtual split (from the simulator's drained command window).
+    pub fn record_fcs_event(&self, hits: u64, gen_ns: u64, transform_ns: u64, d2h_ns: u64) {
+        self.fcs_events.fetch_add(1, Ordering::Relaxed);
+        self.fcs_hits.fetch_add(hits, Ordering::Relaxed);
+        self.fcs_gen_ns.fetch_add(gen_ns, Ordering::Relaxed);
+        self.fcs_transform_ns.fetch_add(transform_ns, Ordering::Relaxed);
+        self.fcs_d2h_ns.fetch_add(d2h_ns, Ordering::Relaxed);
+    }
+
     /// Copy everything into a plain snapshot.
     pub fn snapshot(&self) -> TelemetrySnapshot {
         TelemetrySnapshot {
@@ -723,6 +800,13 @@ impl TelemetryRegistry {
             retunes: self.retunes.load(Ordering::Relaxed),
             requests_retried: self.requests_retried.load(Ordering::Relaxed),
             requests_shed: self.requests_shed.load(Ordering::Relaxed),
+            fcs: FcsCounters {
+                events: self.fcs_events.load(Ordering::Relaxed),
+                hits: self.fcs_hits.load(Ordering::Relaxed),
+                gen_ns: self.fcs_gen_ns.load(Ordering::Relaxed),
+                transform_ns: self.fcs_transform_ns.load(Ordering::Relaxed),
+                d2h_ns: self.fcs_d2h_ns.load(Ordering::Relaxed),
+            },
             shards: self.shards.iter().map(|s| s.snapshot()).collect(),
         }
     }
@@ -911,6 +995,9 @@ pub struct TelemetrySnapshot {
     pub requests_retried: u64,
     /// Requests shed at the ingress gate (depth bound hit).
     pub requests_shed: u64,
+    /// FastCaloSim serving counters (all zero unless the pool served a
+    /// FastCaloSim run; DESIGN.md S17).
+    pub fcs: FcsCounters,
     /// Per-shard telemetry, dispatch order.
     pub shards: Vec<ShardSnapshot>,
 }
@@ -1042,7 +1129,7 @@ impl TelemetrySnapshot {
             .fold(HazardCounters::default(), HazardCounters::merged)
     }
 
-    /// Serialize (schema `portarng-telemetry-v5`).
+    /// Serialize (schema `portarng-telemetry-v6`).
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
@@ -1062,6 +1149,7 @@ impl TelemetrySnapshot {
             Value::Number(self.requests_retried as f64),
         );
         m.insert("requests_shed".into(), Value::Number(self.requests_shed as f64));
+        m.insert("fcs".into(), self.fcs.to_json());
         m.insert(
             "shards".into(),
             Value::Array(self.shards.iter().map(ShardSnapshot::to_json).collect()),
@@ -1106,6 +1194,10 @@ impl TelemetrySnapshot {
             retunes: num("retunes")?,
             requests_retried: num("requests_retried")?,
             requests_shed: num("requests_shed")?,
+            fcs: FcsCounters::from_json(
+                v.get("fcs")
+                    .ok_or_else(|| Error::Json("snapshot missing `fcs`".into()))?,
+            )?,
             shards,
         })
     }
@@ -1158,6 +1250,8 @@ mod tests {
         reg.record_retry();
         reg.record_retry();
         reg.record_shed();
+        reg.record_fcs_event(5_100, 40_000, 12_000, 3_000);
+        reg.record_fcs_event(4_900, 38_000, 11_000, 3_000);
         reg
     }
 
@@ -1268,6 +1362,26 @@ mod tests {
         assert_eq!(back.to_json().to_json(), text);
         assert_eq!(back.platform, snap.platform);
         assert_eq!(back.total_delivered(), snap.total_delivered());
+        assert_eq!(back.fcs, snap.fcs);
+    }
+
+    #[test]
+    fn fcs_counters_accumulate_per_event() {
+        let snap = sample_registry().snapshot();
+        assert_eq!(
+            snap.fcs,
+            FcsCounters {
+                events: 2,
+                hits: 10_000,
+                gen_ns: 78_000,
+                transform_ns: 23_000,
+                d2h_ns: 6_000,
+            }
+        );
+        assert!(snap.fcs.any());
+        // A pool that never served FastCaloSim keeps the block all-zero.
+        let clean = TelemetryRegistry::new(PlatformId::A100, &[Lane::Batched]).snapshot();
+        assert!(!clean.fcs.any());
     }
 
     #[test]

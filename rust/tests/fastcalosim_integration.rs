@@ -1,6 +1,11 @@
-//! FastCaloSim integration: physics sanity + the Fig. 5 shape claims.
+//! FastCaloSim integration: physics sanity, the Fig. 5 shape claims, and
+//! the S17 serving-path determinism properties (standalone vs pooled,
+//! native vs SYCL, chaos vs control).
 
-use portarng::fastcalosim::{run_fastcalosim, FcsApi, Simulator, FcsConfig, Workload};
+use portarng::fastcalosim::{
+    run_fastcalosim, run_fastcalosim_pooled, FcsApi, FcsConfig, Simulator, Workload,
+};
+use portarng::fault::FaultSpec;
 use portarng::platform::PlatformId;
 
 #[test]
@@ -79,6 +84,104 @@ fn determinism_same_seed_same_result() {
     assert_eq!(a.total_ns, b.total_ns);
     assert_eq!(a.hits, b.hits);
     assert_eq!(a.energy_dep, b.energy_dep);
+}
+
+#[test]
+fn pooled_bit_identical_to_standalone_for_any_shard_and_tile_shape() {
+    // The S17 acceptance property: routing every draw through the sharded
+    // ServicePool must not move a single bit of physics — for any shard
+    // count or tile-executor shape — and must not perturb the virtual
+    // clock either (the pool is a host-side serving detail).
+    let w = Workload::SingleElectron { events: 4 };
+    let standalone = run_fastcalosim(PlatformId::A100, FcsApi::Sycl, w, 9).unwrap();
+    assert_eq!(standalone.source, "host");
+    for shards in [1usize, 4] {
+        for tiling in [None, Some((256, 2))] {
+            let pooled = run_fastcalosim_pooled(
+                PlatformId::A100,
+                FcsApi::Sycl,
+                w,
+                9,
+                shards,
+                tiling,
+                None,
+            )
+            .unwrap();
+            let r = &pooled.report;
+            assert_eq!(r.source, "pooled");
+            assert_eq!(
+                r.checksum, standalone.checksum,
+                "physics diverged (shards={shards}, tiling={tiling:?})"
+            );
+            assert_eq!(r.hits, standalone.hits);
+            assert_eq!(r.rns, standalone.rns);
+            assert_eq!(r.energy_dep.to_bits(), standalone.energy_dep.to_bits());
+            assert_eq!(r.total_ns, standalone.total_ns, "virtual clock moved");
+            assert_eq!(pooled.stats.shards.len(), shards);
+            assert!(pooled.telemetry.total_delivered() > 0);
+        }
+    }
+}
+
+#[test]
+fn native_and_sycl_ports_share_physics() {
+    // Port choice moves timing, never physics: identical hit counts and
+    // deposit checksums for the same seed on every platform.
+    for p in [PlatformId::A100, PlatformId::Rome7742] {
+        let w = Workload::SingleElectron { events: 4 };
+        let nat = run_fastcalosim(p, FcsApi::Native, w, 13).unwrap();
+        let syc = run_fastcalosim(p, FcsApi::Sycl, w, 13).unwrap();
+        assert_eq!(nat.checksum, syc.checksum, "{p:?}: ports disagree on physics");
+        assert_eq!(nat.hits, syc.hits);
+        assert_eq!(nat.rns, syc.rns);
+        assert_eq!(nat.energy_dep.to_bits(), syc.energy_dep.to_bits());
+    }
+}
+
+#[test]
+fn chaos_pooled_run_matches_fault_free_control() {
+    // Kills + transient faults must be absorbed by the supervisor with
+    // bit-identical replies (skip-ahead regeneration from recorded
+    // offsets) — the chaos run's physics equals the fault-free control.
+    let w = Workload::SingleElectron { events: 3 };
+    let control =
+        run_fastcalosim_pooled(PlatformId::A100, FcsApi::Sycl, w, 21, 2, None, None).unwrap();
+    let chaos_plan = FaultSpec::parse("seed=7,rate=0.02,kill=0@3").unwrap();
+    let chaos = run_fastcalosim_pooled(
+        PlatformId::A100,
+        FcsApi::Sycl,
+        w,
+        21,
+        2,
+        None,
+        Some(chaos_plan),
+    )
+    .unwrap();
+    assert_eq!(chaos.report.checksum, control.report.checksum, "chaos changed physics");
+    assert_eq!(chaos.report.hits, control.report.hits);
+    let res = chaos.telemetry.resilience_totals();
+    assert!(res.faults_injected > 0, "plan never fired — the soak is vacuous");
+    assert!(!control.telemetry.resilience_totals().any(), "control saw faults");
+}
+
+#[test]
+fn pooled_telemetry_v6_round_trips_with_event_splits() {
+    let w = Workload::SingleElectron { events: 3 };
+    let run =
+        run_fastcalosim_pooled(PlatformId::A100, FcsApi::Sycl, w, 17, 2, None, None).unwrap();
+    let fcs = run.telemetry.fcs;
+    assert_eq!(fcs.events, 3);
+    assert!(fcs.hits > 0);
+    assert!(fcs.gen_ns > 0, "generate split empty");
+    assert!(fcs.transform_ns > 0, "transform split empty");
+    assert!(fcs.d2h_ns > 0, "d2h split empty");
+    let json = run.telemetry.to_json().to_json();
+    assert!(json.contains("portarng-telemetry-v6"));
+    let back = portarng::telemetry::TelemetrySnapshot::from_json(
+        &portarng::jsonlite::Value::parse(&json).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(back.fcs, fcs);
 }
 
 #[test]
