@@ -20,8 +20,8 @@
 //!   * live counters: faults.injected, shard.respawns and
 //!     requests.retried are all nonzero under chaos and all zero in the
 //!     control run;
-//!   * the `portarng-telemetry-v4` snapshot round-trips through JSON
-//!     with the resilience block intact;
+//!   * the telemetry snapshot (current schema, `TELEMETRY_SCHEMA`)
+//!     round-trips through JSON with the resilience block intact;
 //!   * inert-path overhead: with no plan installed, `fault::trip` costs
 //!     under 200 ns per call (one thread-local read + a `None` check).
 
@@ -29,7 +29,7 @@ use portarng::benchkit::{BenchConfig, BenchGroup};
 use portarng::burner::{run_burner_pooled_chaos, BurnerApi, BurnerConfig, PoolBurnerReport};
 use portarng::fault::{self, FaultSite, FaultSpec};
 use portarng::platform::PlatformId;
-use portarng::telemetry::TelemetrySnapshot;
+use portarng::telemetry::{TelemetrySnapshot, TELEMETRY_SCHEMA};
 
 const BATCH: usize = 4096;
 const REQUESTS: usize = 160;
@@ -106,10 +106,12 @@ fn main() {
         res.deadline_exceeded
     );
 
-    // Gate 3: the v4 snapshot survives a JSON round-trip with the
-    // resilience block intact.
+    // Gate 3: the snapshot survives a JSON round-trip with the
+    // resilience block intact. Judge against the exported schema
+    // constant, not a literal — this line predates three schema bumps
+    // it silently missed.
     let json = soaked.telemetry.to_json().to_json();
-    assert!(json.contains("portarng-telemetry-v4"), "snapshot lost its schema tag");
+    assert!(json.contains(TELEMETRY_SCHEMA), "snapshot lost its schema tag");
     let back = TelemetrySnapshot::from_json(
         &portarng::jsonlite::Value::parse(&json).expect("snapshot JSON must parse"),
     )
@@ -117,7 +119,7 @@ fn main() {
     let back_res = back.resilience_totals();
     assert_eq!(back_res.faults_injected, res.faults_injected, "round-trip lost fault counts");
     assert_eq!(back_res.shard_respawns, res.shard_respawns, "round-trip lost respawn counts");
-    println!("telemetry v4 round-trip with resilience block: OK");
+    println!("telemetry {TELEMETRY_SCHEMA} round-trip with resilience block: OK");
 
     // Gate 4: inert-path overhead. No plan is installed on this thread,
     // so trip() must reduce to a thread-local read + None check.

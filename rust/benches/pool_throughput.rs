@@ -23,9 +23,12 @@
 //!     diagnostics across the widened per-tile DAG.
 
 use portarng::benchkit::{BenchConfig, BenchGroup};
-use portarng::burner::{run_burner_pooled, BurnerApi, BurnerConfig, PoolBurnerReport};
+use portarng::burner::{
+    run_burner_pooled, run_burner_pooled_opts, BurnerApi, BurnerConfig, PoolBurnerReport,
+};
 use portarng::coordinator::{PoolConfig, ServicePool};
 use portarng::platform::PlatformId;
+use portarng::trace::TraceConfig;
 
 const BATCH: usize = 1 << 16;
 const REQUESTS: usize = 192;
@@ -227,6 +230,45 @@ fn main() {
     } else {
         println!("tile executor gate skipped: {cpus} CPUs < 4 (cannot host the team)");
     }
+
+    // Gate 5: request-tracer overhead (DESIGN.md S18). The trace layer
+    // claims near-zero cost while disabled (one relaxed load per record
+    // site) and <= 5% delivered-throughput cost with rings recording.
+    // Interleave the two configurations sample by sample and judge
+    // medians, so drift in machine load charges both sides equally.
+    const TRACE_SAMPLES: usize = 5;
+    let burner_cfg = BurnerConfig::paper_default(PlatformId::A100, BurnerApi::SyclBuffer, BATCH);
+    let trace_cfg = TraceConfig::default(); // rings on, wall clock, no flight dir
+    let mut tput_off: Vec<f64> = Vec::new();
+    let mut tput_on: Vec<f64> = Vec::new();
+    for _ in 0..TRACE_SAMPLES {
+        let off = run_burner_pooled_opts(&burner_cfg, 4, REQUESTS, None, None).unwrap();
+        assert!(off.spans.is_empty(), "untraced run recorded spans");
+        tput_off.push(off.throughput_m_per_s());
+        let on = run_burner_pooled_opts(&burner_cfg, 4, REQUESTS, None, Some(&trace_cfg)).unwrap();
+        // The traced run must have actually paid for its spans: at least
+        // admit + stage + reply per request.
+        assert!(
+            on.spans.len() >= REQUESTS * 3,
+            "traced run recorded only {} spans for {REQUESTS} requests",
+            on.spans.len()
+        );
+        tput_on.push(on.throughput_m_per_s());
+    }
+    let median = |v: &mut Vec<f64>| {
+        v.sort_by(|a, b| a.total_cmp(b));
+        v[v.len() / 2]
+    };
+    let (m_off, m_on) = (median(&mut tput_off), median(&mut tput_on));
+    let cost = (1.0 - m_on / m_off) * 100.0;
+    println!(
+        "\ntracing overhead: {m_off:.0} M/s untraced -> {m_on:.0} M/s traced ({cost:+.1}% cost)"
+    );
+    assert!(
+        m_on >= m_off * 0.95,
+        "tracing costs {cost:.1}% of delivered throughput (gate: <= 5%)"
+    );
+    println!("tracing overhead gate (<= 5%): OK");
 
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_pool_throughput.csv", g.to_csv()).unwrap();

@@ -30,6 +30,7 @@ use crate::sycl::{
     Access, AccessMode, Buffer, CommandClass, CommandRecord, Queue, SyclRuntimeProfile,
 };
 use crate::telemetry::TelemetrySnapshot;
+use crate::trace::{Span, TraceConfig};
 use std::sync::Arc;
 
 /// Batches above this run through [`run_burner_virtual`] (same command
@@ -551,6 +552,10 @@ pub struct PoolBurnerReport {
     /// checksums across shard counts certify bit-identical per-request
     /// streams.
     pub checksum: u64,
+    /// Merged span snapshot from the request tracer (what
+    /// `burner --pool --trace <path>` exports as Chrome trace JSON).
+    /// Empty when tracing was not enabled.
+    pub spans: Vec<Span>,
 }
 
 impl PoolBurnerReport {
@@ -605,6 +610,22 @@ pub fn run_burner_pooled_chaos(
     requests: usize,
     chaos: Option<&FaultSpec>,
 ) -> Result<PoolBurnerReport> {
+    run_burner_pooled_opts(cfg, shards, requests, chaos, None)
+}
+
+/// [`run_burner_pooled_chaos`] with an optional request-tracer
+/// configuration (`burner --pool --trace <path>`, DESIGN.md S18). When
+/// `trace` is set the pool records spans into per-shard rings and the
+/// report carries the merged snapshot in [`PoolBurnerReport::spans`];
+/// combined with `--chaos`, worker kills additionally leave
+/// flight-recorder dumps in the config's `flight_dir`.
+pub fn run_burner_pooled_opts(
+    cfg: &BurnerConfig,
+    shards: usize,
+    requests: usize,
+    chaos: Option<&FaultSpec>,
+    trace: Option<&TraceConfig>,
+) -> Result<PoolBurnerReport> {
     if !matches!(cfg.api, BurnerApi::SyclBuffer | BurnerApi::SyclUsm) {
         return Err(Error::InvalidArgument(format!(
             "pooled burner serves through the SYCL runtime (USM batch path); \
@@ -633,6 +654,7 @@ pub fn run_burner_pooled_chaos(
         // always-fail plan surfaces as a typed error.
         pool_cfg.ingress.max_retries = 12;
     }
+    pool_cfg.trace = trace.cloned();
     let pool = ServicePool::spawn(pool_cfg);
 
     let wall_start = std::time::Instant::now();
@@ -649,8 +671,14 @@ pub fn run_burner_pooled_chaos(
     }
     let wall_ns = wall_start.elapsed().as_nanos() as u64;
 
-    let telemetry = pool.telemetry().snapshot();
+    // Snapshot telemetry and spans after shutdown so in-flight flushes
+    // have retired and the final trace counters are published (the Arcs
+    // keep both registries alive past the pool).
+    let registry = pool.telemetry().clone();
+    let tracer = pool.tracer();
     let stats = pool.shutdown()?;
+    let telemetry = registry.snapshot();
+    let spans = tracer.map(|t| t.snapshot()).unwrap_or_default();
     Ok(PoolBurnerReport {
         shards,
         requests,
@@ -659,6 +687,7 @@ pub fn run_burner_pooled_chaos(
         stats,
         telemetry,
         checksum,
+        spans,
     })
 }
 

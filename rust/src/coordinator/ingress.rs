@@ -45,6 +45,13 @@ pub struct IngressConfig {
     pub backoff_base: Duration,
     /// Backoff ceiling (bounded exponential).
     pub backoff_cap: Duration,
+    /// Hard ceiling on total re-dispatches (retry bumps *plus*
+    /// post-respawn redeliveries) any single request may accumulate —
+    /// asserted in [`InflightTable::reissue`]. A request crossing it
+    /// means the supervisor is looping; the assertion turns that
+    /// livelock into a loud failure. Sized well above `max_retries` so
+    /// legitimate chaos-soak respawn storms never trip it.
+    pub redispatch_cap: u32,
 }
 
 impl Default for IngressConfig {
@@ -55,6 +62,7 @@ impl Default for IngressConfig {
             max_retries: 4,
             backoff_base: Duration::from_micros(50),
             backoff_cap: Duration::from_millis(2),
+            redispatch_cap: 64,
         }
     }
 }
@@ -80,6 +88,10 @@ pub(crate) struct Inflight {
     pub(crate) shard: usize,
     /// Retry re-dispatches performed so far.
     pub(crate) attempts: u32,
+    /// Total re-dispatches of any kind (retry bumps + post-respawn
+    /// redeliveries) — the trace's `supervisor.redispatch` span payload
+    /// and the quantity the `redispatch_cap` assertion bounds.
+    pub(crate) redispatches: u32,
     pub(crate) deadline: Option<Instant>,
     /// Clone of the caller's reply sender. The caller's receiver stays
     /// open as long as this entry lives, even when the worker holding the
@@ -92,14 +104,23 @@ pub(crate) struct Inflight {
 /// supervisor after a worker death or a transient fault.
 pub(crate) struct InflightTable {
     entries: Mutex<HashMap<u64, Inflight>>,
+    /// Monotone id source: the id returned by [`register`] is the
+    /// pool-global `request_id` every trace span for the request
+    /// carries, and [`reissue`] reuses it — retried work stays
+    /// attributable to the original request.
+    ///
+    /// [`register`]: InflightTable::register
+    /// [`reissue`]: InflightTable::reissue
     next_id: AtomicU64,
+    redispatch_cap: u32,
 }
 
 impl InflightTable {
-    pub(crate) fn new() -> Arc<InflightTable> {
+    pub(crate) fn new(redispatch_cap: u32) -> Arc<InflightTable> {
         Arc::new(InflightTable {
             entries: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(0),
+            redispatch_cap,
         })
     }
 
@@ -121,7 +142,16 @@ impl InflightTable {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.entries.lock().unwrap().insert(
             id,
-            Inflight { n, range, offset, shard, attempts: 0, deadline, reply },
+            Inflight {
+                n,
+                range,
+                offset,
+                shard,
+                attempts: 0,
+                redispatches: 0,
+                deadline,
+                reply,
+            },
         );
         id
     }
@@ -148,15 +178,30 @@ impl InflightTable {
     /// Rebuild the wire request for a live entry, reassigning it to
     /// `shard` (and bumping its attempt count when `bump` — supervisor
     /// retries bump; post-respawn redispatches of untouched entries do
-    /// not). The offset is the one assigned at admission.
-    pub(crate) fn reissue(&self, id: u64, shard: usize, bump: bool) -> Option<ServiceRequest> {
+    /// not). The offset — and the id itself — are the ones assigned at
+    /// admission, so the re-dispatch stays attributable to the original
+    /// request. Returns the request plus its total redispatch count;
+    /// asserts the count against the configured per-request cap.
+    pub(crate) fn reissue(
+        &self,
+        id: u64,
+        shard: usize,
+        bump: bool,
+    ) -> Option<(ServiceRequest, u32)> {
         let mut entries = self.entries.lock().unwrap();
         let e = entries.get_mut(&id)?;
         if bump {
             e.attempts += 1;
         }
+        e.redispatches += 1;
+        assert!(
+            e.redispatches <= self.redispatch_cap,
+            "request {id} redispatched {} times (cap {}): supervisor livelock",
+            e.redispatches,
+            self.redispatch_cap,
+        );
         e.shard = shard;
-        Some(ServiceRequest {
+        let req = ServiceRequest {
             id,
             n: e.n,
             range: e.range,
@@ -164,7 +209,8 @@ impl InflightTable {
             deadline: e.deadline,
             attempt: e.attempts,
             reply: e.reply.clone(),
-        })
+        };
+        Some((req, e.redispatches))
     }
 
     /// Ids of every live entry assigned to `shard` (ascending, so
@@ -234,7 +280,7 @@ mod tests {
 
     #[test]
     fn ledger_register_reissue_complete() {
-        let table = InflightTable::new();
+        let table = InflightTable::new(64);
         let (tx, rx) = mpsc::channel();
         let id = table.register(64, (0.0, 1.0), 1000, 2, None, tx);
         assert_eq!(table.len(), 1);
@@ -243,11 +289,18 @@ mod tests {
         assert!(table.assigned_to(0).is_empty());
 
         // A bumping reissue moves the entry and increments attempts, but
-        // keeps the admission-time offset.
-        let req = table.reissue(id, 0, true).unwrap();
+        // keeps the admission-time offset — and the admission-time id.
+        let (req, redispatches) = table.reissue(id, 0, true).unwrap();
         assert_eq!((req.id, req.offset, req.attempt), (id, 1000, 1));
+        assert_eq!(redispatches, 1);
         assert_eq!(table.retry_info(id), Some((1, None, 64)));
         assert_eq!(table.assigned_to(0), vec![id]);
+
+        // A non-bumping (post-respawn) reissue keeps attempts but still
+        // counts as a redispatch.
+        let (req2, redispatches) = table.reissue(id, 1, false).unwrap();
+        assert_eq!((req2.id, req2.attempt), (id, 1));
+        assert_eq!(redispatches, 2);
 
         // The reissued sender reaches the caller's receiver.
         req.reply.send(Ok(vec![1.0])).unwrap();
@@ -261,7 +314,7 @@ mod tests {
 
     #[test]
     fn redispatch_order_is_deterministic() {
-        let table = InflightTable::new();
+        let table = InflightTable::new(64);
         let mut ids = Vec::new();
         for i in 0..5 {
             let (tx, _rx) = mpsc::channel();
@@ -270,5 +323,16 @@ mod tests {
         assert_eq!(table.assigned_to(1), ids); // ascending admission order
         assert_eq!(table.drain_all().len(), 5);
         assert_eq!(table.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "supervisor livelock")]
+    fn redispatch_cap_assertion_fires_on_livelock() {
+        let table = InflightTable::new(3);
+        let (tx, _rx) = mpsc::channel();
+        let id = table.register(8, (0.0, 1.0), 0, 0, None, tx);
+        for _ in 0..4 {
+            table.reissue(id, 0, false);
+        }
     }
 }

@@ -96,6 +96,7 @@ use crate::telemetry::{
     ArenaCounters, CommandKind, HazardCounters, Lane, ShardTelemetry, TelemetryRegistry,
     TelemetrySnapshot,
 };
+use crate::trace::{self, ShardWriter, Span, SpanKind, TraceConfig, Tracer};
 
 use super::batcher::{BatchOutcome, PendingRequest, RequestBatcher};
 use super::heuristic::{DispatchPolicy, Route, TuningHandle, TuningParams};
@@ -223,6 +224,11 @@ pub struct PoolConfig {
     pub fault: Option<FaultSpec>,
     /// Admission and retry policy (depth bound, deadlines, backoff).
     pub ingress: IngressConfig,
+    /// End-to-end tracing (DESIGN.md S18): per-shard span rings, the
+    /// `--trace` Chrome export and the crash flight recorder. `None`
+    /// (the default) keeps every record site at one relaxed static
+    /// load — the bench-gated disabled path.
+    pub trace: Option<TraceConfig>,
 }
 
 impl PoolConfig {
@@ -241,6 +247,7 @@ impl PoolConfig {
             tiling: None,
             fault: None,
             ingress: IngressConfig::default(),
+            trace: None,
         }
     }
 
@@ -268,6 +275,8 @@ fn tiling_from_env() -> Option<(usize, usize)> {
 pub(crate) struct WorkerCtx {
     platform: PlatformId,
     seed: u64,
+    /// Shard index: the trace writer's lane and the telemetry row.
+    shard: usize,
     lane: Route,
     tuning: Arc<TuningHandle>,
     telemetry: Arc<ShardTelemetry>,
@@ -275,6 +284,7 @@ pub(crate) struct WorkerCtx {
     inflight: Arc<InflightTable>,
     retry_tx: mpsc::Sender<SupMsg>,
     max_retries: u32,
+    tracer: Option<Arc<Tracer>>,
 }
 
 struct ShardLink {
@@ -373,8 +383,14 @@ impl Drop for ShardSlot {
 /// from `ctx.tuning` on every request so retunes apply without a
 /// round-trip.
 fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
-    // Arm (or explicitly disarm) this worker thread's fault seams.
+    // Arm (or explicitly disarm) this worker thread's fault seams, and
+    // — same idiom — install (or clear) its trace writer.
     fault::install(ctx.fault.clone());
+    trace::install(
+        ctx.tracer
+            .as_ref()
+            .map(|t| ShardWriter::new(t.clone(), ctx.shard as u32)),
+    );
     let set = BackendRegistry::new().shard_set(ctx.platform);
     let backend = match ctx.lane {
         Route::Batched => set.host,
@@ -450,6 +466,15 @@ fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
                     ctx.telemetry.record_request(req.n);
                     ctx.telemetry.record_deadline_exceeded();
                     ctx.inflight.complete(req.id);
+                    trace::with(|w| {
+                        let t = w.now_ns();
+                        w.record(
+                            Span::event(SpanKind::ReplySend, 0, t)
+                                .req(req.id)
+                                .aux(req.attempt as u64)
+                                .aux2(1),
+                        );
+                    });
                     let _ = req.reply.send(Err(Error::DeadlineExceeded));
                     continue;
                 }
@@ -462,6 +487,14 @@ fn worker_main(ctx: &WorkerCtx, rx: &mpsc::Receiver<Msg>) {
                     stream_offset: req.offset,
                 };
                 ctx.telemetry.record_request(req.n);
+                trace::with(|w| {
+                    let t = w.now_ns();
+                    w.record(
+                        Span::event(SpanKind::BatcherStage, 0, t)
+                            .req(req.id)
+                            .aux(req.n as u64),
+                    );
+                });
                 waiting.push(req);
                 if let Some(batch) = batcher.push(pending) {
                     launch(
@@ -579,6 +612,15 @@ fn launch<'a>(
 ) {
     let telemetry = &ctx.telemetry;
     let wall_start = Instant::now();
+    // Claim the flush id (per-shard monotone, survives respawns) and the
+    // launch start time up front, so every span this flush records —
+    // including the cmd.* spans joining the hazard DAG — shares one id.
+    let mut flush_id = crate::trace::NONE_ID;
+    let mut t_flush = 0u64;
+    trace::with(|w| {
+        flush_id = w.next_flush_id();
+        t_flush = w.now_ns();
+    });
     slices.clear();
     slices.extend(batch.members.iter().map(|m| BatchSlice {
         buffer_offset: m.batch_offset,
@@ -665,6 +707,19 @@ fn launch<'a>(
         }
     }
 
+    // The launch span covers submission through lease handoff; it is
+    // recorded before the cmd.* spans so the flush's span chain is
+    // seq-ordered launch < commands < replies.
+    trace::with(|w| {
+        let t = w.now_ns();
+        w.record(
+            Span::range(SpanKind::FlushLaunch, 0, t_flush, t)
+                .flush(flush_id)
+                .aux(batch.launch_n as u64)
+                .aux2(batch.members.len() as u64),
+        );
+    });
+
     let mut payload = 0u64;
     for r in &results {
         if let Ok(v) = r {
@@ -704,6 +759,14 @@ fn launch<'a>(
             _ => CommandKind::Other,
         };
         telemetry.record_command(kind, r.virt_end_ns - r.virt_start_ns);
+        // One span per generate/transform/d2h record: virtual-clock
+        // timestamps, command id + lease generation as the join keys
+        // against the hazard analyzer's DAG.
+        trace::with(|w| {
+            if let Some(span) = crate::trace::span_for_record(&r, w.lane(), flush_id) {
+                w.record(span);
+            }
+        });
     }
     if !spec.is_serial() {
         let overlap = if first_generate_ns == u64::MAX {
@@ -712,6 +775,14 @@ fn launch<'a>(
             pipeline.prev_end_ns.saturating_sub(first_generate_ns)
         };
         telemetry.record_pipeline_flush(overlap);
+        trace::with(|w| {
+            let t = w.now_ns();
+            w.record(
+                Span::event(SpanKind::PipelineOverlap, 0, t)
+                    .flush(flush_id)
+                    .aux(overlap),
+            );
+        });
         telemetry.record_tiles(
             tiles.len() as u64,
             tiles.iter().map(|t| t.wall_ns).sum(),
@@ -745,6 +816,16 @@ fn launch<'a>(
         let req = &waiting[m.id as usize];
         match reply {
             Ok(v) => {
+                trace::with(|w| {
+                    let t = w.now_ns();
+                    w.record(
+                        Span::event(SpanKind::ReplySend, 0, t)
+                            .req(req.id)
+                            .flush(flush_id)
+                            .aux(req.attempt as u64)
+                            .aux2(0),
+                    );
+                });
                 // Send THEN complete: a worker dying between the two
                 // leaves the entry to the supervisor, whose re-dispatch
                 // duplicates a bit-identical reply — benign, the caller
@@ -769,6 +850,16 @@ fn launch<'a>(
                     }
                 }
                 telemetry.record_failure();
+                trace::with(|w| {
+                    let t = w.now_ns();
+                    w.record(
+                        Span::event(SpanKind::ReplySend, 0, t)
+                            .req(req.id)
+                            .flush(flush_id)
+                            .aux(req.attempt as u64)
+                            .aux2(1),
+                    );
+                });
                 let _ = req.reply.send(Err(e));
                 ctx.inflight.complete(req.id);
             }
@@ -788,6 +879,7 @@ pub struct ServicePool {
     inflight: Arc<InflightTable>,
     ingress: IngressConfig,
     supervisor: Option<Supervisor>,
+    tracer: Option<Arc<Tracer>>,
     cursor: AtomicU64,
 }
 
@@ -808,7 +900,8 @@ impl ServicePool {
             params = params.tiled(tile_size, team_width);
         }
         let tuning = Arc::new(TuningHandle::new(params));
-        let inflight = InflightTable::new();
+        let inflight = InflightTable::new(cfg.ingress.redispatch_cap);
+        let tracer = cfg.trace.as_ref().map(|tc| Tracer::new(lanes.len(), tc));
         let (sup_tx, sup_rx) = mpsc::channel();
         let mut slots = Vec::with_capacity(lanes.len());
         for (i, &lane) in lanes.iter().enumerate() {
@@ -821,6 +914,7 @@ impl ServicePool {
                 WorkerCtx {
                     platform: cfg.platform,
                     seed: cfg.seed,
+                    shard: i,
                     lane: route,
                     tuning: tuning.clone(),
                     telemetry: telemetry.shard(i),
@@ -828,6 +922,7 @@ impl ServicePool {
                     inflight: inflight.clone(),
                     retry_tx: sup_tx.clone(),
                     max_retries: cfg.ingress.max_retries,
+                    tracer: tracer.clone(),
                 },
             ));
         }
@@ -839,6 +934,7 @@ impl ServicePool {
             telemetry.clone(),
             router.clone(),
             cfg.ingress,
+            tracer.clone(),
             sup_tx,
             sup_rx,
         );
@@ -852,6 +948,7 @@ impl ServicePool {
             inflight,
             ingress: cfg.ingress,
             supervisor: Some(supervisor),
+            tracer,
             cursor: AtomicU64::new(0),
         }
     }
@@ -874,6 +971,14 @@ impl ServicePool {
     /// The live tuning handle the dispatcher and workers read.
     pub fn tuning(&self) -> &Arc<TuningHandle> {
         &self.tuning
+    }
+
+    /// The pool's trace recorder, when [`PoolConfig::trace`] configured
+    /// one. Snapshot it for the Chrome export; it stays valid (and keeps
+    /// its rings) after shutdown, so exporting after the pool is torn
+    /// down sees every span.
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.clone()
     }
 
     /// Requests admitted but not yet answered (the depth the shed gate
@@ -913,12 +1018,25 @@ impl ServicePool {
             return rx;
         }
         let deadline = self.ingress.deadline.map(|d| Instant::now() + d);
+        let t_admit = self.tracer.as_ref().map(|t| t.now_ns());
         let offset = self.cursor.fetch_add(n as u64, Ordering::Relaxed);
         let (idx, overflow) = self.router.route(n);
         self.telemetry.record_dispatch(overflow);
         let id = self
             .inflight
             .register(n, range, offset, idx, deadline, reply.clone());
+        if let Some(tr) = &self.tracer {
+            // The admit span goes to the coordinator ring (not the
+            // shard's): a shard's flight dump then contains exactly what
+            // its worker observed, which is what makes dumps
+            // deterministic under an op-counted kill.
+            tr.record_coord(
+                Span::range(SpanKind::IngressAdmit, idx as u32, t_admit.unwrap(), tr.now_ns())
+                    .req(id)
+                    .aux(n as u64)
+                    .aux2(overflow as u64),
+            );
+        }
         // A failed send means the worker died between routing and
         // delivery: the ledger entry stays, and the supervisor's sweep
         // respawns the shard and re-dispatches it.
@@ -974,6 +1092,12 @@ impl ServicePool {
         for e in self.inflight.drain_all() {
             self.telemetry.shard(e.shard).record_failure();
             let _ = e.reply.send(Err(Error::ShardLost));
+        }
+        // Settle the telemetry `trace` block: the supervisor published it
+        // every sweep tick, but spans recorded after its last tick (the
+        // final flush's replies) would otherwise be missed.
+        if let Some(tr) = &self.tracer {
+            self.telemetry.set_trace_activity(tr.spans_recorded(), tr.spans_dropped());
         }
         let mut stats = self.stats_now();
         stats.lost_shards = lost;

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::Error;
 use crate::telemetry::TelemetryRegistry;
+use crate::trace::{Span, SpanKind, Tracer};
 
 use super::ingress::{InflightTable, IngressConfig, Router};
 use super::pool::{Msg, ShardSlot};
@@ -73,11 +74,12 @@ impl Supervisor {
         registry: Arc<TelemetryRegistry>,
         router: Arc<Router>,
         cfg: IngressConfig,
+        tracer: Option<Arc<Tracer>>,
         tx: mpsc::Sender<SupMsg>,
         rx: mpsc::Receiver<SupMsg>,
     ) -> Supervisor {
         let worker = std::thread::spawn(move || {
-            let state = State { slots, inflight, registry, router, cfg };
+            let state = State { slots, inflight, registry, router, cfg, tracer };
             loop {
                 match rx.recv_timeout(Duration::from_millis(1)) {
                     Ok(SupMsg::Retry { id, site }) => state.handle_retry(id, site),
@@ -85,6 +87,7 @@ impl Supervisor {
                     Err(RecvTimeoutError::Timeout) => {}
                 }
                 state.sweep();
+                state.publish_trace();
             }
             // The pool is shutting down: answer queued retries with the
             // fault they hit rather than re-dispatching into dying shards
@@ -122,6 +125,7 @@ struct State {
     registry: Arc<TelemetryRegistry>,
     router: Arc<Router>,
     cfg: IngressConfig,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl State {
@@ -149,14 +153,38 @@ impl State {
         }
         std::thread::sleep(self.cfg.backoff(attempts + 1));
         let (idx, _overflow) = self.router.route(n);
-        if let Some(req) = self.inflight.reissue(id, idx, true) {
+        if let Some((req, redispatches)) = self.inflight.reissue(id, idx, true) {
             self.registry.record_retry();
+            self.record_redispatch(id, idx, redispatches, true);
             // A failed send means the target worker just died: the entry
             // stays assigned to `idx` in the ledger, and the next sweep
             // respawns that shard and re-dispatches it.
             if self.slots[idx].send(Msg::Generate(req)) {
                 let _ = self.slots[idx].send(Msg::Flush);
             }
+        }
+    }
+
+    /// `supervisor.redispatch` span into the coordinator ring: the
+    /// request's id ties the re-dispatch back to the original admit.
+    fn record_redispatch(&self, id: u64, shard: usize, redispatches: u32, retry: bool) {
+        if let Some(tr) = &self.tracer {
+            tr.record_coord(
+                Span::event(SpanKind::SupervisorRedispatch, shard as u32, tr.now_ns())
+                    .req(id)
+                    .aux(redispatches as u64)
+                    .aux2(retry as u64),
+            );
+        }
+    }
+
+    /// Publish the tracer's running counters into the telemetry `trace`
+    /// block (cheap relaxed stores; runs every sweep tick so snapshots
+    /// taken mid-run stay fresh).
+    fn publish_trace(&self) {
+        if let Some(tr) = &self.tracer {
+            self.registry
+                .set_trace_activity(tr.spans_recorded(), tr.spans_dropped());
         }
     }
 
@@ -175,11 +203,20 @@ impl State {
                 // supervisor publishes on its behalf.
                 telemetry.set_faults_injected(plan.injected());
             }
+            // Flight recorder: drain the dead shard's ring into a dump
+            // BEFORE respawning, so the dump holds exactly the spans the
+            // dead incarnation recorded (its last flushes, in canonical
+            // order) and the fresh worker's spans can't mix in.
+            if let Some(tr) = &self.tracer {
+                tr.flight_dump(slot.idx);
+                self.registry.record_flight_dump();
+            }
             slot.respawn();
             for id in self.inflight.assigned_to(slot.idx) {
                 // Same shard, no attempt bump: a worker death is not the
                 // request's fault. Deadlines are re-checked at dequeue.
-                if let Some(req) = self.inflight.reissue(id, slot.idx, false) {
+                if let Some((req, redispatches)) = self.inflight.reissue(id, slot.idx, false) {
+                    self.record_redispatch(id, slot.idx, redispatches, false);
                     let _ = slot.send(Msg::Generate(req));
                 }
             }

@@ -34,7 +34,7 @@ pub use event::{single_electron_events, ttbar_events, Event, Particle};
 pub use geometry::{Geometry, LayerSpec, LAYERS};
 pub use param::{ParamStore, ParamTable, TableId};
 pub use simulation::{
-    run_fastcalosim, run_fastcalosim_pooled, FcsApi, FcsConfig, FcsEventSplit, FcsPoolRun,
-    FcsReport, Simulator, Workload, FCS_ENGINE,
+    run_fastcalosim, run_fastcalosim_pooled, run_fastcalosim_pooled_opts, FcsApi, FcsConfig,
+    FcsEventSplit, FcsPoolRun, FcsReport, Simulator, Workload, FCS_ENGINE,
 };
 pub use source::{Draw, HostSource, PooledSource, RngSource};

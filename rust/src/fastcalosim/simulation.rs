@@ -731,10 +731,14 @@ pub struct FcsPoolRun {
     /// The physics/timing report (bit-identical to the standalone run).
     pub report: FcsReport,
     /// Telemetry snapshot with the per-event `fcs` block folded in
-    /// (schema `portarng-telemetry-v6`).
+    /// (schema `portarng-telemetry-v7`).
     pub telemetry: TelemetrySnapshot,
     /// Final per-shard pool stats.
     pub stats: PoolStats,
+    /// Merged span snapshot from the request tracer (what
+    /// `fastcalosim --pool N --trace <path>` exports as Chrome trace
+    /// JSON). Empty when tracing was not enabled.
+    pub spans: Vec<crate::trace::Span>,
 }
 
 /// Convenience driver: simulate `workload` with every uniform served by a
@@ -751,6 +755,26 @@ pub fn run_fastcalosim_pooled(
     tiling: Option<(usize, usize)>,
     chaos: Option<crate::fault::FaultSpec>,
 ) -> Result<FcsPoolRun> {
+    run_fastcalosim_pooled_opts(platform, api, workload, seed, shards, tiling, chaos, None)
+}
+
+/// [`run_fastcalosim_pooled`] with an optional request-tracer
+/// configuration (`fastcalosim --pool N --trace <path>`, DESIGN.md S18):
+/// the pool records spans into per-shard rings, the run carries the
+/// merged snapshot in [`FcsPoolRun::spans`], and — combined with a chaos
+/// plan that kills workers — the supervisor leaves flight-recorder dumps
+/// in the config's `flight_dir`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fastcalosim_pooled_opts(
+    platform: PlatformId,
+    api: FcsApi,
+    workload: Workload,
+    seed: u64,
+    shards: usize,
+    tiling: Option<(usize, usize)>,
+    chaos: Option<crate::fault::FaultSpec>,
+    trace: Option<crate::trace::TraceConfig>,
+) -> Result<FcsPoolRun> {
     let events = workload.events(seed);
     let cfg = FcsConfig::new(platform, api);
     let mut pool_cfg = PoolConfig::new(platform, cfg.seed, shards);
@@ -761,8 +785,10 @@ pub fn run_fastcalosim_pooled(
         // headroom so a soak-level fault rate cannot exhaust the budget.
         pool_cfg.ingress.max_retries = 12;
     }
+    pool_cfg.trace = trace;
     let source = super::PooledSource::spawn(pool_cfg);
     let registry = source.registry();
+    let tracer = source.tracer();
     let mut sim = Simulator::with_source(cfg, Box::new(source));
     let mut report = sim.simulate(&events)?;
     report.workload = workload.label();
@@ -773,7 +799,8 @@ pub fn run_fastcalosim_pooled(
         registry.record_fcs_event(s.hits, s.gen_ns, s.transform_ns, s.d2h_ns);
     }
     let telemetry = registry.snapshot();
-    Ok(FcsPoolRun { report, telemetry, stats })
+    let spans = tracer.map(|t| t.snapshot()).unwrap_or_default();
+    Ok(FcsPoolRun { report, telemetry, stats, spans })
 }
 
 /// The RNG engine FastCaloSim requests from the portable API.

@@ -33,6 +33,7 @@ use crate::error::{Error, Result};
 use crate::rng::engines::PhiloxEngine;
 use crate::rng::Engine;
 use crate::telemetry::TelemetryRegistry;
+use crate::trace::Tracer;
 
 /// One requested block of canonical uniforms, possibly still in flight.
 ///
@@ -123,6 +124,7 @@ impl RngSource for HostSource {
 pub struct PooledSource {
     pool: Option<ServicePool>,
     registry: Arc<TelemetryRegistry>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl PooledSource {
@@ -130,13 +132,20 @@ impl PooledSource {
     pub fn spawn(cfg: PoolConfig) -> PooledSource {
         let pool = ServicePool::spawn(cfg);
         let registry = pool.telemetry().clone();
-        PooledSource { pool: Some(pool), registry }
+        let tracer = pool.tracer();
+        PooledSource { pool: Some(pool), registry, tracer }
     }
 
     /// The pool's telemetry registry (stays readable after `finish`; the
     /// pooled FCS driver folds the per-event `fcs` block into it).
     pub fn registry(&self) -> Arc<TelemetryRegistry> {
         self.registry.clone()
+    }
+
+    /// The pool's request tracer, when the config enabled tracing (stays
+    /// snapshottable after `finish` — the driver exports spans from it).
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.clone()
     }
 }
 

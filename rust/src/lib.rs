@@ -44,6 +44,10 @@
 //!   calibration probes, persisted calibration profiles, and the online
 //!   controller that retunes the pool from telemetry (DESIGN.md S12,
 //!   below).
+//! * [`trace`] — end-to-end request tracing and crash flight recorder
+//!   (DESIGN.md S18): lock-free per-shard span rings stitched by
+//!   request/flush id, a Chrome trace-event exporter (`--trace`), and
+//!   supervisor-driven flight dumps when a shard worker dies.
 //! * [`fault`] — deterministic, seeded fault injection (the chaos half of
 //!   the resilience layer, DESIGN.md S15): op-count-scheduled faults at
 //!   the four serving seams, armed via `serve --chaos` /
@@ -145,6 +149,7 @@ pub mod runtime;
 pub mod sycl;
 pub mod telemetry;
 pub mod testkit;
+pub mod trace;
 pub mod xla;
 
 pub use error::{Error, Result};

@@ -54,16 +54,16 @@ fn main() -> ExitCode {
 /// with defaults.
 const OPTS_BURNER: &[&str] = &[
     "platform", "api", "batch", "iters", "range", "distr", "params", "pool", "stats-json",
-    "chaos",
+    "chaos", "trace",
 ];
 const OPTS_FASTCALOSIM: &[&str] = &[
     "platform", "api", "workload", "events", "pool", "tile-size", "team-width", "chaos",
-    "stats-json",
+    "stats-json", "trace",
 ];
 const OPTS_REPRO: &[&str] = &["experiment", "quick", "outdir"];
 const OPTS_SERVE: &[&str] = &[
     "platform", "batch-max", "demo-requests", "shards", "overflow-at", "chaos", "tile-size",
-    "team-width", "autotune", "profile", "windows", "save-profile",
+    "team-width", "autotune", "profile", "windows", "save-profile", "trace",
 ];
 const OPTS_CALIBRATE: &[&str] = &["platform", "shards", "profile"];
 const OPTS_LINT_DAG: &[&str] = &["verbose"];
@@ -99,16 +99,17 @@ USAGE:
   portarng burner --platform <p> --api <native|sycl-buffer|sycl-usm|pjrt>
                   --batch <n> [--iters <n>] [--range a,b]
                   [--distr <name> --params a,b,..] [--pool <shards>]
-                  [--stats-json <path>] [--chaos <spec>]   (pooled mode only)
+                  [--stats-json <path>] [--chaos <spec>] [--trace <path>]
+                                                           (pooled mode only)
   portarng fastcalosim --platform <p> --api <native|sycl>
                   --workload <single-e|ttbar> [--events <n>]
                   [--pool <shards> [--tile-size <n> [--team-width <w>]]
-                   [--chaos <spec>] [--stats-json <path>]]
+                   [--chaos <spec>] [--stats-json <path>] [--trace <path>]]
   portarng repro --experiment <table1|fig2|fig3|fig4|table2|fig5|ablation-heuristic|all>
                   [--quick] [--outdir <dir>]
   portarng serve [--platform <p>] [--batch-max <n>] [--demo-requests <n>]
                  [--shards <n>] [--overflow-at <n>] [--chaos <spec>]
-                 [--tile-size <n> [--team-width <w>]]
+                 [--tile-size <n> [--team-width <w>]] [--trace <path>]
   portarng serve --autotune [--platform <p>] [--shards <n>] [--windows <n>]
                  [--demo-requests <n>] [--profile <path>] [--save-profile]
                  [--tile-size <n> [--team-width <w>]]
@@ -124,7 +125,10 @@ Chaos spec:  seed=<u64>,rate=<0..1>,sites=<generate+submit+d2h>,kill=<shard>@<op
              (also read from PORTARNG_FAULT_PLAN when --chaos is absent)
 Executor:    --tile-size turns flushes into per-tile work items on a
              worker-local team (bit-identical to serial); also read from
-             PORTARNG_TILE=<tile>,<width> when the flags are absent";
+             PORTARNG_TILE=<tile>,<width> when the flags are absent
+Tracing:     --trace <path> records per-shard request spans and writes a
+             Chrome trace-event JSON (load in Perfetto / chrome://tracing);
+             with --chaos kills, flight-recorder dumps land next to it";
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
@@ -190,6 +194,37 @@ fn chaos_spec(opts: &HashMap<String, String>) -> Result<Option<FaultSpec>, Strin
     };
     spec.map(|s| FaultSpec::parse(&s).map_err(|e| format!("bad chaos spec `{s}`: {e}")))
         .transpose()
+}
+
+/// Resolve the request-tracer configuration for a pooled command
+/// (DESIGN.md S18): `--trace <path>` enables span recording and names
+/// the Chrome trace-event JSON to export; flight-recorder dumps (taken
+/// when a chaos plan kills a worker) land in the same directory.
+fn trace_config(opts: &HashMap<String, String>) -> Option<portarng::trace::TraceConfig> {
+    opts.get("trace").map(|path| {
+        let parent = Path::new(path)
+            .parent()
+            .filter(|d| !d.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| std::path::PathBuf::from("."));
+        portarng::trace::TraceConfig {
+            flight_dir: Some(parent),
+            ..Default::default()
+        }
+    })
+}
+
+/// Export a traced run's spans as Chrome trace JSON at the `--trace`
+/// path and report what was written.
+fn export_trace(
+    opts: &HashMap<String, String>,
+    spans: &[portarng::trace::Span],
+) -> CliResult {
+    if let Some(path) = opts.get("trace") {
+        portarng::trace::chrome::export(spans, Path::new(path))?;
+        println!("[wrote {} span(s) as Chrome trace JSON to {path}]", spans.len());
+    }
+    Ok(())
 }
 
 /// Parse the tile-executor flags. `--team-width` without `--tile-size`
@@ -266,12 +301,22 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
             "--chaos requires --pool <shards> (faults inject into the supervised pool)".into()
         );
     }
+    if opts.contains_key("trace") && !opts.contains_key("pool") {
+        return Err("--trace requires --pool <shards> (spans record in the serving pool)".into());
+    }
 
     // Pooled mode: drive the workload through the sharded service pool.
     if let Some(shards) = opts.get("pool") {
         let shards: usize = shards.parse()?;
         let chaos = chaos_spec(opts)?;
-        let r = portarng::burner::run_burner_pooled_chaos(&cfg, shards, iters, chaos.as_ref())?;
+        let trace = trace_config(opts);
+        let r = portarng::burner::run_burner_pooled_opts(
+            &cfg,
+            shards,
+            iters,
+            chaos.as_ref(),
+            trace.as_ref(),
+        )?;
         println!(
             "pooled burner {} shards={} requests={} batch={}\n  \
              {:.1} M numbers/s wall ({:.2} ms total), {} launches, checksum {:016x}",
@@ -318,6 +363,15 @@ fn cmd_burner(opts: &HashMap<String, String>) -> CliResult {
                 res.deadline_exceeded
             );
         }
+        if trace.is_some() {
+            println!(
+                "  trace: {} span(s) recorded, {} dropped (ring wrap), {} flight dump(s)",
+                r.telemetry.trace.spans,
+                r.telemetry.trace.dropped,
+                r.telemetry.trace.flight_dumps
+            );
+        }
+        export_trace(opts, &r.spans)?;
         if let Some(path) = opts.get("stats-json") {
             let json = r.telemetry.to_json().to_json();
             // Guarantee the documented round-trip property before writing.
@@ -388,7 +442,7 @@ fn cmd_fastcalosim(opts: &HashMap<String, String>) -> CliResult {
 
     // The pooled-only flags mean nothing on the standalone path: reject
     // instead of silently ignoring (same policy as `burner`).
-    for flag in ["tile-size", "team-width", "chaos", "stats-json"] {
+    for flag in ["tile-size", "team-width", "chaos", "stats-json", "trace"] {
         if opts.contains_key(flag) && !opts.contains_key("pool") {
             return Err(format!(
                 "--{flag} requires --pool <shards> (it configures the serving pool)"
@@ -407,7 +461,8 @@ fn cmd_fastcalosim(opts: &HashMap<String, String>) -> CliResult {
         }
         let tiling = tiling_opts(opts)?;
         let chaos = chaos_spec(opts)?;
-        let run = portarng::fastcalosim::run_fastcalosim_pooled(
+        let trace = trace_config(opts);
+        let run = portarng::fastcalosim::run_fastcalosim_pooled_opts(
             platform,
             api,
             workload,
@@ -415,6 +470,7 @@ fn cmd_fastcalosim(opts: &HashMap<String, String>) -> CliResult {
             shards,
             tiling,
             chaos.clone(),
+            trace.clone(),
         )?;
         let r = &run.report;
         println!(
@@ -466,6 +522,15 @@ fn cmd_fastcalosim(opts: &HashMap<String, String>) -> CliResult {
                 res.deadline_exceeded
             );
         }
+        if trace.is_some() {
+            println!(
+                "  trace: {} span(s) recorded, {} dropped (ring wrap), {} flight dump(s)",
+                run.telemetry.trace.spans,
+                run.telemetry.trace.dropped,
+                run.telemetry.trace.flight_dumps
+            );
+        }
+        export_trace(opts, &run.spans)?;
         if let Some(path) = opts.get("stats-json") {
             let json = run.telemetry.to_json().to_json();
             // Guarantee the documented round-trip property before writing.
@@ -587,6 +652,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
         cfg.fault = chaos.clone();
         cfg.ingress.max_retries = 12;
     }
+    cfg.trace = trace_config(opts);
     let pool = ServicePool::spawn(cfg);
     let mut receivers = Vec::new();
     for i in 0..n_req {
@@ -597,8 +663,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
     for rx in receivers {
         total += rx.recv_timeout(std::time::Duration::from_secs(60))??.len();
     }
-    let snapshot = pool.telemetry().snapshot();
+    let registry = pool.telemetry().clone();
+    let tracer = pool.tracer();
     let stats = pool.shutdown()?;
+    let snapshot = registry.snapshot();
     let t = stats.total();
     println!(
         "served {} requests / {} numbers in {} launches across {} shard(s)",
@@ -638,6 +706,13 @@ fn cmd_serve(opts: &HashMap<String, String>) -> CliResult {
             res.deadline_exceeded,
             stats.lost_shards
         );
+    }
+    if let Some(tr) = tracer {
+        println!(
+            "  trace: {} span(s) recorded, {} dropped (ring wrap), {} flight dump(s)",
+            snapshot.trace.spans, snapshot.trace.dropped, snapshot.trace.flight_dumps
+        );
+        export_trace(opts, &tr.snapshot())?;
     }
     Ok(())
 }
@@ -700,6 +775,7 @@ fn serve_autotuned(
             None
         }
     });
+    cfg.trace = trace_config(opts);
     let pool = ServicePool::spawn(cfg);
     let mut tuner = PoolAutoTuner::new(&pool);
 
@@ -759,7 +835,11 @@ fn serve_autotuned(
             println!("[wrote calibration profile to {}]", path.display());
         }
     }
+    let tracer = pool.tracer();
     pool.shutdown()?;
+    if let Some(tr) = tracer {
+        export_trace(opts, &tr.snapshot())?;
+    }
     Ok(())
 }
 
@@ -821,7 +901,11 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
     for platform in PlatformId::ALL {
         let profile = SyclRuntimeProfile::for_platform(&platform.spec());
         let backend = portarng::burner::native_backend_for(platform);
-        let mut windows: Vec<(&str, HazardReport)> = Vec::new();
+        // Keep each window's records so a diagnostic can be printed with
+        // its offending commands' trace spans (virtual timestamps, lease
+        // generations) next to the typed hazard.
+        let mut windows: Vec<(&str, HazardReport, Vec<portarng::sycl::CommandRecord>)> =
+            Vec::new();
 
         // 1. Buffer API: accessor-declared accesses, runtime-derived
         //    RAW/WAR/WAW edges (generate -> transform -> D2H readback).
@@ -832,7 +916,8 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
             generate_buffer(&queue, &mut gen, Distribution::uniform(-2.0, 3.0), n, &buf)?;
             let _ = queue.host_read(&buf);
             queue.wait();
-            windows.push(("buffer", lint_window(&queue.drain_records())?));
+            let records = queue.drain_records();
+            windows.push(("buffer", lint_window(&records)?, records));
         }
 
         // 2. USM API: explicit event chains (paper §4.1) — generate ->
@@ -845,7 +930,8 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
                 generate_usm(&queue, &mut gen, Distribution::uniform(0.5, 2.5), n, &usm, &[])?;
             let _ = queue.usm_to_host(&usm, std::slice::from_ref(&ev));
             queue.wait();
-            windows.push(("usm", lint_window(&queue.drain_records())?));
+            let records = queue.drain_records();
+            windows.push(("usm", lint_window(&records)?, records));
         }
 
         // 3. Arena serving path: two coalesced flushes through one
@@ -892,7 +978,8 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
                 lease.recycle();
             }
             queue.wait();
-            windows.push(("arena", lint_window(&queue.drain_records())?));
+            let records = queue.drain_records();
+            windows.push(("arena", lint_window(&records)?, records));
         }
 
         // 4. FastCaloSim event loop (DESIGN.md S17): two single-electron
@@ -910,12 +997,12 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
             sim.finish_source()?;
             let records: Vec<portarng::sycl::CommandRecord> =
                 sim.take_windows().into_iter().flatten().collect();
-            windows.push(("fastcalosim", lint_window(&records)?));
+            windows.push(("fastcalosim", lint_window(&records)?, records));
         }
 
-        let commands: usize = windows.iter().map(|(_, r)| r.commands).sum();
-        let external: usize = windows.iter().map(|(_, r)| r.external_deps).sum();
-        let diagnostics: usize = windows.iter().map(|(_, r)| r.hazards.len()).sum();
+        let commands: usize = windows.iter().map(|(_, r, _)| r.commands).sum();
+        let external: usize = windows.iter().map(|(_, r, _)| r.external_deps).sum();
+        let diagnostics: usize = windows.iter().map(|(_, r, _)| r.hazards.len()).sum();
         println!(
             "  {:<12} {:>3} command(s) across {} window(s), {} external dep(s): {}",
             platform.token(),
@@ -928,13 +1015,29 @@ fn cmd_lint_dag(opts: &HashMap<String, String>) -> CliResult {
                 format!("{diagnostics} DIAGNOSTIC(S)")
             }
         );
-        for (label, report) in &windows {
+        for (label, report, records) in &windows {
             if verbose || !report.is_clean() {
                 for line in report.pretty().lines() {
                     println!("    [{label}] {line}");
                 }
             }
             if !report.is_clean() {
+                // Print each offending command's trace span next to the
+                // typed diagnostic: virtual timestamps, command id and
+                // lease generation place the hazard on the timeline a
+                // `--trace` export of the same run would show.
+                for hz in &report.hazards {
+                    for cmd_id in [hz.first, hz.second] {
+                        let Some(rec) = records.iter().find(|r| r.id == cmd_id) else {
+                            continue;
+                        };
+                        if let Some(span) =
+                            portarng::trace::span_for_record(rec, 0, portarng::trace::NONE_ID)
+                        {
+                            println!("    [{label}]   {}", span.pretty());
+                        }
+                    }
+                }
                 failures.push(format!("{}/{label}", platform.token()));
             }
         }

@@ -6,14 +6,15 @@
 //! pool workers with relaxed atomics (nothing on the request hot path
 //! takes a lock or allocates), and read through cheap [`snapshot`]
 //! copies that serialize through `jsonlite` (schema
-//! `portarng-telemetry-v6`: per-command-class virtual timings,
+//! `portarng-telemetry-v7`: per-command-class virtual timings,
 //! worker-arena counters, per-shard DAG-hazard counters
 //! [`HazardCounters`], the resilience layer's fault / respawn /
 //! retry / shed / deadline counters [`ResilienceTotals`], the tile
 //! executor's per-shard `tiles` / `pipeline` blocks ([`TileCounters`] /
-//! [`PipelineCounters`], DESIGN.md S16), and the pooled FastCaloSim
-//! driver's `fcs` block ([`FcsCounters`], DESIGN.md S17); v1–v5
-//! superseded). The
+//! [`PipelineCounters`], DESIGN.md S16), the pooled FastCaloSim
+//! driver's `fcs` block ([`FcsCounters`], DESIGN.md S17), and the
+//! request tracer's `trace` block ([`TraceCounters`], DESIGN.md S18);
+//! v1–v6 superseded). The
 //! [`autotune`](crate::autotune) controller
 //! closes the loop by turning snapshot deltas into
 //! [`DispatchPolicy`](crate::coordinator::DispatchPolicy) retunes.
@@ -27,5 +28,5 @@ pub use histogram::{HistogramSnapshot, Log2Histogram, BUCKETS};
 pub use registry::{
     ArenaCounters, CommandBreakdown, CommandKind, CommandTiming, FcsCounters, HazardCounters,
     Lane, PipelineCounters, ResilienceTotals, ShardSnapshot, ShardTelemetry, TelemetryRegistry,
-    TelemetrySnapshot, TileCounters, TELEMETRY_SCHEMA,
+    TelemetrySnapshot, TileCounters, TraceCounters, TELEMETRY_SCHEMA,
 };

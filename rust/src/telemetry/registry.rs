@@ -10,7 +10,7 @@
 //!
 //! [`TelemetryRegistry::snapshot`] copies everything into a plain
 //! [`TelemetrySnapshot`] that serializes through `jsonlite`
-//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v6`, see
+//! ([`TelemetrySnapshot::to_json`], schema `portarng-telemetry-v7`, see
 //! README "Telemetry snapshot schema"). v2 added per-command-class virtual
 //! timings ([`CommandTiming`]: generate / transform / d2h / other, fed
 //! from drained queue records) and the worker arena's allocation counters
@@ -29,7 +29,11 @@
 //! the summed virtual overlap). v6 adds the pool-level `fcs` block
 //! ([`FcsCounters`], DESIGN.md S17): the pooled FastCaloSim driver's
 //! per-event hit counts and generate/transform/D2H virtual splits — all
-//! zero unless the pool served a FastCaloSim run. v1–v5 are superseded.
+//! zero unless the pool served a FastCaloSim run. v7 adds the pool-level
+//! `trace` block ([`TraceCounters`], DESIGN.md S18): spans recorded /
+//! dropped by the request tracer's rings plus the flight-recorder dumps
+//! the supervisor took from dead shards — all zero on a pool that never
+//! enabled tracing. v1–v6 are superseded.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -45,9 +49,9 @@ use super::histogram::{HistogramSnapshot, Log2Histogram};
 /// Telemetry snapshot schema identifier (bump on breaking changes).
 /// v1 (no per-command-class timings, no arena counters), v2 (no hazard
 /// counters, no arena `leaked`), v3 (no resilience counters), v4 (no
-/// tile-executor / pipeline counters) and v5 (no FastCaloSim `fcs`
-/// block) are superseded.
-pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v6";
+/// tile-executor / pipeline counters), v5 (no FastCaloSim `fcs` block)
+/// and v6 (no request-tracer `trace` block) are superseded.
+pub const TELEMETRY_SCHEMA: &str = "portarng-telemetry-v7";
 
 /// Command classes the serving path times. Mirrors
 /// `sycl::CommandClass` for the classes the pool's flushes issue —
@@ -174,6 +178,53 @@ impl FcsCounters {
             gen_ns: num("gen_ns")?,
             transform_ns: num("transform_ns")?,
             d2h_ns: num("d2h_ns")?,
+        })
+    }
+}
+
+/// Request-tracer activity (DESIGN.md S18), pool-level: the supervisor
+/// publishes the tracer's running span counters every sweep tick
+/// ([`TelemetryRegistry::set_trace_activity`], absolute values — the
+/// tracer owns them) and counts each flight-recorder dump it takes from
+/// a dead shard ([`TelemetryRegistry::record_flight_dump`], cumulative).
+/// All zero on a pool that never enabled tracing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceCounters {
+    /// Spans recorded across all rings (coordinator ring included).
+    pub spans: u64,
+    /// Spans overwritten before any snapshot could read them (ring
+    /// wrap-around) — nonzero is fine, it is what "overwrite oldest"
+    /// means; it just bounds how far back a flight dump can see.
+    pub dropped: u64,
+    /// Flight-recorder dumps the supervisor took from dead shards.
+    pub flight_dumps: u64,
+}
+
+impl TraceCounters {
+    /// True when tracing recorded anything at all.
+    pub fn any(&self) -> bool {
+        self.spans != 0 || self.dropped != 0 || self.flight_dumps != 0
+    }
+
+    fn to_json(self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("spans".into(), Value::Number(self.spans as f64));
+        m.insert("dropped".into(), Value::Number(self.dropped as f64));
+        m.insert("flight_dumps".into(), Value::Number(self.flight_dumps as f64));
+        Value::Object(m)
+    }
+
+    fn from_json(v: &Value) -> Result<TraceCounters> {
+        let num = |key: &str| -> Result<u64> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| Error::Json(format!("trace counters missing `{key}`")))
+        };
+        Ok(TraceCounters {
+            spans: num("spans")?,
+            dropped: num("dropped")?,
+            flight_dumps: num("flight_dumps")?,
         })
     }
 }
@@ -717,6 +768,9 @@ pub struct TelemetryRegistry {
     fcs_gen_ns: AtomicU64,
     fcs_transform_ns: AtomicU64,
     fcs_d2h_ns: AtomicU64,
+    trace_spans: AtomicU64,
+    trace_dropped: AtomicU64,
+    flight_dumps: AtomicU64,
     started: Instant,
 }
 
@@ -741,6 +795,9 @@ impl TelemetryRegistry {
             fcs_gen_ns: AtomicU64::new(0),
             fcs_transform_ns: AtomicU64::new(0),
             fcs_d2h_ns: AtomicU64::new(0),
+            trace_spans: AtomicU64::new(0),
+            trace_dropped: AtomicU64::new(0),
+            flight_dumps: AtomicU64::new(0),
             started: Instant::now(),
         })
     }
@@ -790,6 +847,19 @@ impl TelemetryRegistry {
         self.fcs_d2h_ns.fetch_add(d2h_ns, Ordering::Relaxed);
     }
 
+    /// Publish the request tracer's running span counters (absolute
+    /// values — the tracer owns them; the supervisor and the pool's
+    /// shutdown path both push, so last-writer-wins is correct).
+    pub fn set_trace_activity(&self, spans: u64, dropped: u64) {
+        self.trace_spans.store(spans, Ordering::Relaxed);
+        self.trace_dropped.store(dropped, Ordering::Relaxed);
+    }
+
+    /// Count one flight-recorder dump taken from a dead shard's ring.
+    pub fn record_flight_dump(&self) {
+        self.flight_dumps.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Copy everything into a plain snapshot.
     pub fn snapshot(&self) -> TelemetrySnapshot {
         TelemetrySnapshot {
@@ -806,6 +876,11 @@ impl TelemetryRegistry {
                 gen_ns: self.fcs_gen_ns.load(Ordering::Relaxed),
                 transform_ns: self.fcs_transform_ns.load(Ordering::Relaxed),
                 d2h_ns: self.fcs_d2h_ns.load(Ordering::Relaxed),
+            },
+            trace: TraceCounters {
+                spans: self.trace_spans.load(Ordering::Relaxed),
+                dropped: self.trace_dropped.load(Ordering::Relaxed),
+                flight_dumps: self.flight_dumps.load(Ordering::Relaxed),
             },
             shards: self.shards.iter().map(|s| s.snapshot()).collect(),
         }
@@ -998,6 +1073,9 @@ pub struct TelemetrySnapshot {
     /// FastCaloSim serving counters (all zero unless the pool served a
     /// FastCaloSim run; DESIGN.md S17).
     pub fcs: FcsCounters,
+    /// Request-tracer activity (all zero unless tracing was enabled;
+    /// DESIGN.md S18).
+    pub trace: TraceCounters,
     /// Per-shard telemetry, dispatch order.
     pub shards: Vec<ShardSnapshot>,
 }
@@ -1129,7 +1207,7 @@ impl TelemetrySnapshot {
             .fold(HazardCounters::default(), HazardCounters::merged)
     }
 
-    /// Serialize (schema `portarng-telemetry-v6`).
+    /// Serialize (schema `portarng-telemetry-v7`).
     pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("schema".into(), Value::String(TELEMETRY_SCHEMA.into()));
@@ -1150,6 +1228,7 @@ impl TelemetrySnapshot {
         );
         m.insert("requests_shed".into(), Value::Number(self.requests_shed as f64));
         m.insert("fcs".into(), self.fcs.to_json());
+        m.insert("trace".into(), self.trace.to_json());
         m.insert(
             "shards".into(),
             Value::Array(self.shards.iter().map(ShardSnapshot::to_json).collect()),
@@ -1197,6 +1276,10 @@ impl TelemetrySnapshot {
             fcs: FcsCounters::from_json(
                 v.get("fcs")
                     .ok_or_else(|| Error::Json("snapshot missing `fcs`".into()))?,
+            )?,
+            trace: TraceCounters::from_json(
+                v.get("trace")
+                    .ok_or_else(|| Error::Json("snapshot missing `trace`".into()))?,
             )?,
             shards,
         })
@@ -1252,6 +1335,8 @@ mod tests {
         reg.record_shed();
         reg.record_fcs_event(5_100, 40_000, 12_000, 3_000);
         reg.record_fcs_event(4_900, 38_000, 11_000, 3_000);
+        reg.set_trace_activity(250, 10);
+        reg.record_flight_dump();
         reg
     }
 
@@ -1382,6 +1467,29 @@ mod tests {
         // A pool that never served FastCaloSim keeps the block all-zero.
         let clean = TelemetryRegistry::new(PlatformId::A100, &[Lane::Batched]).snapshot();
         assert!(!clean.fcs.any());
+    }
+
+    #[test]
+    fn trace_counters_publish_and_accumulate() {
+        let snap = sample_registry().snapshot();
+        assert_eq!(
+            snap.trace,
+            TraceCounters { spans: 250, dropped: 10, flight_dumps: 1 }
+        );
+        assert!(snap.trace.any());
+        // set_trace_activity is an absolute publish, record_flight_dump
+        // is cumulative.
+        let reg = sample_registry();
+        reg.set_trace_activity(400, 12);
+        reg.record_flight_dump();
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.trace,
+            TraceCounters { spans: 400, dropped: 12, flight_dumps: 2 }
+        );
+        // A pool that never enabled tracing keeps the block all-zero.
+        let clean = TelemetryRegistry::new(PlatformId::A100, &[Lane::Batched]).snapshot();
+        assert!(!clean.trace.any());
     }
 
     #[test]

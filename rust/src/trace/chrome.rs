@@ -1,0 +1,296 @@
+//! Chrome trace-event JSON sink (DESIGN.md S18).
+//!
+//! Exports a span snapshot as the Trace Event Format consumed by
+//! Perfetto and `chrome://tracing`: duration (`ph:"X"`) events on one
+//! track per shard (pid 1, "coordinator", [`Clock`](super::Clock)
+//! time) plus one track per queue (pid 2, "queues", the SYCL runtime's
+//! virtual-clock time for `cmd.*` spans), and async flow arrows
+//! (`ph:"s"/"t"/"f"`, id = request id) stitching each request's
+//! admit → flush → reply edge across tracks. Surfaced on the CLI as
+//! `serve --trace <path>`, `burner --trace <path>` and `fastcalosim
+//! --trace <path>`.
+//!
+//! Events are emitted in [`super::canonical_order`], so exports are
+//! deterministic under a virtual clock.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::jsonlite::Value;
+
+use super::{canonical_order, Span, SpanKind, NONE_ID};
+
+/// Coordinator-track process id.
+pub const PID_COORDINATOR: u64 = 1;
+/// Queue-track (virtual-clock `cmd.*`) process id.
+pub const PID_QUEUES: u64 = 2;
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Object(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(v: u64) -> Value {
+    Value::Number(v as f64)
+}
+
+fn us(ns: u64) -> Value {
+    Value::Number(ns as f64 / 1_000.0)
+}
+
+fn meta(name: &str, pid: u64, tid: Option<u64>, arg: &str) -> Value {
+    let mut pairs = vec![
+        ("ph", Value::String("M".into())),
+        ("name", Value::String(name.into())),
+        ("pid", num(pid)),
+        ("args", obj(vec![("name", Value::String(arg.into()))])),
+    ];
+    if let Some(tid) = tid {
+        pairs.push(("tid", num(tid)));
+    }
+    obj(pairs)
+}
+
+fn span_args(s: &Span) -> Value {
+    let mut pairs: Vec<(&str, Value)> = Vec::new();
+    if s.request_id != NONE_ID {
+        pairs.push(("request_id", num(s.request_id)));
+    }
+    if s.flush_id != NONE_ID {
+        pairs.push(("flush_id", num(s.flush_id)));
+    }
+    match s.kind {
+        SpanKind::IngressAdmit => {
+            pairs.push(("n", num(s.aux)));
+            pairs.push(("overflow", Value::Bool(s.aux2 == 1)));
+        }
+        SpanKind::BatcherStage => pairs.push(("n", num(s.aux))),
+        SpanKind::FlushLaunch => {
+            pairs.push(("launch_n", num(s.aux)));
+            pairs.push(("members", num(s.aux2)));
+        }
+        SpanKind::CmdGenerate | SpanKind::CmdTransform | SpanKind::CmdD2h => {
+            pairs.push(("cmd", num(s.aux2)));
+            if s.aux != NONE_ID {
+                pairs.push(("lease_gen", num(s.aux)));
+            }
+        }
+        SpanKind::PipelineOverlap => pairs.push(("overlap_ns", num(s.aux))),
+        SpanKind::SupervisorRedispatch => {
+            pairs.push(("redispatches", num(s.aux)));
+            pairs.push(("retry", Value::Bool(s.aux2 == 1)));
+        }
+        SpanKind::ReplySend => {
+            pairs.push(("attempt", num(s.aux)));
+            pairs.push(("error", Value::Bool(s.aux2 == 1)));
+        }
+    }
+    obj(pairs)
+}
+
+fn duration_event(s: &Span) -> Value {
+    let pid = if s.kind.is_command() { PID_QUEUES } else { PID_COORDINATOR };
+    let cat = if s.kind.is_command() { "queue" } else { "coordinator" };
+    obj(vec![
+        ("ph", Value::String("X".into())),
+        ("name", Value::String(s.kind.token().into())),
+        ("cat", Value::String(cat.into())),
+        ("pid", num(pid)),
+        ("tid", num(s.shard as u64)),
+        ("ts", us(s.start_ns)),
+        ("dur", us(s.end_ns - s.start_ns)),
+        ("args", span_args(s)),
+    ])
+}
+
+fn flow_event(ph: &str, request_id: u64, s: &Span) -> Value {
+    let mut pairs = vec![
+        ("ph", Value::String(ph.into())),
+        ("name", Value::String("request".into())),
+        ("cat", Value::String("request".into())),
+        ("id", num(request_id)),
+        ("pid", num(PID_COORDINATOR)),
+        ("tid", num(s.shard as u64)),
+        ("ts", us(s.start_ns)),
+    ];
+    if ph == "f" {
+        // Bind the finish arrow to the enclosing slice's start.
+        pairs.push(("bp", Value::String("e".into())));
+    }
+    obj(pairs)
+}
+
+/// Build the trace document for a span snapshot. See [`export`] for
+/// the file-writing wrapper.
+pub fn trace_document(spans: &[Span]) -> Value {
+    let mut spans = spans.to_vec();
+    canonical_order(&mut spans);
+
+    let mut events: Vec<Value> = Vec::with_capacity(spans.len() * 2 + 8);
+    events.push(meta("process_name", PID_COORDINATOR, None, "coordinator"));
+    events.push(meta("process_name", PID_QUEUES, None, "queues"));
+
+    // One named track per shard (coordinator time) and per queue
+    // (virtual-clock command time), for each shard that appears.
+    let mut coord_shards: Vec<u64> = Vec::new();
+    let mut queue_shards: Vec<u64> = Vec::new();
+    for s in &spans {
+        let shards = if s.kind.is_command() { &mut queue_shards } else { &mut coord_shards };
+        if !shards.contains(&(s.shard as u64)) {
+            shards.push(s.shard as u64);
+        }
+    }
+    coord_shards.sort();
+    queue_shards.sort();
+    for &t in &coord_shards {
+        events.push(meta(
+            "thread_name",
+            PID_COORDINATOR,
+            Some(t),
+            &format!("shard {t}"),
+        ));
+    }
+    for &t in &queue_shards {
+        events.push(meta("thread_name", PID_QUEUES, Some(t), &format!("queue {t}")));
+    }
+
+    for s in &spans {
+        events.push(duration_event(s));
+    }
+
+    // Async arrows: admit --s--> launch --t--> reply, one flow per
+    // request that completed (has a reply span). The reply's flush_id
+    // locates the launch step.
+    for s in &spans {
+        if s.kind != SpanKind::ReplySend || s.request_id == NONE_ID {
+            continue;
+        }
+        let Some(admit) = spans
+            .iter()
+            .find(|a| a.kind == SpanKind::IngressAdmit && a.request_id == s.request_id)
+        else {
+            continue;
+        };
+        events.push(flow_event("s", s.request_id, admit));
+        if s.flush_id != NONE_ID {
+            if let Some(launch) = spans
+                .iter()
+                .find(|l| l.kind == SpanKind::FlushLaunch && l.flush_id == s.flush_id && l.shard == s.shard)
+            {
+                events.push(flow_event("t", s.request_id, launch));
+            }
+        }
+        events.push(flow_event("f", s.request_id, s));
+    }
+
+    obj(vec![
+        ("traceEvents", Value::Array(events)),
+        ("displayTimeUnit", Value::String("ms".into())),
+        (
+            "otherData",
+            obj(vec![("exporter", Value::String("portarng-trace".into()))]),
+        ),
+    ])
+}
+
+/// Export a span snapshot as Chrome trace-event JSON at `path`.
+pub fn export(spans: &[Span], path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, trace_document(spans).to_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Span> {
+        vec![
+            Span::range(SpanKind::IngressAdmit, 0, 0, 10).req(5).aux(4096).aux2(0),
+            Span::event(SpanKind::BatcherStage, 0, 20).req(5).aux(4096),
+            Span::range(SpanKind::FlushLaunch, 0, 30, 90).flush(2).aux(4096).aux2(1),
+            Span::range(SpanKind::CmdGenerate, 0, 100, 300).flush(2).aux(1).aux2(7),
+            Span::range(SpanKind::CmdD2h, 0, 300, 350).flush(2).aux(1).aux2(8),
+            Span::event(SpanKind::ReplySend, 0, 95).req(5).flush(2).aux(0).aux2(0),
+        ]
+    }
+
+    #[test]
+    fn document_has_tracks_events_and_flow_arrows() {
+        let doc = trace_document(&sample());
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let ph = |p: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").unwrap().as_str() == Some(p))
+                .count()
+        };
+        // 2 process names + "shard 0" + "queue 0".
+        assert_eq!(ph("M"), 4);
+        assert_eq!(ph("X"), 6);
+        // One complete flow: s at admit, t at launch, f at reply.
+        assert_eq!((ph("s"), ph("t"), ph("f")), (1, 1, 1));
+        let shard_track = events.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("M")
+                && e.get("args").and_then(|a| a.get("name")).and_then(Value::as_str)
+                    == Some("shard 0")
+        });
+        let queue_track = events.iter().any(|e| {
+            e.get("ph").unwrap().as_str() == Some("M")
+                && e.get("args").and_then(|a| a.get("name")).and_then(Value::as_str)
+                    == Some("queue 0")
+        });
+        assert!(shard_track && queue_track);
+        // Command spans land on the queue process, coordinator spans on
+        // the coordinator process.
+        for e in events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")) {
+            let name = e.get("name").unwrap().as_str().unwrap();
+            let pid = e.get("pid").unwrap().as_usize().unwrap() as u64;
+            if name.starts_with("cmd.") {
+                assert_eq!(pid, PID_QUEUES);
+            } else {
+                assert_eq!(pid, PID_COORDINATOR);
+            }
+        }
+    }
+
+    #[test]
+    fn export_round_trips_through_the_parser() {
+        let doc = trace_document(&sample());
+        let text = doc.to_json();
+        let back = Value::parse(&text).unwrap();
+        assert!(back.get("traceEvents").unwrap().as_array().unwrap().len() >= 10);
+    }
+
+    #[test]
+    fn orphan_reply_gets_no_flow_arrow() {
+        // A reply with no matching admit (e.g. the admit span was
+        // overwritten in the ring) must not emit a dangling arrow.
+        let spans = vec![Span::event(SpanKind::ReplySend, 1, 5).req(9)];
+        let doc = trace_document(&spans);
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        assert!(events.iter().all(|e| {
+            !matches!(e.get("ph").unwrap().as_str(), Some("s") | Some("t") | Some("f"))
+        }));
+    }
+
+    #[test]
+    fn timestamps_are_microseconds() {
+        let spans = vec![Span::range(SpanKind::FlushLaunch, 0, 1_500, 4_500).flush(0)];
+        let doc = trace_document(&spans);
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .unwrap();
+        assert_eq!(x.get("ts").unwrap().as_f64(), Some(1.5));
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(3.0));
+    }
+}

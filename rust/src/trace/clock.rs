@@ -1,0 +1,106 @@
+//! Trace timestamp sources (DESIGN.md S18).
+//!
+//! Coordinator-side spans (admit / stage / launch / reply /
+//! redispatch) are stamped through this trait so the same record sites
+//! serve two regimes: production uses the monotonic [`WallClock`];
+//! tests use the driver-advanced [`VirtualClock`] (the autotune-style
+//! deterministic clock), which makes trace contents — and therefore
+//! flight-recorder dumps — byte-identical across runs of the same
+//! seeded chaos plan. `cmd.*` spans bypass this entirely: they carry
+//! the queue's virtual-clock `virt_start_ns`/`virt_end_ns`, which are
+//! deterministic by construction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A nanosecond timestamp source. Implementations must be monotone
+/// non-decreasing and cheap (called on the request hot path).
+pub trait Clock: Send + Sync {
+    /// Current time in nanoseconds since the clock's epoch.
+    fn now_ns(&self) -> u64;
+}
+
+/// Production clock: nanoseconds since the clock was created, from the
+/// OS monotonic clock.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// Epoch = now.
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+/// Test clock: time advances only when the driver says so, making every
+/// coordinator span timestamp deterministic. Shared across threads
+/// (`Arc<VirtualClock>`); reads are relaxed loads.
+pub struct VirtualClock {
+    now: AtomicU64,
+}
+
+impl VirtualClock {
+    /// Start at t = 0.
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: AtomicU64::new(0) }
+    }
+
+    /// Advance by `ns`.
+    pub fn advance(&self, ns: u64) {
+        self.now.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Jump to an absolute time (monotonicity is the driver's problem).
+    pub fn set(&self, ns: u64) {
+        self.now.store(ns, Ordering::Relaxed);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        self.now.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_moves_only_when_driven() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        assert_eq!(c.now_ns(), 0);
+        c.advance(250);
+        assert_eq!(c.now_ns(), 250);
+        c.set(1_000);
+        assert_eq!(c.now_ns(), 1_000);
+    }
+}

@@ -1,0 +1,783 @@
+//! End-to-end request tracing and crash flight recorder (DESIGN.md S18).
+//!
+//! The telemetry registry (S11) answers *how much* — counters and
+//! histograms — but nothing causal: it cannot replay "request N from
+//! ingress through batcher, flush DAG and D2H to reply", nor show the
+//! last milliseconds before a shard worker died. This module adds the
+//! time-ordered record: a lock-free, per-shard ring of typed [`Span`]s
+//! stitched by `request_id` / `flush_id`, with two sinks —
+//!
+//! 1. a Chrome trace-event exporter ([`chrome::export`]) loadable in
+//!    Perfetto / `chrome://tracing`, one track per shard plus one per
+//!    queue, async arrows for request→flush→reply edges; and
+//! 2. a crash **flight recorder**: when the supervisor reaps a dead
+//!    worker (injected kill, hazard-enforcement panic, any panic), it
+//!    drains that shard's ring into a dump file and counts it in the
+//!    telemetry `trace` block (`portarng-telemetry-v7`).
+//!
+//! Design contracts:
+//!
+//! * **Near-zero cost when disabled.** Every record site is guarded by a
+//!   static atomic ([`enabled`]) plus a thread-local writer
+//!   ([`install`] / [`with`]), mirroring [`crate::fault`]'s
+//!   install/trip idiom: unconfigured, a record site is one relaxed
+//!   atomic load. The pool bench gates this (≤ 5% with tracing on,
+//!   noise with it off — `benches/pool_throughput.rs`).
+//! * **Lock-free, tear-free recording.** [`TraceRing`] is a
+//!   fixed-capacity overwrite-oldest ring of seqlock slots: writers
+//!   never block, readers never observe a torn span (they skip slots
+//!   whose sequence word moved mid-read).
+//! * **Deterministic under test.** Timestamps come through the
+//!   [`Clock`] trait — monotonic wall clock in production, a
+//!   driver-advanced [`VirtualClock`] in tests — and sinks emit spans in
+//!   [`canonical_order`], so the same seeded chaos plan yields
+//!   byte-identical flight dumps across runs.
+//!
+//! Span taxonomy and the join keys against the S14 hazard analyzer's
+//! command DAG are documented on [`SpanKind`].
+
+pub mod chrome;
+mod clock;
+mod ring;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use ring::TraceRing;
+
+use crate::jsonlite::Value;
+use crate::sycl::{CommandClass, CommandRecord};
+
+/// Sentinel for "no id" in [`Span::request_id`] / [`Span::flush_id`] /
+/// aux fields (serialised as JSON `null`).
+pub const NONE_ID: u64 = u64::MAX;
+
+/// Schema tag written into flight-recorder dump files.
+pub const FLIGHT_SCHEMA: &str = "portarng-flight-v1";
+
+/// Default per-shard ring capacity (spans).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Typed span taxonomy. Spans are stitched into request chains by
+/// `request_id` (assigned at ingress by the in-flight ledger) and
+/// `flush_id` (per-shard monotone flush counter): a request's causal
+/// chain is `ingress.admit ≤ batcher.stage ≤ flush.launch ≤ cmd.d2h ≤
+/// reply.send`, where the request joins its flush through
+/// `reply.send.flush_id` and the flush joins the S14 command DAG
+/// through the `cmd.*` spans' command ids and lease generations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Request admitted by `ServicePool::generate`: ledger registration
+    /// through shard send. `aux` = n, `aux2` = 1 if overflow lane.
+    IngressAdmit,
+    /// Worker staged the request into its batcher. `aux` = n.
+    BatcherStage,
+    /// One flush: the single DAG submission covering the staged batch.
+    /// `aux` = launch_n (padded), `aux2` = member count.
+    FlushLaunch,
+    /// A drained `Generate` command record (virtual-clock timestamps).
+    /// `aux` = lease generation ([`NONE_ID`] if unleased), `aux2` =
+    /// command id — the join key against the hazard analyzer's DAG.
+    CmdGenerate,
+    /// A drained `Transform` command record (same keys as generate).
+    CmdTransform,
+    /// A drained `TransferD2H` command record (same keys as generate).
+    CmdD2h,
+    /// Cross-flush pipelining: this flush's generate overlapped the
+    /// previous flush's tail. `aux` = overlap_ns on the virtual clock.
+    PipelineOverlap,
+    /// Supervisor re-dispatched a ledger entry after reaping a dead
+    /// worker or bouncing a transient fault. `aux` = redispatch count
+    /// for the request, `aux2` = 1 if the stream offset was re-leased
+    /// via retry (attempt bump) rather than respawn.
+    SupervisorRedispatch,
+    /// Reply sent to the requester. `aux` = attempt, `aux2` = 1 for an
+    /// error reply.
+    ReplySend,
+}
+
+impl SpanKind {
+    /// All kinds, canonical (pipeline) order.
+    pub const ALL: [SpanKind; 9] = [
+        SpanKind::IngressAdmit,
+        SpanKind::BatcherStage,
+        SpanKind::FlushLaunch,
+        SpanKind::CmdGenerate,
+        SpanKind::CmdTransform,
+        SpanKind::CmdD2h,
+        SpanKind::PipelineOverlap,
+        SpanKind::SupervisorRedispatch,
+        SpanKind::ReplySend,
+    ];
+
+    /// Stable dotted token, used by both sinks.
+    pub fn token(self) -> &'static str {
+        match self {
+            SpanKind::IngressAdmit => "ingress.admit",
+            SpanKind::BatcherStage => "batcher.stage",
+            SpanKind::FlushLaunch => "flush.launch",
+            SpanKind::CmdGenerate => "cmd.generate",
+            SpanKind::CmdTransform => "cmd.transform",
+            SpanKind::CmdD2h => "cmd.d2h",
+            SpanKind::PipelineOverlap => "pipeline.overlap",
+            SpanKind::SupervisorRedispatch => "supervisor.redispatch",
+            SpanKind::ReplySend => "reply.send",
+        }
+    }
+
+    /// Parse a token back (sink round-trips and tests).
+    pub fn parse(token: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.token() == token)
+    }
+
+    /// Command-record spans live on the virtual-clock queue timeline;
+    /// everything else is coordinator time ([`Clock`]).
+    pub fn is_command(self) -> bool {
+        matches!(
+            self,
+            SpanKind::CmdGenerate | SpanKind::CmdTransform | SpanKind::CmdD2h
+        )
+    }
+
+    fn rank(self) -> usize {
+        SpanKind::ALL.iter().position(|&k| k == self).unwrap()
+    }
+}
+
+/// One recorded span. `Copy` so the seqlock ring can snapshot it with a
+/// single volatile read; all fields are plain words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Span type (see [`SpanKind`] for per-kind `aux` meanings).
+    pub kind: SpanKind,
+    /// Shard (lane) the span belongs to.
+    pub shard: u32,
+    /// Request id from the in-flight ledger, or [`NONE_ID`].
+    pub request_id: u64,
+    /// Per-shard flush counter, or [`NONE_ID`].
+    pub flush_id: u64,
+    /// Start timestamp: [`Clock`] ns for coordinator spans, virtual-clock
+    /// ns for `cmd.*` spans.
+    pub start_ns: u64,
+    /// End timestamp (same timeline as `start_ns`; `== start_ns` for
+    /// instant spans).
+    pub end_ns: u64,
+    /// Kind-specific payload (n / lease generation / overlap / attempt).
+    pub aux: u64,
+    /// Kind-specific payload (command id / member count / flags).
+    pub aux2: u64,
+    /// Global admission-order sequence number assigned by the
+    /// [`Tracer`]: causally ordered within a request regardless of which
+    /// thread recorded the span.
+    pub seq: u64,
+}
+
+impl Default for Span {
+    fn default() -> Self {
+        // Filler for unwritten ring slots; never surfaced (readers skip
+        // slots whose sequence word is still zero).
+        Span {
+            kind: SpanKind::IngressAdmit,
+            shard: 0,
+            request_id: NONE_ID,
+            flush_id: NONE_ID,
+            start_ns: 0,
+            end_ns: 0,
+            aux: NONE_ID,
+            aux2: NONE_ID,
+            seq: NONE_ID,
+        }
+    }
+}
+
+impl Span {
+    /// An instant span (`end == start`).
+    pub fn event(kind: SpanKind, shard: u32, t_ns: u64) -> Span {
+        Span::range(kind, shard, t_ns, t_ns)
+    }
+
+    /// A duration span.
+    pub fn range(kind: SpanKind, shard: u32, start_ns: u64, end_ns: u64) -> Span {
+        Span {
+            kind,
+            shard,
+            request_id: NONE_ID,
+            flush_id: NONE_ID,
+            start_ns,
+            end_ns: end_ns.max(start_ns),
+            aux: NONE_ID,
+            aux2: NONE_ID,
+            seq: 0,
+        }
+    }
+
+    /// Attach the request id.
+    pub fn req(mut self, id: u64) -> Span {
+        self.request_id = id;
+        self
+    }
+
+    /// Attach the flush id.
+    pub fn flush(mut self, id: u64) -> Span {
+        self.flush_id = id;
+        self
+    }
+
+    /// Attach the kind-specific `aux` payload.
+    pub fn aux(mut self, v: u64) -> Span {
+        self.aux = v;
+        self
+    }
+
+    /// Attach the kind-specific `aux2` payload.
+    pub fn aux2(mut self, v: u64) -> Span {
+        self.aux2 = v;
+        self
+    }
+
+    /// JSON shape shared by the flight dump and tests. `NONE_ID` fields
+    /// serialise as `null` (u64::MAX is not representable in an f64).
+    pub fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        let id = |v: u64| {
+            if v == NONE_ID {
+                Value::Null
+            } else {
+                Value::Number(v as f64)
+            }
+        };
+        m.insert("kind".into(), Value::String(self.kind.token().into()));
+        m.insert("shard".into(), Value::Number(self.shard as f64));
+        m.insert("request_id".into(), id(self.request_id));
+        m.insert("flush_id".into(), id(self.flush_id));
+        m.insert("start_ns".into(), Value::Number(self.start_ns as f64));
+        m.insert("end_ns".into(), Value::Number(self.end_ns as f64));
+        m.insert("aux".into(), id(self.aux));
+        m.insert("aux2".into(), id(self.aux2));
+        m.insert("seq".into(), Value::Number(self.seq as f64));
+        Value::Object(m)
+    }
+
+    /// One-line human rendering (`lint-dag` prints this next to hazard
+    /// diagnostics so reports are self-localizing).
+    pub fn pretty(&self) -> String {
+        let opt = |v: u64| {
+            if v == NONE_ID {
+                "-".to_string()
+            } else {
+                v.to_string()
+            }
+        };
+        format!(
+            "span {:<14} shard={} req={} flush={} t=[{}..{}]ns aux={} aux2={}",
+            self.kind.token(),
+            self.shard,
+            opt(self.request_id),
+            opt(self.flush_id),
+            self.start_ns,
+            self.end_ns,
+            opt(self.aux),
+            opt(self.aux2),
+        )
+    }
+}
+
+/// Build the `cmd.*` span for a drained [`CommandRecord`]: virtual-clock
+/// timestamps, command id in `aux2`, lease generation (if any access is
+/// arena-leased) in `aux` — the join keys against the S14 hazard DAG.
+/// Returns `None` for command classes the trace does not track (setup,
+/// malloc, H2D).
+pub fn span_for_record(rec: &CommandRecord, shard: u32, flush_id: u64) -> Option<Span> {
+    let kind = match rec.class {
+        CommandClass::Generate => SpanKind::CmdGenerate,
+        CommandClass::Transform => SpanKind::CmdTransform,
+        CommandClass::TransferD2H => SpanKind::CmdD2h,
+        _ => return None,
+    };
+    let lease = rec
+        .accesses
+        .iter()
+        .find_map(|a| a.generation)
+        .unwrap_or(NONE_ID);
+    Some(
+        Span::range(kind, shard, rec.virt_start_ns, rec.virt_end_ns)
+            .flush(flush_id)
+            .aux(lease)
+            .aux2(rec.id),
+    )
+}
+
+/// Sort spans into the canonical sink order and renumber `seq`
+/// 0..n. Ring insertion order is racy (the admitting caller and the
+/// shard worker interleave), but the span *set* under a seeded plan and
+/// a [`VirtualClock`] is deterministic — so sinks emit this order and
+/// byte-compare across runs. Key: timestamps, then pipeline rank, then
+/// ids, so equal-time spans (a never-advanced virtual clock) still
+/// order deterministically.
+pub fn canonical_order(spans: &mut Vec<Span>) {
+    spans.sort_by_key(|s| {
+        (
+            s.start_ns,
+            s.end_ns,
+            s.kind.rank(),
+            s.shard,
+            s.request_id,
+            s.flush_id,
+            s.aux,
+            s.aux2,
+        )
+    });
+    for (i, s) in spans.iter_mut().enumerate() {
+        s.seq = i as u64;
+    }
+}
+
+/// Trace configuration carried on
+/// [`PoolConfig`](crate::coordinator::PoolConfig).
+#[derive(Clone)]
+pub struct TraceConfig {
+    /// Per-shard ring capacity in spans (overwrite-oldest beyond it).
+    pub capacity: usize,
+    /// Directory for flight-recorder dumps; `None` counts dumps in
+    /// telemetry without writing files.
+    pub flight_dir: Option<PathBuf>,
+    /// Timestamp source; `None` means monotonic [`WallClock`].
+    pub clock: Option<Arc<dyn Clock>>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            capacity: DEFAULT_RING_CAPACITY,
+            flight_dir: None,
+            clock: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for TraceConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceConfig")
+            .field("capacity", &self.capacity)
+            .field("flight_dir", &self.flight_dir)
+            .field(
+                "clock",
+                &if self.clock.is_some() { "custom" } else { "wall" },
+            )
+            .finish()
+    }
+}
+
+/// Count of live [`Tracer`]s: the static-atomic half of the disabled
+/// fast path. [`with`] returns immediately while this is zero.
+static LIVE_TRACERS: AtomicUsize = AtomicUsize::new(0);
+
+/// True while any pool has tracing configured.
+pub fn enabled() -> bool {
+    LIVE_TRACERS.load(Ordering::Relaxed) > 0
+}
+
+thread_local! {
+    /// The thread-local half of the disabled fast path (the
+    /// [`crate::fault::install`] idiom): worker threads install their
+    /// shard's writer at entry; record sites route through [`with`].
+    static WRITER: RefCell<Option<ShardWriter>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear) this thread's shard writer. Worker threads call
+/// this at entry, exactly like `fault::install`.
+pub fn install(writer: Option<ShardWriter>) {
+    WRITER.with(|w| *w.borrow_mut() = writer);
+}
+
+/// Run `f` against this thread's writer, if tracing is enabled and a
+/// writer is installed. Disabled cost: one relaxed static load.
+pub fn with<F: FnOnce(&ShardWriter)>(f: F) {
+    if !enabled() {
+        return;
+    }
+    WRITER.with(|w| {
+        if let Some(writer) = &*w.borrow() {
+            f(writer);
+        }
+    });
+}
+
+/// A shard worker's handle into the tracer: records into that shard's
+/// ring with the shard id pre-bound.
+#[derive(Clone)]
+pub struct ShardWriter {
+    tracer: Arc<Tracer>,
+    lane: u32,
+}
+
+impl ShardWriter {
+    /// Build a writer bound to `lane`.
+    pub fn new(tracer: Arc<Tracer>, lane: u32) -> ShardWriter {
+        ShardWriter { tracer, lane }
+    }
+
+    /// The bound lane.
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    /// Current coordinator time.
+    pub fn now_ns(&self) -> u64 {
+        self.tracer.now_ns()
+    }
+
+    /// Claim the next flush id for this lane.
+    pub fn next_flush_id(&self) -> u64 {
+        self.tracer.next_flush_id(self.lane as usize)
+    }
+
+    /// Record `span` into this lane's ring (the span's `shard` field is
+    /// forced to the bound lane).
+    pub fn record(&self, mut span: Span) {
+        span.shard = self.lane;
+        self.tracer.record(self.lane as usize, span);
+    }
+}
+
+/// The per-pool trace recorder: one [`TraceRing`] per worker lane plus
+/// one coordinator ring (ingress + supervisor spans), a global
+/// admission-order sequence counter, per-lane flush-id counters that
+/// survive worker respawns, and the flight-recorder sink.
+pub struct Tracer {
+    rings: Vec<Arc<TraceRing>>,
+    clock: Arc<dyn Clock>,
+    seq: AtomicU64,
+    flush_ids: Vec<AtomicU64>,
+    dump_seq: AtomicU64,
+    flight_dir: Option<PathBuf>,
+    flight_dumps: AtomicU64,
+}
+
+impl Tracer {
+    /// Build a tracer for a pool with `lanes` worker lanes (batched
+    /// shards + overflow lane). Ring `lanes` is the coordinator ring.
+    pub fn new(lanes: usize, cfg: &TraceConfig) -> Arc<Tracer> {
+        let capacity = cfg.capacity.max(2);
+        let rings = (0..=lanes)
+            .map(|_| Arc::new(TraceRing::new(capacity)))
+            .collect();
+        let flush_ids = (0..lanes).map(|_| AtomicU64::new(0)).collect();
+        let clock = cfg
+            .clock
+            .clone()
+            .unwrap_or_else(|| Arc::new(WallClock::new()) as Arc<dyn Clock>);
+        LIVE_TRACERS.fetch_add(1, Ordering::Relaxed);
+        Arc::new(Tracer {
+            rings,
+            clock,
+            seq: AtomicU64::new(0),
+            flush_ids,
+            dump_seq: AtomicU64::new(0),
+            flight_dir: cfg.flight_dir.clone(),
+            flight_dumps: AtomicU64::new(0),
+        })
+    }
+
+    /// Worker lanes (excluding the coordinator ring).
+    pub fn lanes(&self) -> usize {
+        self.rings.len() - 1
+    }
+
+    /// Current coordinator time from the configured [`Clock`].
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    /// Claim the next flush id for `lane` (monotone across respawns —
+    /// the counter lives here, not in the worker).
+    pub fn next_flush_id(&self, lane: usize) -> u64 {
+        self.flush_ids[lane].fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record into lane `ring_idx`'s ring, assigning the global
+    /// admission-order `seq`.
+    pub fn record(&self, ring_idx: usize, mut span: Span) {
+        span.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.rings[ring_idx].push(span);
+    }
+
+    /// Record a coordinator-side span (ingress admit, supervisor
+    /// redispatch) into the coordinator ring; `span.shard` still names
+    /// the worker lane the event concerns.
+    pub fn record_coord(&self, span: Span) {
+        let idx = self.rings.len() - 1;
+        self.record(idx, span);
+    }
+
+    /// Snapshot every ring, merged in global `seq` order (raw recording
+    /// order; sinks re-sort via [`canonical_order`]).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut all: Vec<Span> = self
+            .rings
+            .iter()
+            .flat_map(|r| r.snapshot())
+            .collect();
+        all.sort_by_key(|s| s.seq);
+        all
+    }
+
+    /// Snapshot one lane's ring, `seq`-ordered.
+    pub fn lane_snapshot(&self, lane: usize) -> Vec<Span> {
+        let mut v = self.rings[lane].snapshot();
+        v.sort_by_key(|s| s.seq);
+        v
+    }
+
+    /// Spans recorded so far (including any since overwritten).
+    pub fn spans_recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to ring overwrite.
+    pub fn spans_dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Flight dumps taken.
+    pub fn flight_dumps(&self) -> u64 {
+        self.flight_dumps.load(Ordering::Relaxed)
+    }
+
+    /// Flight-record `lane`: drain its ring into a canonical-order dump.
+    /// Called by the supervisor when it reaps a dead worker. Returns the
+    /// dump file path when a flight directory is configured (the dump is
+    /// always counted, file or not). Dump contents are deterministic
+    /// under a [`VirtualClock`] and a seeded plan: spans are emitted in
+    /// [`canonical_order`] and the file carries no wall-clock state.
+    pub fn flight_dump(&self, lane: usize) -> Option<PathBuf> {
+        let n = self.dump_seq.fetch_add(1, Ordering::Relaxed);
+        self.flight_dumps.fetch_add(1, Ordering::Relaxed);
+        let mut spans = self.rings[lane].snapshot();
+        canonical_order(&mut spans);
+        let dir = self.flight_dir.as_ref()?;
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Value::String(FLIGHT_SCHEMA.into()));
+        m.insert("shard".into(), Value::Number(lane as f64));
+        m.insert("dump".into(), Value::Number(n as f64));
+        m.insert(
+            "dumped_at_ns".into(),
+            Value::Number(self.now_ns() as f64),
+        );
+        m.insert(
+            "spans".into(),
+            Value::Array(spans.iter().map(Span::to_value).collect()),
+        );
+        let path = dir.join(format!("flight-shard{lane}-{n}.json"));
+        let _ = std::fs::create_dir_all(dir);
+        std::fs::write(&path, Value::Object(m).to_json()).ok()?;
+        Some(path)
+    }
+}
+
+impl Drop for Tracer {
+    fn drop(&mut self) {
+        LIVE_TRACERS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Parse a flight dump back into spans (tests and tooling).
+pub fn parse_flight_dump(text: &str) -> crate::Result<(usize, Vec<Span>)> {
+    let v = Value::parse(text)?;
+    let bad = |m: &str| crate::Error::Json(format!("flight dump: {m}"));
+    match v.get("schema").and_then(Value::as_str) {
+        Some(FLIGHT_SCHEMA) => {}
+        other => return Err(bad(&format!("schema {other:?}"))),
+    }
+    let shard = v
+        .get("shard")
+        .and_then(Value::as_usize)
+        .ok_or_else(|| bad("missing shard"))?;
+    let spans = v
+        .get("spans")
+        .and_then(Value::as_array)
+        .ok_or_else(|| bad("missing spans"))?
+        .iter()
+        .map(|s| span_from_value(s).ok_or_else(|| bad("bad span")))
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok((shard, spans))
+}
+
+fn span_from_value(v: &Value) -> Option<Span> {
+    let num = |key: &str| v.get(key).and_then(Value::as_f64).map(|f| f as u64);
+    let id = |key: &str| match v.get(key) {
+        Some(Value::Null) | None => Some(NONE_ID),
+        Some(x) => x.as_f64().map(|f| f as u64),
+    };
+    Some(Span {
+        kind: SpanKind::parse(v.get("kind")?.as_str()?)?,
+        shard: num("shard")? as u32,
+        request_id: id("request_id")?,
+        flush_id: id("flush_id")?,
+        start_ns: num("start_ns")?,
+        end_ns: num("end_ns")?,
+        aux: id("aux")?,
+        aux2: id("aux2")?,
+        seq: num("seq")?,
+    })
+}
+
+/// Read every flight dump in `dir` (sorted by file name).
+pub fn read_flight_dumps(dir: &Path) -> Vec<(PathBuf, usize, Vec<Span>)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("flight-") && n.ends_with(".json"))
+        })
+        .collect();
+    paths.sort();
+    for p in paths {
+        if let Ok(text) = std::fs::read_to_string(&p) {
+            if let Ok((shard, spans)) = parse_flight_dump(&text) {
+                out.push((p, shard, spans));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sycl::Access;
+
+    #[test]
+    fn span_kind_tokens_round_trip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::parse(k.token()), Some(k));
+        }
+        assert_eq!(SpanKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn span_json_round_trips_including_none_ids() {
+        let s = Span::range(SpanKind::FlushLaunch, 3, 10, 25)
+            .flush(7)
+            .aux(4096)
+            .aux2(2);
+        let v = s.to_value();
+        assert_eq!(v.get("request_id"), Some(&Value::Null));
+        let mut back = span_from_value(&v).unwrap();
+        back.seq = s.seq;
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn span_for_record_extracts_lease_generation() {
+        let rec = CommandRecord {
+            id: 42,
+            name: "generate".into(),
+            class: CommandClass::Generate,
+            dep_ids: vec![],
+            virt_start_ns: 100,
+            virt_end_ns: 300,
+            wall_ns: 0,
+            tpb: 0,
+            occupancy: 0.0,
+            accesses: vec![Access::usm_leased(
+                9,
+                crate::sycl::AccessMode::Write,
+                Some(5),
+            )],
+        };
+        let s = span_for_record(&rec, 2, 11).unwrap();
+        assert_eq!(s.kind, SpanKind::CmdGenerate);
+        assert_eq!((s.start_ns, s.end_ns), (100, 300));
+        assert_eq!(s.aux, 5);
+        assert_eq!(s.aux2, 42);
+        assert_eq!(s.flush_id, 11);
+        // Setup-class records do not produce spans.
+        let setup = CommandRecord {
+            class: CommandClass::Setup,
+            ..rec
+        };
+        assert!(span_for_record(&setup, 2, 11).is_none());
+    }
+
+    #[test]
+    fn canonical_order_is_deterministic_under_equal_timestamps() {
+        // All-zero timestamps (a never-advanced virtual clock): order
+        // must still be fully determined by kind/ids.
+        let a = Span::event(SpanKind::ReplySend, 0, 0).req(1);
+        let b = Span::event(SpanKind::IngressAdmit, 0, 0).req(1);
+        let c = Span::event(SpanKind::IngressAdmit, 0, 0).req(0);
+        let mut one = vec![a, b, c];
+        let mut two = vec![c, a, b];
+        canonical_order(&mut one);
+        canonical_order(&mut two);
+        assert_eq!(one, two);
+        assert_eq!(one[0].request_id, 0);
+        assert_eq!(one[0].seq, 0);
+        assert_eq!(one[2].kind, SpanKind::ReplySend);
+    }
+
+    #[test]
+    fn tracer_counts_and_flight_dump_shape() {
+        let cfg = TraceConfig {
+            capacity: 8,
+            flight_dir: None,
+            clock: Some(Arc::new(VirtualClock::new()) as Arc<dyn Clock>),
+        };
+        let t = Tracer::new(2, &cfg);
+        assert!(enabled());
+        assert_eq!(t.lanes(), 2);
+        t.record(0, Span::event(SpanKind::BatcherStage, 0, 0).req(1));
+        t.record_coord(Span::event(SpanKind::IngressAdmit, 0, 0).req(1));
+        assert_eq!(t.spans_recorded(), 2);
+        assert_eq!(t.snapshot().len(), 2);
+        assert_eq!(t.lane_snapshot(0).len(), 1);
+        assert_eq!(t.next_flush_id(1), 0);
+        assert_eq!(t.next_flush_id(1), 1);
+        // No flight dir: counted, no file.
+        assert!(t.flight_dump(0).is_none());
+        assert_eq!(t.flight_dumps(), 1);
+    }
+
+    #[test]
+    fn live_tracer_gate_closes_on_drop() {
+        let before = enabled();
+        {
+            let _t = Tracer::new(1, &TraceConfig::default());
+            assert!(enabled());
+        }
+        // Other tests may hold tracers concurrently; only assert the
+        // gate closes when no tracer existed before.
+        if !before {
+            assert!(!enabled());
+        }
+    }
+
+    #[test]
+    fn thread_local_writer_routes_to_lane_ring() {
+        let t = Tracer::new(1, &TraceConfig::default());
+        install(Some(ShardWriter::new(t.clone(), 0)));
+        with(|w| {
+            let now = w.now_ns();
+            w.record(Span::event(SpanKind::ReplySend, 99, now).req(7));
+        });
+        install(None);
+        let spans = t.lane_snapshot(0);
+        assert_eq!(spans.len(), 1);
+        // The writer forces the shard field to its bound lane.
+        assert_eq!(spans[0].shard, 0);
+        assert_eq!(spans[0].request_id, 7);
+        // After uninstall, record sites are inert.
+        with(|_| panic!("writer should be uninstalled"));
+    }
+}

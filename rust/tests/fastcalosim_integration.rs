@@ -176,7 +176,7 @@ fn pooled_telemetry_v6_round_trips_with_event_splits() {
     assert!(fcs.transform_ns > 0, "transform split empty");
     assert!(fcs.d2h_ns > 0, "d2h split empty");
     let json = run.telemetry.to_json().to_json();
-    assert!(json.contains("portarng-telemetry-v6"));
+    assert!(json.contains("portarng-telemetry-v7"));
     let back = portarng::telemetry::TelemetrySnapshot::from_json(
         &portarng::jsonlite::Value::parse(&json).unwrap(),
     )
